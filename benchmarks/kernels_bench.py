@@ -1,0 +1,74 @@
+"""Kernel micro-benchmarks: wall time of the public kernel API vs the
+pure-jnp references (CPU: Pallas interpret mode — correctness-bound, the
+numbers contextualize interpret overhead; TPU runs use the same harness).
+
+Also reports the GTA analytic prediction (cycles at 1 GHz) for the same
+p-GEMM so the simulator and the kernel path stay connected.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pgemm import PGEMM
+from repro.core.precision import BP16, INT16, INT32
+from repro.core.scheduler import GTAConfig, explore
+from repro.core.dataflow import Dataflow
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters: int = 3) -> float:
+    fn(*args)  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def bench() -> List[Dict]:
+    rng = np.random.default_rng(0)
+    rows = []
+
+    # limb GEMM (multi-precision exact int matmul)
+    for dtype, bits, prec in ((np.int16, 16, INT16), (np.int32, 32, INT32)):
+        M, K, N = 128, 256, 128
+        a = jnp.asarray(rng.integers(-1000, 1000, (M, K)), dtype.__name__)
+        b = jnp.asarray(rng.integers(-1000, 1000, (K, N)), dtype.__name__)
+        t_kernel = _time(lambda a=a, b=b: ops.limb_matmul(a, b,
+                                                          in_bits=bits)[1],
+                         iters=2)
+        t_ref = _time(lambda a=a, b=b: jnp.dot(a.astype(jnp.float64
+                      if False else jnp.float32),
+                      b.astype(jnp.float32)), iters=2)
+        gta = explore(PGEMM("bench", M=M, N=N, K=K, precision=prec),
+                      GTAConfig(lanes=4))
+        rows.append({"name": f"limb_gemm_{dtype.__name__}",
+                     "us_per_call": round(t_kernel, 1),
+                     "derived": f"ref_f32_us={t_ref:.1f};"
+                                f"gta_cycles={gta.cycles:.0f}"})
+
+    # mpgemm dataflows
+    a = jnp.asarray(rng.standard_normal((256, 256)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((256, 256)), jnp.float32)
+    for df in (Dataflow.OS, Dataflow.WS, Dataflow.IS):
+        t = _time(lambda df=df: ops.matmul(a, b, dataflow=df), iters=2)
+        rows.append({"name": f"mpgemm_{df.value.lower()}",
+                     "us_per_call": round(t, 1),
+                     "derived": "interpret=True"})
+    t_ref = _time(lambda: ref.matmul_ref(a, b), iters=3)
+    rows.append({"name": "mpgemm_ref_jnp", "us_per_call": round(t_ref, 1),
+                 "derived": "oracle"})
+
+    # quant matmul
+    w = jnp.asarray(rng.standard_normal((256, 256)), jnp.float32)
+    wq, sc = ops.quantize_weights(w)
+    t = _time(lambda: ops.quant_matmul(a, wq, sc), iters=2)
+    t_ref = _time(lambda: ref.quant_matmul_ref(a, wq, sc), iters=3)
+    rows.append({"name": "quant_matmul_int8", "us_per_call": round(t, 1),
+                 "derived": f"ref_us={t_ref:.1f}"})
+    return rows

@@ -1,0 +1,67 @@
+"""§Roofline table generator: reads experiments/dryrun/*.json and renders
+the per-(arch x shape x mesh) roofline terms + bottleneck + useful-flops
+fraction.  Also writes experiments/roofline.md (the EXPERIMENTS.md §Roofline
+source of truth)."""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+OUT_MD = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                      "roofline.md")
+
+
+def load_cells() -> List[Dict]:
+    cells = []
+    if not os.path.isdir(DRYRUN_DIR):
+        return cells
+    for fn in sorted(os.listdir(DRYRUN_DIR)):
+        if fn.endswith(".json"):
+            with open(os.path.join(DRYRUN_DIR, fn)) as f:
+                cells.append(json.load(f))
+    return cells
+
+
+def _fmt_ms(s: float) -> str:
+    return f"{s * 1e3:.1f}"
+
+
+def report(write_md: bool = True) -> int:
+    cells = load_cells()
+    header = (f"{'arch':24s} {'shape':12s} {'mesh':6s} {'comp_ms':>8s} "
+              f"{'mem_ms':>8s} {'coll_ms':>8s} {'bound':>10s} "
+              f"{'useful':>6s} {'temp_GB':>8s}")
+    lines = [header, "-" * len(header)]
+    md = ["| arch | shape | mesh | compute ms | memory ms | collective ms |"
+          " bottleneck | useful-flops | temp GB/dev | status |",
+          "|---|---|---|---|---|---|---|---|---|---|"]
+    n_ok = 0
+    for c in cells:
+        if c.get("status") == "skip":
+            md.append(f"| {c['arch']} | {c['shape']} | {c['mesh']} | — | — |"
+                      f" — | — | — | — | skip: {c['reason'][:40]} |")
+            continue
+        r = c["roofline"]
+        temp = (c["memory"]["temp_bytes"] or 0) / 1e9
+        lines.append(
+            f"{c['arch']:24s} {c['shape']:12s} {c['mesh']:6s} "
+            f"{_fmt_ms(r['compute_s']):>8s} {_fmt_ms(r['memory_s']):>8s} "
+            f"{_fmt_ms(r['collective_s']):>8s} "
+            f"{r['bottleneck'].replace('_s',''):>10s} "
+            f"{c['useful_flops_fraction']:6.3f} {temp:8.2f}")
+        md.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} | "
+            f"{_fmt_ms(r['compute_s'])} | {_fmt_ms(r['memory_s'])} | "
+            f"{_fmt_ms(r['collective_s'])} | "
+            f"{r['bottleneck'].replace('_s','')} | "
+            f"{c['useful_flops_fraction']:.3f} | {temp:.2f} | ok |")
+        n_ok += 1
+    print("\n".join(lines))
+    if write_md:
+        with open(OUT_MD, "w") as f:
+            f.write("\n".join(md) + "\n")
+    return n_ok

@@ -1,0 +1,133 @@
+"""Benchmark driver — one function per paper table/figure + kernel micro-
+benches + the roofline report.  Prints ``name,us_per_call,derived`` CSV
+lines (harness contract) plus detailed tables, and writes artifacts under
+experiments/bench/.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run table3 fig7
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+from typing import Callable, Dict, List
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "bench")
+
+
+def _emit(name: str, us: float, derived: str):
+    print(f"{name},{us:.1f},{derived}")
+
+
+def _save(name: str, rows):
+    os.makedirs(ART_DIR, exist_ok=True)
+    with open(os.path.join(ART_DIR, f"{name}.json"), "w") as f:
+        json.dump(rows, f, indent=2, default=str)
+
+
+def bench_table3():
+    from benchmarks.paper_tables import table3_simd
+    t0 = time.perf_counter()
+    rows, worst_err = table3_simd()
+    us = (time.perf_counter() - t0) * 1e6
+    _save("table3_simd", rows)
+    for r in rows:
+        print(f"  {r['dtype']:5s} model {r['gain_model']:6.2f}x "
+              f"paper {r['gain_paper']:5.2f}x")
+    _emit("table3_simd", us, f"worst_rel_err={worst_err:.4f}")
+
+
+def _bench_fig(name: str, fn: Callable):
+    t0 = time.perf_counter()
+    rows, derived = fn()
+    us = (time.perf_counter() - t0) * 1e6
+    _save(name, {"rows": rows, "derived": derived})
+    for r in rows:
+        print(f"  {r['workload']:5s} speedup {r['speedup']:8.2f}x "
+              f"mem {r['mem_eff']:7.2f}x")
+    _emit(name, us,
+          f"speedup_mean={derived['speedup_mean']}x_vs_paper_"
+          f"{derived['paper_speedup']}x;mem_geomean={derived['mem_geomean']}"
+          f"x_vs_paper_{derived['paper_mem']}x")
+
+
+def bench_fig7():
+    from benchmarks.paper_tables import fig7_vpu
+    _bench_fig("fig7_vpu", fig7_vpu)
+
+
+def bench_fig8():
+    from benchmarks.paper_tables import fig8_gpgpu
+    _bench_fig("fig8_gpgpu", fig8_gpgpu)
+
+
+def bench_fig10():
+    from benchmarks.paper_tables import fig10_cgra
+    _bench_fig("fig10_cgra", fig10_cgra)
+
+
+def bench_fig9():
+    from benchmarks.paper_tables import fig9_schedule
+    t0 = time.perf_counter()
+    rows, n = fig9_schedule()
+    us = (time.perf_counter() - t0) * 1e6
+    _save("fig9_schedule", rows)
+    chosen = [r for r in rows if r["chosen"]]
+    for c in chosen:
+        print(f"  chosen[{c['precision']}]: {c['dataflow']} {c['array']} "
+              f"fold={c['k_fold']} cyc={c['cycles_norm']} "
+              f"mem={c['traffic_norm']}")
+    _emit("fig9_schedule", us, f"points={n}")
+
+
+def bench_fig6():
+    from benchmarks.paper_tables import fig6_energy
+    t0 = time.perf_counter()
+    rows, spread = fig6_energy()
+    us = (time.perf_counter() - t0) * 1e6
+    _save("fig6_energy", rows)
+    _emit("fig6_energy", us, f"max_min_energy_spread={spread:.2f}x")
+
+
+def bench_kernels():
+    from benchmarks.kernels_bench import bench
+    rows = bench()
+    _save("kernels", rows)
+    for r in rows:
+        _emit(r["name"], r["us_per_call"], r["derived"])
+
+
+def bench_roofline():
+    """Summarize experiments/dryrun/*.json into the §Roofline table."""
+    from benchmarks.roofline_report import report
+    t0 = time.perf_counter()
+    n = report()
+    us = (time.perf_counter() - t0) * 1e6
+    _emit("roofline_report", us, f"cells={n}")
+
+
+ALL: Dict[str, Callable] = {
+    "table3": bench_table3,
+    "fig7": bench_fig7,
+    "fig8": bench_fig8,
+    "fig10": bench_fig10,
+    "fig9": bench_fig9,
+    "fig6": bench_fig6,
+    "kernels": bench_kernels,
+    "roofline": bench_roofline,
+}
+
+
+def main() -> None:
+    which = sys.argv[1:] or list(ALL)
+    print("name,us_per_call,derived")
+    for name in which:
+        ALL[name]()
+
+
+if __name__ == "__main__":
+    main()

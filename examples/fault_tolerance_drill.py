@@ -1,0 +1,41 @@
+"""Fault-tolerance drill: inject host failures mid-training and verify the
+job restarts from the last committed checkpoint and converges to the same
+final state as an uninterrupted run (restart-exactness).
+
+    PYTHONPATH=src python examples/fault_tolerance_drill.py
+"""
+
+import shutil
+import sys
+import tempfile
+
+sys.path.insert(0, "src")
+
+from repro import configs as CONFIGS
+from repro.launch.train import TrainConfig, train
+from repro.runtime.faults import FailureInjector
+
+
+def main():
+    cfg = CONFIGS.get("qwen2-0.5b").scaled_down()
+    base = dict(steps=30, global_batch=4, seq_len=64, ckpt_every=10,
+                log_every=10)
+
+    d1 = tempfile.mkdtemp()
+    clean = train(cfg, TrainConfig(ckpt_dir=d1, **base))
+
+    d2 = tempfile.mkdtemp()
+    faulty = train(cfg, TrainConfig(ckpt_dir=d2, **base),
+                   injector=FailureInjector(fail_at_steps=(7, 23)))
+
+    print(f"[drill] clean loss {clean['loss']:.6f}  "
+          f"faulty loss {faulty['loss']:.6f}")
+    assert abs(clean["loss"] - faulty["loss"]) < 1e-4, \
+        "restart-exactness violated"
+    print("[drill] restart-exactness holds across 2 injected failures")
+    shutil.rmtree(d1)
+    shutil.rmtree(d2)
+
+
+if __name__ == "__main__":
+    main()

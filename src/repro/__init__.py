@@ -1,0 +1,8 @@
+"""repro: GTA (General Tensor Accelerator) as a production JAX framework.
+
+The paper's contribution (multi-precision-as-GEMM, p-GEMM classification,
+dataflow/precision/array-resize scheduling) lives in ``repro.core`` and
+``repro.kernels``; the surrounding training/serving framework exercises it
+across 10 architectures on a multi-pod TPU mesh.
+"""
+__version__ = "1.0.0"

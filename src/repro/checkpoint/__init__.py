@@ -1,0 +1,2 @@
+"""Sharded async checkpointing with elastic re-shard."""
+from repro.checkpoint.manager import CheckpointManager  # noqa

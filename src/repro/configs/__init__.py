@@ -1,0 +1,52 @@
+"""Architecture registry: ``get(name)`` -> ModelConfig; ``--arch`` ids.
+
+One module per assigned architecture (exact public-literature configs) plus
+the paper's own evaluation config (``gta_paper``).  Input-shape sets live in
+``repro.configs.shapes``.
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+ARCH_IDS: List[str] = [
+    "qwen1_5_4b",
+    "gemma2_9b",
+    "qwen2_0_5b",
+    "chatglm3_6b",
+    "llava_next_mistral_7b",
+    "zamba2_7b",
+    "llama4_scout_17b_a16e",
+    "deepseek_v2_236b",
+    "hubert_xlarge",
+    "mamba2_2_7b",
+]
+
+#: accepted aliases (the assignment's dashed ids)
+ALIASES: Dict[str, str] = {
+    "qwen1.5-4b": "qwen1_5_4b",
+    "gemma2-9b": "gemma2_9b",
+    "qwen2-0.5b": "qwen2_0_5b",
+    "chatglm3-6b": "chatglm3_6b",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "zamba2-7b": "zamba2_7b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "hubert-xlarge": "hubert_xlarge",
+    "mamba2-2.7b": "mamba2_2_7b",
+}
+
+
+def get(name: str) -> ModelConfig:
+    key = ALIASES.get(name, name.replace("-", "_").replace(".", "_"))
+    if key not in ARCH_IDS:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{key}")
+    return mod.CONFIG.validate()
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get(a) for a in ARCH_IDS}

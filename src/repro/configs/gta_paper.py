@@ -1,0 +1,5 @@
+"""The GTA paper's own evaluation setting (Table 1): the 4-lane GTA instance
+and the area-parity baselines — used by benchmarks/, not a neural net."""
+from repro.core.scheduler import GTAConfig
+
+GTA_4LANE = GTAConfig(lanes=4)

@@ -1,0 +1,115 @@
+"""Assigned input-shape sets, cell applicability, and ShapeDtypeStruct
+stand-ins for the dry-run (no allocation).
+
+  train_4k     seq 4,096   global_batch 256   -> train_step
+  prefill_32k  seq 32,768  global_batch 32    -> serve prefill
+  decode_32k   ctx 32,768  global_batch 128   -> serve_step (1 new token)
+  long_500k    ctx 524,288 global_batch 1     -> serve_step (1 new token)
+
+Skips (recorded in DESIGN.md §Arch-applicability):
+  * decode shapes for encoder-only archs (hubert) — no autoregressive step;
+  * long_500k for pure full-attention archs — needs sub-quadratic context
+    state; runs for SSM/hybrid (mamba2, zamba2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str                  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+SHAPE_IDS = tuple(SHAPES)
+
+
+def skip_reason(cfg: ModelConfig, shape: ShapeSpec) -> Optional[str]:
+    """None if the (arch, shape) cell runs; otherwise why it is skipped."""
+    if cfg.is_encoder_only and shape.mode in ("decode",):
+        return "encoder-only: no autoregressive decode step"
+    if cfg.is_encoder_only and shape.name == "prefill_32k":
+        # encoders do have a full forward at 32k — keep it (it exercises the
+        # non-causal blockwise attention); only decode shapes are undefined.
+        return None
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return ("pure full-attention arch: 524k dense-KV decode is gated by "
+                "global attention layers (see DESIGN.md §4)")
+    return None
+
+
+def live_cells() -> List[Tuple[str, str]]:
+    """All (arch, shape) pairs that run (31 of the 40)."""
+    from repro import configs as C
+    out = []
+    for a in C.ARCH_IDS:
+        cfg = C.get(a)
+        for s in SHAPE_IDS:
+            if skip_reason(cfg, SHAPES[s]) is None:
+                out.append((a, s))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; weak-type-correct, shardable)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_spec(cfg: ModelConfig, shape: ShapeSpec) -> Dict:
+    """The batch pytree for train_step / loss_fn."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.frontend == "frames":
+        return {"frames": _sds((B, S, cfg.d_model), jnp.bfloat16),
+                "labels": _sds((B, S), jnp.int32)}
+    if cfg.frontend == "patches":
+        P = cfg.frontend_prefix_len
+        return {"tokens": _sds((B, S - P), jnp.int32),
+                "patches": _sds((B, P, cfg.d_model), jnp.bfloat16),
+                "labels": _sds((B, S - P), jnp.int32)}
+    return {"tokens": _sds((B, S), jnp.int32),
+            "labels": _sds((B, S), jnp.int32)}
+
+
+def prefill_batch_spec(cfg: ModelConfig, shape: ShapeSpec) -> Dict:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.frontend == "frames":
+        return {"frames": _sds((B, S, cfg.d_model), jnp.bfloat16)}
+    if cfg.frontend == "patches":
+        P = cfg.frontend_prefix_len
+        return {"tokens": _sds((B, S - P), jnp.int32),
+                "patches": _sds((B, P, cfg.d_model), jnp.bfloat16)}
+    return {"tokens": _sds((B, S), jnp.int32)}
+
+
+def decode_token_spec(cfg: ModelConfig, shape: ShapeSpec):
+    return _sds((shape.global_batch, 1), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> Dict:
+    """Everything the corresponding step function takes (minus params/cache)."""
+    shape = SHAPES[shape_name]
+    if shape.mode == "train":
+        return {"batch": train_batch_spec(cfg, shape)}
+    if shape.mode == "prefill":
+        return {"batch": prefill_batch_spec(cfg, shape)}
+    return {"tokens": decode_token_spec(cfg, shape)}

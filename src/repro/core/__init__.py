@@ -1,0 +1,16 @@
+"""GTA core: the paper's contribution as a composable library.
+
+  precision  — limb algebra (precision multiplication ≡ matrix multiplication)
+  pgemm      — p-GEMM operator IR + intensity/parallelism classification
+  dataflow   — WS/IS/OS/SIMD cost models + Fig.-5 pattern matching
+  scheduler  — scheduling-space exploration + Σ-squares priority (§5)
+  simulator  — GTA vs VPU/GPGPU/CGRA analytical evaluation (§6/§7)
+  workloads  — the nine Table-2 workloads as operator lists
+  tiling     — GTA scheduling mapped to TPU Pallas block shapes
+"""
+
+from repro.core import (dataflow, pgemm, precision, scheduler, simulator,
+                        tiling, workloads)
+
+__all__ = ["dataflow", "pgemm", "precision", "scheduler", "simulator",
+           "tiling", "workloads"]

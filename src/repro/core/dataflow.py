@@ -1,0 +1,275 @@
+"""Systolic dataflow cost models + dataflow pattern matching (paper §3.1/§5).
+
+Analytical (scale-sim-derived) cycle and memory-traffic models for executing
+one p-GEMM on a systolic array of 8-bit PEs under the three systolic
+dataflows (WS / IS / OS) and the SIMD fallback, including the paper's
+multi-precision mapping rules:
+
+  * WS / IS: the stationary operand's limbs occupy ``l`` consecutive PEs
+    along the row direction -> the array's effective column count shrinks to
+    ``C / l``; the streaming operand enters limb-serially -> the temporal
+    dimension stretches by ``l``.  (Space x l, time x l, work l².)
+  * OS: both operands are limb-decomposed spatially -> the mapped output tile
+    shrinks to ``(R/l) x (C/l)``; K stays temporal.  (Space x l², work l².)
+  * SIMD: each multiply consumes ``l²`` PEs for one cycle; no reuse.
+
+Dataflow pattern matching (paper Fig. 5): when the workload tile does not
+match the array, the residue falls into Uncover-1/2/3 or Cover-1/2/3.  The
+remedies the paper describes are implemented as schedule *variants*:
+
+  * ``k_fold`` (Uncover cases): segment the temporal K dimension into ``f``
+    chunks mapped side-by-side on the idle array — cycles shrink, but each
+    fold produces its own partial sums that must round-trip memory, so
+    traffic grows.  This is the paper's explicit utilization-vs-reuse
+    conflict.
+  * ``direction`` (Cover-1): tile the load Laterally (N-major) or Vertically
+    (M-major) — the choice decides which operand is re-fetched per tile ring
+    and how edge tiles are covered by early-bringing the next row/column.
+
+All sizes are in *elements* internally; traffic is reported in bytes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+from typing import Iterator, List, Optional
+
+from repro.core.pgemm import PGEMM
+from repro.core.precision import Precision
+
+
+class Dataflow(enum.Enum):
+    WS = "WS"      # weight stationary
+    IS = "IS"      # input stationary
+    OS = "OS"      # output stationary
+    SIMD = "SIMD"  # vector fallback (no systolic reuse)
+
+
+class Pattern(enum.Enum):
+    """Fig. 5 cases: how the mapped workload covers the array."""
+
+    UNCOVER_1 = "uncover1"  # short in both directions
+    UNCOVER_2 = "uncover2"  # exceeds rows only, total < array
+    UNCOVER_3 = "uncover3"  # exceeds cols only, total < array
+    COVER_2 = "cover2"      # exceeds rows only, covers array
+    COVER_3 = "cover3"      # exceeds cols only, covers array
+    COVER_1 = "cover1"      # exceeds in both directions
+
+
+class Direction(enum.Enum):
+    LATERAL = "lateral"    # N-major tiling ring
+    VERTICAL = "vertical"  # M-major tiling ring
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrayShape:
+    """Physical PE array: ``rows x cols`` 8-bit PEs (lanes already merged)."""
+
+    rows: int
+    cols: int
+
+    @property
+    def pes(self) -> int:
+        return self.rows * self.cols
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """One fully-specified scheduling decision for a p-GEMM."""
+
+    dataflow: Dataflow
+    array: ArrayShape
+    pattern: Pattern
+    k_fold: int = 1
+    direction: Direction = Direction.LATERAL
+
+
+@dataclasses.dataclass(frozen=True)
+class CostReport:
+    """Cycle count + memory traffic of one schedule."""
+
+    schedule: Schedule
+    cycles: float
+    traffic_bytes: float
+    utilization: float  # time-average fraction of PEs doing useful limb-MACs
+
+    def as_tuple(self):
+        return (self.cycles, self.traffic_bytes)
+
+
+# ---------------------------------------------------------------------------
+# Spatial mapping per dataflow (multi-precision aware)
+# ---------------------------------------------------------------------------
+
+def spatial_dims(df: Dataflow, op: PGEMM, array: ArrayShape):
+    """Return ((dim_r, r_cap), (dim_c, c_cap), time_scale):
+    the workload dims mapped onto rows/cols, the per-pass capacity of each
+    after limb expansion, and the temporal stretch factor."""
+    l = op.precision.limbs
+    if df in (Dataflow.WS, Dataflow.IS):
+        # stationary K x N (WS) or M x K (IS) tile; limbs along cols.
+        if df is Dataflow.WS:
+            return (op.K, array.rows), (op.N, max(1, array.cols // l)), l
+        return (op.K, array.rows), (op.M, max(1, array.cols // l)), l
+    if df is Dataflow.OS:
+        return (op.M, max(1, array.rows // l)), (op.N, max(1, array.cols // l)), 1
+    raise ValueError(f"spatial_dims undefined for {df}")
+
+
+def match_pattern(df: Dataflow, op: PGEMM, array: ArrayShape) -> Pattern:
+    """Classify the workload-vs-array relation (Fig. 5)."""
+    (dim_r, r_cap), (dim_c, c_cap), _ = spatial_dims(df, op, array)
+    over_r, over_c = dim_r > r_cap, dim_c > c_cap
+    if over_r and over_c:
+        return Pattern.COVER_1
+    if not over_r and not over_c:
+        return Pattern.UNCOVER_1
+    if over_r:
+        # exceeds rows; does the folded total cover the array?
+        return Pattern.COVER_2 if dim_r * dim_c >= r_cap * c_cap else Pattern.UNCOVER_2
+    return Pattern.COVER_3 if dim_r * dim_c >= r_cap * c_cap else Pattern.UNCOVER_3
+
+
+# ---------------------------------------------------------------------------
+# Cost models
+# ---------------------------------------------------------------------------
+
+def _ceil(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def cost_ws_is(op: PGEMM, array: ArrayShape, *, input_stationary: bool,
+               k_fold: int = 1, direction: Direction = Direction.LATERAL,
+               ) -> CostReport:
+    """WS/IS cost.  WS holds K x N weight tiles (IS: K x M input tiles);
+    the partner operand streams limb-serially; partial sums spill per K-tile.
+
+    ``k_fold > 1`` maps ``f`` K-segments side-by-side along the idle column
+    direction (Uncover remedies): temporal passes shrink ~f, but per-band
+    column capacity for S shrinks by f (more streamer re-reads) and fold
+    bands spill separate partial sums — cycles vs traffic, the paper's
+    stated conflict.
+    """
+    df = Dataflow.IS if input_stationary else Dataflow.WS
+    l = op.precision.limbs
+    eb = op.precision.bytes
+    # dimensions: stationary tile is K x S (S = N for WS, M for IS);
+    # streamer has T rows (T = M for WS, N for IS).
+    S = op.M if input_stationary else op.N
+    T = op.N if input_stationary else op.M
+
+    # K-folding (Uncover remedy): f K-chunks occupy side-by-side *column
+    # bands*, shrinking the per-band column capacity available to S.  A band
+    # needs l physical columns, so at most cols//l bands exist.
+    f = max(1, min(k_fold, max(1, array.cols // l)))
+    c_cap = max(1, (array.cols // l) // f)
+    r_cap = array.rows                    # K occupies full rows per chunk
+
+    chunks = _ceil(op.K, r_cap)           # sequential K-chunks if unfolded
+    f = min(f, chunks)
+    passes_k = _ceil(chunks, f)
+    s_tiles = _ceil(S, c_cap)
+    n_passes = passes_k * s_tiles
+
+    # per-pass cycles: load stationary chunk (rows) + stream T elements
+    # limb-serially (T*l) + drain across all used column bands.
+    rows_used = min(op.K, r_cap)
+    cols_used = min(S, c_cap) * l * f
+    cycles_pass = rows_used + T * l + cols_used - 1
+    cycles = n_passes * cycles_pass * op.batch
+
+    # traffic (bytes):
+    stationary_bytes = op.K * S * eb              # every element loaded once
+    stream_bytes = T * op.K * s_tiles * eb        # streamer re-read per S-tile
+    # outputs: per-column accumulators integrate sequential K-chunks ON-CHIP
+    # (systolic accumulator SRAM), so HBM sees one write per output — except
+    # fold bands emit separate partials for the same outputs, which must be
+    # merged through memory: the paper's utilization-vs-reuse conflict.
+    out_bytes = T * S * eb * (2 * f - 1)
+    traffic = (stationary_bytes + stream_bytes + out_bytes) * op.batch
+
+    useful = op.macs * l * l  # limb-MACs
+    util = useful / max(1.0, cycles * array.pes)
+    pat = match_pattern(df, op, array)
+    return CostReport(Schedule(df, array, pat, f, direction), cycles, traffic,
+                      min(1.0, util))
+
+
+def cost_os(op: PGEMM, array: ArrayShape, *, k_fold: int = 1,
+            direction: Direction = Direction.LATERAL) -> CostReport:
+    """OS cost.  Output M x N tiles stay resident; A and B stream in.
+
+    ``k_fold`` here models the Uncover remedy of replicating the (small)
+    output tile across the idle array, each replica handling a K-segment,
+    followed by a spatial reduction — cycles shrink by ~f, traffic grows by
+    the extra partial-output movement.
+    """
+    l = op.precision.limbs
+    eb = op.precision.bytes
+    r_cap = max(1, array.rows // l)
+    c_cap = max(1, array.cols // l)
+
+    m_tiles = _ceil(op.M, r_cap)
+    n_tiles = _ceil(op.N, c_cap)
+
+    f = max(1, k_fold)
+    # replicas only help when the tile grid underfills the array
+    free_factor = max(1, (r_cap * c_cap) // max(1, min(op.M, r_cap) * min(op.N, c_cap)))
+    f = min(f, free_factor)
+
+    k_len = _ceil(op.K, f)
+    rows_used = min(op.M, r_cap) * l
+    cols_used = min(op.N, c_cap) * l
+    cycles_tile = k_len + rows_used + cols_used - 2  # stream K + fill/drain
+    n_tile_pairs = m_tiles * n_tiles
+    cycles = n_tile_pairs * cycles_tile * op.batch
+
+    # Tiling-ring direction decides which operand is held across the inner
+    # ring (read once) and which is re-fetched every inner tile (Fig. 5's
+    # Lateral vs Vertical choice for Cover-1):
+    if direction is Direction.LATERAL:   # N innermost: A held per M-ring
+        a_bytes = op.M * op.K * eb               # read once per M sweep
+        b_bytes = op.K * op.N * eb * m_tiles     # re-read per M-ring
+    else:                                # M innermost: B held per N-ring
+        a_bytes = op.M * op.K * eb * n_tiles     # re-read per N-ring
+        b_bytes = op.K * op.N * eb               # read once per N sweep
+    out_bytes = op.M * op.N * eb * (2 * f - 1)  # replicas spill partials
+    traffic = (a_bytes + b_bytes + out_bytes) * op.batch
+
+    useful = op.macs * l * l
+    util = useful / max(1.0, cycles * array.pes)
+    pat = match_pattern(Dataflow.OS, op, array)
+    return CostReport(Schedule(Dataflow.OS, array, pat, f, direction), cycles,
+                      traffic, min(1.0, util))
+
+
+def cost_simd(op: PGEMM, array: ArrayShape) -> CostReport:
+    """SIMD fallback: the array acts as a pool of ``PEs/l²`` multipliers
+    driven by the VPU's vector pipeline (paper §5: some p-GEMMs vectorize
+    better).  Vector execution has no in-datapath operand reuse — every MAC
+    fetches both operands (same accounting as the VPU baseline)."""
+    l = op.precision.limbs
+    eb = op.precision.bytes
+    mults_per_cycle = max(1, array.pes // (l * l))
+    cycles = _ceil(op.macs, mults_per_cycle)
+    traffic = (2 * op.macs + op.M * op.N * op.batch) * eb
+    util = (op.macs * l * l) / max(1.0, cycles * array.pes)
+    pat = match_pattern(Dataflow.OS, op, array)  # pattern is moot for SIMD
+    return CostReport(Schedule(Dataflow.SIMD, array, pat), cycles, traffic,
+                      min(1.0, util))
+
+
+def candidate_costs(op: PGEMM, array: ArrayShape,
+                    k_folds: Optional[List[int]] = None) -> Iterator[CostReport]:
+    """Enumerate the full (dataflow x k_fold x direction) space for one array
+    shape — the inner loop of the paper's scheduling exploration."""
+    if k_folds is None:
+        k_folds = [1, 2, 4, 8]
+    for f in k_folds:
+        for d in (Direction.LATERAL, Direction.VERTICAL):
+            yield cost_ws_is(op, array, input_stationary=False, k_fold=f, direction=d)
+            yield cost_ws_is(op, array, input_stationary=True, k_fold=f, direction=d)
+            yield cost_os(op, array, k_fold=f, direction=d)
+    yield cost_simd(op, array)

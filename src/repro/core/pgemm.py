@@ -1,0 +1,207 @@
+"""p-GEMM operator IR and classification (paper §3.2).
+
+The paper partitions tensor operators on a plane of *arithmetic intensity*
+(data-reuse opportunity) x *algorithmic parallelism* (extractable parallel
+work).  Operators with reuse are rewritten into GEMM form — "p-GEMM", GEMMs
+of arbitrary (possibly degenerate) size: matmul, matvec, inner product,
+im2col'd convolution, MTTKRP, TTMc.  Reuse-free operators compile to vector
+work for the VPU path.
+
+This module is both:
+  * the IR the paper-reproduction simulator executes (``PGEMM`` / ``VectorOp``
+    lists per workload), and
+  * the classifier the live framework uses to route ops to the MXU path vs
+    the elementwise path (``classify`` / ``ExecPath``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+from typing import List, Sequence, Tuple, Union
+
+from repro.core.precision import Precision
+
+
+class ExecPath(enum.Enum):
+    GEMM = "gemm"      # systolic / MXU path
+    VECTOR = "vector"  # VPU / elementwise path
+
+
+@dataclasses.dataclass(frozen=True)
+class PGEMM:
+    """A pseudo-GEMM: C[M,N] (+)= A[M,K] @ B[K,N], ``batch`` independent
+    instances, at a given computational precision.
+
+    M=1 gives a GEMV/dot; N=1 a matvec; M=N=1 an inner product — the paper's
+    point is that they are all the *same* operator at different sizes.
+    """
+
+    name: str
+    M: int
+    N: int
+    K: int
+    precision: Precision
+    batch: int = 1
+
+    # -- workload characterization ------------------------------------------
+    @property
+    def macs(self) -> int:
+        return self.batch * self.M * self.N * self.K
+
+    @property
+    def flops(self) -> int:
+        return 2 * self.macs
+
+    @property
+    def min_bytes(self) -> int:
+        """Compulsory traffic: each operand/result touched once."""
+        b = self.precision.bytes
+        return self.batch * b * (self.M * self.K + self.K * self.N + self.M * self.N)
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        """MACs per byte of compulsory traffic — the paper's reuse axis."""
+        return self.macs / self.min_bytes
+
+    @property
+    def parallelism(self) -> int:
+        """Independent MACs available per K-step — the paper's parallelism
+        axis (spatially mappable work)."""
+        return self.batch * self.M * self.N
+
+    def scaled(self, name: str | None = None, **dims) -> "PGEMM":
+        return dataclasses.replace(self, name=name or self.name, **dims)
+
+
+@dataclasses.dataclass(frozen=True)
+class VectorOp:
+    """A reuse-free vector operator: ``n_elems`` elementwise ops (``ops_per_elem``
+    primitive multiply/add-class operations each) at a precision."""
+
+    name: str
+    n_elems: int
+    precision: Precision
+    ops_per_elem: int = 1
+
+    @property
+    def flops(self) -> int:
+        return self.n_elems * self.ops_per_elem
+
+    @property
+    def min_bytes(self) -> int:
+        # two operand streams + one result stream
+        return 3 * self.n_elems * self.precision.bytes
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.flops / self.min_bytes
+
+    @property
+    def parallelism(self) -> int:
+        return self.n_elems
+
+
+Operator = Union[PGEMM, VectorOp]
+
+
+# ---------------------------------------------------------------------------
+# Classification (Fig. 2)
+# ---------------------------------------------------------------------------
+
+#: Reuse factor (MACs per element touched, precision-independent) below
+#: which an op is inner-product-like — no operand is used twice, so the
+#: systolic array cannot help (paper Fig. 2's zero-intensity band).
+GEMM_REUSE_THRESHOLD = 1.0
+#: ...unless enough independent outputs exist to reuse the shared operand
+#: spatially (GEMV: x is reused M times even though the aggregate reuse ~1).
+VECTOR_PARALLELISM_CAP = 8
+
+
+def classify(op: Operator) -> ExecPath:
+    """Route an operator to the GEMM (systolic/MXU) or vector (VPU) path."""
+    if isinstance(op, VectorOp):
+        return ExecPath.VECTOR
+    elements = (op.M * op.K + op.K * op.N + op.M * op.N) * op.batch
+    reuse = op.macs / max(1, elements)
+    if reuse < GEMM_REUSE_THRESHOLD and op.parallelism <= VECTOR_PARALLELISM_CAP:
+        return ExecPath.VECTOR
+    return ExecPath.GEMM
+
+
+# ---------------------------------------------------------------------------
+# Operator -> p-GEMM rewrites (the transformations §3.2 cites)
+# ---------------------------------------------------------------------------
+
+def conv2d_as_pgemm(
+    name: str,
+    *,
+    batch: int,
+    in_ch: int,
+    out_ch: int,
+    img_hw: Tuple[int, int],
+    kernel_hw: Tuple[int, int],
+    stride: int = 1,
+    pad: int = 0,
+    precision: Precision,
+) -> PGEMM:
+    """im2col: CONV(B,H,W,Cin->Cout,KhKw) == GEMM(M=B*Ho*Wo, N=Cout, K=Cin*Kh*Kw)."""
+    h, w = img_hw
+    kh, kw = kernel_hw
+    ho = (h + 2 * pad - kh) // stride + 1
+    wo = (w + 2 * pad - kw) // stride + 1
+    return PGEMM(name, M=batch * ho * wo, N=out_ch, K=in_ch * kh * kw,
+                 precision=precision)
+
+
+def linear_as_pgemm(name: str, *, batch_tokens: int, d_in: int, d_out: int,
+                    precision: Precision) -> PGEMM:
+    return PGEMM(name, M=batch_tokens, N=d_out, K=d_in, precision=precision)
+
+
+def mttkrp_as_pgemm(name: str, *, i: int, j: int, k: int, r: int,
+                    precision: Precision) -> PGEMM:
+    """MTTKRP A(i,r) = sum_{j,k} T(i,j,k) * B(j,r) * C(k,r): dominant cost is
+    the contraction over (j,k), GEMM(M=i, N=r, K=j*k) after Khatri-Rao."""
+    return PGEMM(name, M=i, N=r, K=j * k, precision=precision)
+
+
+def bignum_mult_as_pgemm(name: str, *, digits_bits: int, n_mults: int,
+                         precision: Precision) -> PGEMM:
+    """Big-number multiplication (BNM) in schoolbook/correlation form: the
+    k-th result limb is sum_{i+j=k} x_i * y_j — a sliding-window p-GEMM with
+    M = output limb positions (2n-1), K = n (the window), N = 1; the paper's
+    'precision IS the workload' extreme where the systolic array's diagonal
+    flow provides the anti-diagonal accumulation natively (§3.1)."""
+    n_limbs = math.ceil(digits_bits / precision.mult_bits)
+    return PGEMM(name, M=2 * n_limbs - 1, N=1, K=n_limbs,
+                 precision=precision, batch=n_mults)
+
+
+def attention_scores_as_pgemm(name: str, *, q_tokens: int, kv_tokens: int,
+                              d_head: int, heads: int,
+                              precision: Precision) -> PGEMM:
+    return PGEMM(name, M=q_tokens, N=kv_tokens, K=d_head, precision=precision,
+                 batch=heads)
+
+
+def total_flops(ops: Sequence[Operator]) -> int:
+    return sum(op.flops for op in ops)
+
+
+def split_paths(ops: Sequence[Operator]) -> Tuple[List[PGEMM], List[VectorOp]]:
+    """Partition a workload's operator list by execution path."""
+    gemms: List[PGEMM] = []
+    vecs: List[VectorOp] = []
+    for op in ops:
+        if classify(op) is ExecPath.GEMM:
+            assert isinstance(op, PGEMM)
+            gemms.append(op)
+        else:
+            if isinstance(op, PGEMM):
+                # degenerate p-GEMM executed on the vector path
+                vecs.append(VectorOp(op.name, op.macs, op.precision, 2))
+            else:
+                vecs.append(op)
+    return gemms, vecs

@@ -1,0 +1,151 @@
+"""Precision formats and limb algebra (paper §3.1).
+
+The paper's first insight: a ``w``-bit multiplication decomposes into
+``l = ceil(w / 8)`` 8-bit limbs whose cross-products + shifted accumulation
+follow exactly the dataflow of a small matrix multiplication.  Everything in
+GTA — the MPRA mapping rules, the Table-3 SIMD gains, and our TPU limb-GEMM
+kernel — derives from the numbers in this module.
+
+The PE width is 8 bits (the paper's choice); floating point formats map to
+integer limb counts through their mantissa width (with the implicit bit):
+
+    BP16 ->  8-bit mantissa -> 1 limb     FP32 -> 24-bit -> 3 limbs
+    FP16 -> 12-bit mantissa -> 2 limbs    FP64 -> 53-bit -> 7 limbs
+
+(The paper states INT8/12/24/53 equivalents for BP16/FP16/FP32/FP64; FP16's
+11-bit mantissa is padded to 12 for alignment, matching the paper.)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+from typing import Dict
+
+PE_BITS = 8  # paper's basic PE precision
+
+
+class PClass(enum.Enum):
+    """Precision class: integer or floating point."""
+
+    INT = "int"
+    FLOAT = "float"
+
+
+@dataclasses.dataclass(frozen=True)
+class Precision:
+    """A computational precision as GTA sees it.
+
+    Attributes:
+      name: canonical name, e.g. ``"INT32"`` / ``"FP32"``.
+      bits: storage width in bits.
+      mult_bits: the width the *multiplier* must support — full width for
+        integers, mantissa width (incl. implicit bit, padded per paper) for FP.
+      pclass: INT or FLOAT.
+    """
+
+    name: str
+    bits: int
+    mult_bits: int
+    pclass: PClass
+
+    @property
+    def limbs(self) -> int:
+        """Number of 8-bit limbs a single multiplication decomposes into."""
+        return max(1, math.ceil(self.mult_bits / PE_BITS))
+
+    @property
+    def bytes(self) -> int:
+        return self.bits // 8
+
+    @property
+    def is_float(self) -> bool:
+        return self.pclass is PClass.FLOAT
+
+    def __str__(self) -> str:  # pragma: no cover - cosmetic
+        return self.name
+
+
+INT8 = Precision("INT8", 8, 8, PClass.INT)
+INT16 = Precision("INT16", 16, 16, PClass.INT)
+INT32 = Precision("INT32", 32, 32, PClass.INT)
+INT64 = Precision("INT64", 64, 64, PClass.INT)
+BP16 = Precision("BP16", 16, 8, PClass.FLOAT)    # bfloat16: 8-bit mantissa
+FP16 = Precision("FP16", 16, 12, PClass.FLOAT)   # paper pads 11 -> 12
+FP32 = Precision("FP32", 32, 24, PClass.FLOAT)
+FP64 = Precision("FP64", 64, 53, PClass.FLOAT)
+
+ALL_PRECISIONS = (INT8, INT16, INT32, INT64, BP16, FP16, FP32, FP64)
+BY_NAME: Dict[str, Precision] = {p.name: p for p in ALL_PRECISIONS}
+
+
+def precision(name: str) -> Precision:
+    """Look up a precision by (case-insensitive) name."""
+    key = name.upper().replace("BF16", "BP16")
+    if key not in BY_NAME:
+        raise KeyError(f"unknown precision {name!r}; known: {sorted(BY_NAME)}")
+    return BY_NAME[key]
+
+
+# ---------------------------------------------------------------------------
+# MPRA occupancy rules (paper §3.1 / §4.1)
+# ---------------------------------------------------------------------------
+
+def ws_row_expansion(p: Precision) -> int:
+    """WS/IS mode: a p-bit stationary operand occupies this many PEs along a
+    row (limbs placed in consecutive positions, Fig. 1a)."""
+    return p.limbs
+
+
+def os_expansion(p: Precision) -> int:
+    """OS mode: the mapped workload expands by this factor in *both* array
+    directions (Fig. 1b: both operands are limb-decomposed spatially)."""
+    return p.limbs
+
+
+def vector_pes_per_mult(p: Precision) -> int:
+    """SIMD/vector mode: one p-bit multiply consumes l*l PEs (all limb
+    cross-products computed spatially in one step)."""
+    return p.limbs * p.limbs
+
+
+def simd_gain(p: Precision, mpra_pes: int = 64, vpu_datapath_bits: int = 64) -> float:
+    """The Table-3 throughput gain of one MPRA lane over one original VPU lane.
+
+    Original Ara lane: one ``vpu_datapath_bits``-wide unit per precision
+    -> ``vpu_datapath_bits / p.bits`` multiplies per cycle.
+    MPRA lane: ``mpra_pes`` 8-bit PEs, each multiply needs ``l*l`` of them
+    -> ``mpra_pes / l^2`` multiplies per cycle.
+
+    Closed form reproduces Table 3 exactly:
+      INT8 8x, INT16 4x, INT32 2x, INT64 1x, BP16 16x, FP16 4x,
+      FP32 (64/9)/2 = 3.56x, FP64 (64/49)/1 = 1.31x.
+    """
+    vpu_rate = vpu_datapath_bits / p.bits
+    mpra_rate = mpra_pes / vector_pes_per_mult(p)
+    return mpra_rate / vpu_rate
+
+
+# ---------------------------------------------------------------------------
+# Limb decomposition / recomposition algebra (used by kernels/ref oracles)
+# ---------------------------------------------------------------------------
+
+def limb_count(total_bits: int, limb_bits: int = PE_BITS) -> int:
+    return math.ceil(total_bits / limb_bits)
+
+
+def limb_weights(n_limbs: int, limb_bits: int = PE_BITS):
+    """Positional weights 2^(i*limb_bits) for limb i (little-endian)."""
+    return [1 << (i * limb_bits) for i in range(n_limbs)]
+
+
+def product_limb_pairs(n_limbs: int):
+    """All (i, j) limb-index pairs of a full cross-product, grouped by the
+    output shift ``i + j`` — the 'anti-diagonals' that the paper's
+    multi-precision accumulator (Fig. 3) sums with shift-adds."""
+    groups = {}
+    for i in range(n_limbs):
+        for j in range(n_limbs):
+            groups.setdefault(i + j, []).append((i, j))
+    return groups

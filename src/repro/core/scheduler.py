@@ -1,0 +1,144 @@
+"""Scheduling-space exploration for p-GEMM operators (paper §5).
+
+The schedule of one p-GEMM on GTA is a point in
+(dataflow x precision-mapping x array-resize) space:
+
+  * dataflow: WS / IS / OS / SIMD           (``core.dataflow``)
+  * precision: fixed by the operator; enters through limb expansion
+  * array resize: GTA's lanes (each one 8x8 MPRA) can be re-arranged via the
+    SysCSR Global-Layout field into any (r_lanes x c_lanes) grid with
+    ``r_lanes * c_lanes = lanes`` — each arrangement yields a different
+    physical array shape ``(8*r_lanes) x (8*c_lanes)``.
+
+Every candidate is costed (cycles, memory traffic); the paper's priority
+strategy normalizes each metric to its per-metric minimum over the candidate
+set and picks the schedule with the least sum of squares.  ``explore``
+returns the full set so Fig.-9-style scatter plots and the benchmarks can
+inspect the whole space.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Sequence, Tuple
+
+from repro.core.dataflow import (ArrayShape, CostReport, candidate_costs)
+from repro.core.pgemm import PGEMM
+
+MPRA_DIM = 8  # each lane carries one 8x8 MPRA (paper §4.1)
+
+
+@dataclasses.dataclass(frozen=True)
+class GTAConfig:
+    """Physical configuration of a GTA instance.
+
+    ``max_group_lanes``: the SysCSR Mask-Group mechanism (§4.2) partitions
+    lanes into logically independent sub-regions; one systolic group is
+    bounded to this many lanes (the paper's largest illustrated array is
+    64 lanes / 64x64 PEs, Fig. 5).  Larger configs run
+    ``lanes // max_group_lanes`` groups data-parallel.
+    """
+
+    lanes: int = 4           # paper's synthesized config: 4 lanes
+    mpra_dim: int = MPRA_DIM
+    max_group_lanes: int = 64
+
+    @property
+    def total_pes(self) -> int:
+        return self.lanes * self.mpra_dim * self.mpra_dim
+
+    @property
+    def group_lanes(self) -> int:
+        return min(self.lanes, self.max_group_lanes)
+
+    @property
+    def groups(self) -> int:
+        return max(1, self.lanes // self.group_lanes)
+
+    def arrangements(self) -> List[ArrayShape]:
+        """All (rows x cols) arrays reachable by re-arranging the lanes of
+        ONE mask group."""
+        n = self.group_lanes
+        shapes = []
+        for r in range(1, n + 1):
+            if n % r == 0:
+                c = n // r
+                shapes.append(ArrayShape(r * self.mpra_dim, c * self.mpra_dim))
+        return shapes
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleChoice:
+    """The selected schedule plus the full explored space (for analysis)."""
+
+    best: CostReport
+    space: Tuple[CostReport, ...]
+
+    @property
+    def cycles(self) -> float:
+        return self.best.cycles
+
+    @property
+    def traffic_bytes(self) -> float:
+        return self.best.traffic_bytes
+
+
+def sum_of_squares_priority(reports: Sequence[CostReport]) -> CostReport:
+    """Paper §5: normalize each metric to the minimum over candidates and
+    pick the least sum of squares of the normalized metrics."""
+    if not reports:
+        raise ValueError("no candidate schedules")
+    min_c = min(r.cycles for r in reports)
+    min_t = min(r.traffic_bytes for r in reports)
+    min_c = max(min_c, 1e-9)
+    min_t = max(min_t, 1e-9)
+
+    def score(r: CostReport) -> float:
+        return (r.cycles / min_c) ** 2 + (r.traffic_bytes / min_t) ** 2
+
+    return min(reports, key=score)
+
+
+def explore(op: PGEMM, config: GTAConfig,
+            k_folds: Optional[List[int]] = None) -> ScheduleChoice:
+    """Enumerate (arrangement x dataflow x fold x direction) and select."""
+    space: List[CostReport] = []
+    for array in config.arrangements():
+        space.extend(candidate_costs(op, array, k_folds=k_folds))
+    best = sum_of_squares_priority(space)
+    return ScheduleChoice(best=best, space=tuple(space))
+
+
+def schedule_workload(ops: Sequence[PGEMM], config: GTAConfig,
+                      ) -> List[ScheduleChoice]:
+    """Schedule every p-GEMM of a workload independently (the paper schedules
+    per-operator; inter-operator fusion is out of scope)."""
+    return [explore(op, config) for op in ops]
+
+
+# ---------------------------------------------------------------------------
+# Pareto utilities (used by tests + Fig. 9 analysis)
+# ---------------------------------------------------------------------------
+
+def pareto_front(reports: Sequence[CostReport]) -> List[CostReport]:
+    """Non-dominated (cycles, traffic) points, ascending by cycles."""
+    pts = sorted(reports, key=lambda r: (r.cycles, r.traffic_bytes))
+    front: List[CostReport] = []
+    best_t = math.inf
+    for r in pts:
+        if r.traffic_bytes < best_t:
+            front.append(r)
+            best_t = r.traffic_bytes
+    return front
+
+
+def is_on_or_dominated_boundary(choice: CostReport,
+                                reports: Sequence[CostReport]) -> bool:
+    """True iff no candidate strictly dominates ``choice`` in both metrics.
+
+    The sum-of-squares pick is always non-dominated (property-tested)."""
+    for r in reports:
+        if (r.cycles < choice.cycles and r.traffic_bytes < choice.traffic_bytes):
+            return False
+    return True

@@ -1,0 +1,134 @@
+"""GTA scheduling -> TPU kernel tiling (the hardware-adaptation bridge).
+
+On TPU the "array" is the 128x128 MXU and the "lanes + SysCSR arrangement"
+becomes the choice of Pallas grid + BlockSpec: which operand's block stays
+resident in VMEM across grid steps (stationarity = WS/IS/OS) and how big the
+VMEM tiles are (array resize).  This module re-uses the paper's scheduling
+machinery — enumerate candidates, cost (passes, HBM traffic), normalize,
+least-sum-of-squares — to pick block shapes for the kernels in
+``repro.kernels``.
+
+The cost model is structural (no wall clock on CPU):
+  * compute term  = MXU passes = ceil(M/bm)*ceil(N/bn)*ceil(K/bk) *
+                    (bm/128)*(bn/128)*(bk/128) * limb_factor
+  * traffic term  = HBM->VMEM bytes implied by the stationarity choice
+      WS (B stationary over M-steps): A once, B x1 per (n,k), out x k_steps
+      IS (A stationary over N-steps): A x1, B re-read per m-step, ...
+      OS (C stationary over K-steps): A x n_steps, B x m_steps, out once
+TPU constraints baked in: last dim multiples of 128, second-minor multiples
+of 8 (fp32) / 16 (bf16) / 32 (int8); VMEM budget ~16 MiB/core with double
+buffering => block working set <= ~4 MiB.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+from repro.core.dataflow import Dataflow
+
+VMEM_BYTES = 16 * 1024 * 1024
+#: usable block working-set budget after double-buffering in/out streams
+BLOCK_BUDGET_BYTES = 4 * 1024 * 1024
+MXU_DIM = 128
+
+_SUBLANE = {4: 8, 2: 16, 1: 32}  # dtype bytes -> second-minor alignment
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockConfig:
+    """A concrete kernel tiling: block shapes + stationarity dataflow."""
+
+    bm: int
+    bn: int
+    bk: int
+    dataflow: Dataflow
+    mxu_passes: float = 0.0
+    hbm_bytes: float = 0.0
+
+    @property
+    def key(self) -> Tuple[int, int, int, str]:
+        return (self.bm, self.bn, self.bk, self.dataflow.value)
+
+
+def _ceil(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _align(x: int, a: int) -> int:
+    return max(a, (x // a) * a) if x >= a else a
+
+
+def _block_candidates(dim: int, align: int, caps: Sequence[int]) -> List[int]:
+    out = []
+    for c in caps:
+        c = min(c, _align(dim, align) if dim >= align else align)
+        c = max(align, (c // align) * align)
+        if c not in out:
+            out.append(c)
+    return out
+
+
+def working_set_bytes(bm: int, bn: int, bk: int, abytes: int, bbytes: int,
+                      obytes: int) -> int:
+    return bm * bk * abytes + bk * bn * bbytes + bm * bn * obytes
+
+
+def candidate_block_configs(
+    M: int, N: int, K: int, *, abytes: int = 2, bbytes: int = 2,
+    obytes: int = 4, limb_factor: int = 1,
+    budget: int = BLOCK_BUDGET_BYTES,
+) -> List[BlockConfig]:
+    """Enumerate (bm, bn, bk, dataflow) candidates with costs."""
+    al_m = _SUBLANE.get(abytes, 8)
+    cand_m = _block_candidates(M, al_m, (128, 256, 512))
+    cand_n = _block_candidates(N, MXU_DIM, (128, 256, 512, 1024))
+    cand_k = _block_candidates(K, MXU_DIM, (128, 256, 512, 1024, 2048))
+
+    out: List[BlockConfig] = []
+    for bm in cand_m:
+        for bn in cand_n:
+            for bk in cand_k:
+                if working_set_bytes(bm, bn, bk, abytes, bbytes, obytes) > budget:
+                    continue
+                gm, gn, gk = _ceil(M, bm), _ceil(N, bn), _ceil(K, bk)
+                passes = (gm * gn * gk * (bm / MXU_DIM) * (bn / MXU_DIM)
+                          * (bk / MXU_DIM) * limb_factor)
+                for df in (Dataflow.WS, Dataflow.IS, Dataflow.OS):
+                    if df is Dataflow.WS:
+                        # B blocks stationary while M-steps stream
+                        a = M * K * gn * abytes
+                        b = K * N * bbytes
+                        o = M * N * obytes * (2 * gk - 1)
+                    elif df is Dataflow.IS:
+                        a = M * K * abytes
+                        b = K * N * gm * bbytes
+                        o = M * N * obytes * (2 * gk - 1)
+                    else:  # OS: C resident across K-steps
+                        a = M * K * gn * abytes
+                        b = K * N * gm * bbytes
+                        o = M * N * obytes
+                    out.append(BlockConfig(bm, bn, bk, df, passes,
+                                           float(a + b + o)))
+    return out
+
+
+def choose_block_config(
+    M: int, N: int, K: int, *, abytes: int = 2, bbytes: int = 2,
+    obytes: int = 4, limb_factor: int = 1,
+    budget: int = BLOCK_BUDGET_BYTES,
+    allowed: Optional[Iterable[Dataflow]] = None,
+) -> BlockConfig:
+    """Paper's priority rule over the TPU candidate space."""
+    cands = candidate_block_configs(M, N, K, abytes=abytes, bbytes=bbytes,
+                                    obytes=obytes, limb_factor=limb_factor,
+                                    budget=budget)
+    if allowed is not None:
+        allow = set(allowed)
+        cands = [c for c in cands if c.dataflow in allow]
+    if not cands:
+        raise ValueError(f"no feasible block config for {(M, N, K)}")
+    min_p = max(min(c.mxu_passes for c in cands), 1e-9)
+    min_h = max(min(c.hbm_bytes for c in cands), 1e-9)
+    return min(cands, key=lambda c: (c.mxu_passes / min_p) ** 2
+               + (c.hbm_bytes / min_h) ** 2)

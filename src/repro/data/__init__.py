@@ -1,0 +1,2 @@
+"""Deterministic shard-aware data pipeline (restart-exact)."""
+from repro.data.pipeline import DataConfig, SyntheticLM, make_batch  # noqa

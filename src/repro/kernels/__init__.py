@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the GTA compute hot-spots (+ jnp oracles).
+
+  limb_gemm    — multi-precision exact integer GEMM via balanced int8 limbs
+                 (paper §3.1 on the MXU), OS dataflow, VMEM diagonal planes
+  accumulator  — Fig.-3 multi-precision accumulator (uint32-pair shift-adds)
+  mpgemm       — fp GEMM with WS / IS / OS selectable block schedules (§5)
+  quant_matmul — int8-weight serving path (GTA's native-precision fast case)
+  ops          — public padded/jit'd wrappers; block shapes chosen by the
+                 GTA scheduling bridge (core.tiling)
+  ref          — pure-jnp/numpy oracles for all of the above
+
+Kernels target TPU (BlockSpec VMEM tiling, MXU-aligned blocks) and are
+validated on CPU with interpret=True.
+"""

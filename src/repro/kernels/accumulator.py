@@ -1,0 +1,82 @@
+"""The multi-precision accumulator (paper Fig. 3), TPU-adapted.
+
+The systolic array (here: MXU limb passes) produces per-anti-diagonal partial
+sums S_d = sum_{i+j=d} A_i @ B_j.  The paper's accumulator recombines them
+with shift-adds, handling carries in hardware.  TPUs expose no carry chains
+and (by default) no int64, so we emulate the 64-bit combine with uint32
+pairs — vectorized multi-word arithmetic, which is precisely what the Fig.-3
+unit does in RTL.
+
+All functions are pure jnp (VPU path), shape-polymorphic, and work without
+``jax_enable_x64``.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+_U32 = jnp.uint32
+_MASK32 = jnp.uint32(0xFFFFFFFF)
+
+
+def _sext64(s: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Sign-extend int32 -> (hi, lo) uint32 pair."""
+    lo = s.view(_U32) if s.dtype == jnp.int32 else s.astype(jnp.int32).view(_U32)
+    hi = jnp.where(s < 0, _MASK32, _U32(0))
+    return hi, lo
+
+
+def _shl64(hi: jax.Array, lo: jax.Array, s: int
+           ) -> Tuple[jax.Array, jax.Array]:
+    """Logical left shift of a uint32 pair by a static amount 0..63."""
+    if s == 0:
+        return hi, lo
+    if s < 32:
+        return (hi << _U32(s)) | (lo >> _U32(32 - s)), lo << _U32(s)
+    if s == 32:
+        return lo, jnp.zeros_like(lo)
+    return lo << _U32(s - 32), jnp.zeros_like(lo)
+
+
+def _add64(h1, l1, h2, l2) -> Tuple[jax.Array, jax.Array]:
+    """uint32-pair addition with carry (wrapping, mod 2^64)."""
+    lo = l1 + l2
+    carry = (lo < l1).astype(_U32)
+    return h1 + h2 + carry, lo
+
+
+def combine_diagonals(diags: jax.Array, limb_bits: int
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Recombine anti-diagonal partial sums into the exact 64-bit result.
+
+    diags: (D, ...) int32, D = la + lb - 1 anti-diagonals.
+    Returns (hi, lo) int32 arrays of shape diags.shape[1:]:
+      result mod 2^64 = sum_d diags[d] * 2^(d*limb_bits)  (two's complement).
+    """
+    if diags.dtype != jnp.int32:
+        raise TypeError(f"diagonal sums must be int32, got {diags.dtype}")
+    d0_hi, d0_lo = _sext64(diags[0])
+    acc_hi, acc_lo = d0_hi, d0_lo
+    for d in range(1, diags.shape[0]):
+        s = d * limb_bits
+        if s >= 64:
+            break  # contributes 0 mod 2^64
+        c_hi, c_lo = _shl64(*_sext64(diags[d]), s)
+        acc_hi, acc_lo = _add64(acc_hi, acc_lo, c_hi, c_lo)
+    return acc_hi.view(jnp.int32), acc_lo.view(jnp.int32)
+
+
+def pair_to_int32(hi: jax.Array, lo: jax.Array) -> jax.Array:
+    """Truncate the 64-bit pair to int32 (the natural wrap semantics when the
+    caller knows the result fits, e.g. int8/int16 operands, short K)."""
+    del hi
+    return lo
+
+
+def pair_to_float(hi: jax.Array, lo: jax.Array) -> jax.Array:
+    """Approximate float64-ish value as float32 (for quick inspection)."""
+    return hi.astype(jnp.float32) * jnp.float32(2.0) ** 32 + (
+        lo.view(jnp.uint32).astype(jnp.float32))

@@ -1,0 +1,130 @@
+"""Dataflow-selectable GEMM kernel: WS / IS / OS as Pallas block schedules.
+
+The paper's §5 schedules one p-GEMM by choosing which operand is stationary.
+On TPU "stationary" = the operand block whose BlockSpec index_map is
+invariant along the innermost grid dimension (its VMEM copy is not re-fetched
+between consecutive grid steps):
+
+  OS  grid (m, n, k), k innermost: the fp32 accumulator tile is resident in
+      VMEM scratch across K steps and written once — outputs stationary.
+  WS  grid (n, k, m), m innermost: the B (weight) block (k, n) is constant
+      while M streams — weights stationary.  Output tiles are visited
+      non-consecutively across k, so each (k) step emits a PARTIAL plane
+      (out shape (gk, M, N)) which the wrapper reduces — this materializes
+      the WS output-spill traffic of the paper's cost model (core.dataflow).
+  IS  grid (m, k, n), n innermost: the A (input) block (m, k) is constant
+      while N streams — inputs stationary; same partial-plane epilogue.
+
+All three compute identical results (tests assert so); they differ in
+traffic exactly the way ``core.dataflow`` predicts, which is how the TPU
+adaptation keeps the paper's scheduling space meaningful.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.dataflow import Dataflow
+
+
+def _os_kernel(a_ref, b_ref, out_ref, acc_ref, *, gk: int, out_dtype):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        a_ref[...], b_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == gk - 1)
+    def _flush():
+        out_ref[...] = acc_ref[...].astype(out_dtype)
+
+
+def _partial_kernel(a_ref, b_ref, out_ref):
+    """WS/IS: emit one partial product plane per K-step (no accumulation —
+    output blocks are never revisited)."""
+    out_ref[0, :, :] = jax.lax.dot_general(
+        a_ref[...], b_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("dataflow", "bm", "bn", "bk",
+                                             "out_dtype", "interpret"))
+def mpgemm(a: jax.Array, b: jax.Array, *, dataflow: Dataflow = Dataflow.OS,
+           bm: int = 128, bn: int = 128, bk: int = 128,
+           out_dtype=jnp.float32, interpret: bool = True) -> jax.Array:
+    """GEMM with an explicit systolic-dataflow schedule.
+
+    a: (M, K), b: (K, N); M/N/K multiples of bm/bn/bk (ops.matmul pads).
+    """
+    M, K = a.shape
+    K2, N = b.shape
+    if K != K2:
+        raise ValueError(f"contraction mismatch {K} vs {K2}")
+    if M % bm or N % bn or K % bk:
+        raise ValueError(f"{(M, N, K)} not divisible by {(bm, bn, bk)}")
+    gm, gn, gk = M // bm, N // bn, K // bk
+
+    if dataflow is Dataflow.OS or dataflow is Dataflow.SIMD:
+        kernel = functools.partial(_os_kernel, gk=gk, out_dtype=out_dtype)
+        return pl.pallas_call(
+            kernel,
+            grid=(gm, gn, gk),
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda m, n, k: (m, k)),
+                pl.BlockSpec((bk, bn), lambda m, n, k: (k, n)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
+            out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+            compiler_params=pltpu.CompilerParams(
+                dimension_semantics=("parallel", "parallel", "arbitrary")),
+            interpret=interpret,
+            name="mpgemm_os",
+        )(a, b)
+
+    if dataflow is Dataflow.WS:
+        # grid (n, k, m): B block (k, n) invariant along innermost m.
+        partials = pl.pallas_call(
+            _partial_kernel,
+            grid=(gn, gk, gm),
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda n, k, m: (m, k)),
+                pl.BlockSpec((bk, bn), lambda n, k, m: (k, n)),
+            ],
+            out_specs=pl.BlockSpec((1, bm, bn), lambda n, k, m: (k, m, n)),
+            out_shape=jax.ShapeDtypeStruct((gk, M, N), jnp.float32),
+            compiler_params=pltpu.CompilerParams(
+                dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+            interpret=interpret,
+            name="mpgemm_ws",
+        )(a, b)
+    elif dataflow is Dataflow.IS:
+        # grid (m, k, n): A block (m, k) invariant along innermost n.
+        partials = pl.pallas_call(
+            _partial_kernel,
+            grid=(gm, gk, gn),
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda m, k, n: (m, k)),
+                pl.BlockSpec((bk, bn), lambda m, k, n: (k, n)),
+            ],
+            out_specs=pl.BlockSpec((1, bm, bn), lambda m, k, n: (k, m, n)),
+            out_shape=jax.ShapeDtypeStruct((gk, M, N), jnp.float32),
+            compiler_params=pltpu.CompilerParams(
+                dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+            interpret=interpret,
+            name="mpgemm_is",
+        )(a, b)
+    else:
+        raise ValueError(f"unsupported dataflow {dataflow}")
+
+    # the multi-precision-accumulator analogue for partial planes:
+    return jnp.sum(partials, axis=0).astype(out_dtype)

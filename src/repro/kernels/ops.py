@@ -1,0 +1,147 @@
+"""Public jit'd kernel API.
+
+Pads arbitrary shapes to block multiples, picks block configs with the GTA
+scheduler bridge (core.tiling — the paper's Σ-squares priority over TPU
+block candidates), dispatches to the Pallas kernels, and runs interpret mode
+automatically off-TPU.  Everything the model/serving stack calls lives here.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dataflow import Dataflow
+from repro.core.precision import Precision, precision as precision_by_name
+from repro.core.tiling import BlockConfig, choose_block_config
+from repro.kernels import accumulator
+from repro.kernels import limb_gemm as _lg
+from repro.kernels import mpgemm as _mp
+from repro.kernels import quant_matmul as _qm
+from repro.kernels.ref import LIMB_BITS, n_limbs_for
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad2(x: jax.Array, m0: int, m1: int) -> jax.Array:
+    p0 = (-x.shape[-2]) % m0
+    p1 = (-x.shape[-1]) % m1
+    if p0 == 0 and p1 == 0:
+        return x
+    pad = [(0, 0)] * (x.ndim - 2) + [(0, p0), (0, p1)]
+    return jnp.pad(x, pad)
+
+
+def _auto_blocks(M: int, N: int, K: int, abytes: int, bbytes: int,
+                 limb_factor: int = 1) -> BlockConfig:
+    return choose_block_config(M, N, K, abytes=abytes, bbytes=bbytes,
+                               obytes=4, limb_factor=limb_factor,
+                               allowed=(Dataflow.OS,))
+
+
+# ---------------------------------------------------------------------------
+# Multi-precision exact integer matmul (the paper's technique)
+# ---------------------------------------------------------------------------
+
+def limb_matmul(a: jax.Array, b: jax.Array, *,
+                in_bits: Optional[int] = None,
+                blocks: Optional[Tuple[int, int, int]] = None,
+                interpret: Optional[bool] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Exact integer GEMM via limb decomposition: returns (hi, lo) int32
+    pairs = (a @ b) mod 2^64 in two's complement.
+
+    a: (M, K), b: (K, N) — int8/int16/int32 (or int32 holding narrower
+    values; pass ``in_bits`` to force the decomposition width).
+    """
+    if a.dtype != b.dtype and in_bits is None:
+        raise ValueError("mixed input dtypes need explicit in_bits")
+    bits = in_bits or jnp.dtype(a.dtype).itemsize * 8
+    nl = n_limbs_for(bits, LIMB_BITS)
+    interp = _interpret() if interpret is None else interpret
+
+    M, K = a.shape
+    _, N = b.shape
+    if blocks is None:
+        cfg = _auto_blocks(M, N, K, 1, 1, limb_factor=nl * nl)
+        bm, bn, bk = cfg.bm, cfg.bn, cfg.bk
+    else:
+        bm, bn, bk = blocks
+
+    a_l = _pad2(_lg.limb_decompose(a, nl, LIMB_BITS), bm, bk)
+    b_l = _pad2(_lg.limb_decompose(b, nl, LIMB_BITS), bk, bn)
+    diags = _lg.limb_gemm_diagonals(a_l, b_l, bm=bm, bn=bn, bk=bk,
+                                    interpret=interp)
+    hi, lo = accumulator.combine_diagonals(diags, LIMB_BITS)
+    return hi[:M, :N], lo[:M, :N]
+
+
+def limb_matmul_i32(a: jax.Array, b: jax.Array, **kw) -> jax.Array:
+    """Truncated int32 result (callers guaranteeing no 32-bit overflow)."""
+    _, lo = limb_matmul(a, b, **kw)
+    return lo
+
+
+# ---------------------------------------------------------------------------
+# Float GEMM with selectable dataflow (schedule demonstrator + default path)
+# ---------------------------------------------------------------------------
+
+def matmul(a: jax.Array, b: jax.Array, *, dataflow: Dataflow = Dataflow.OS,
+           out_dtype=jnp.float32,
+           blocks: Optional[Tuple[int, int, int]] = None,
+           interpret: Optional[bool] = None) -> jax.Array:
+    """GEMM through the mpgemm kernel (pads to block multiples)."""
+    interp = _interpret() if interpret is None else interpret
+    M, K = a.shape
+    _, N = b.shape
+    if blocks is None:
+        eb = jnp.dtype(a.dtype).itemsize
+        cfg = choose_block_config(M, N, K, abytes=eb, bbytes=eb, obytes=4)
+        bm, bn, bk = cfg.bm, cfg.bn, cfg.bk
+    else:
+        bm, bn, bk = blocks
+    ap = _pad2(a, bm, bk)
+    bp = _pad2(b, bk, bn)
+    out = _mp.mpgemm(ap, bp, dataflow=dataflow, bm=bm, bn=bn, bk=bk,
+                     out_dtype=out_dtype, interpret=interp)
+    return out[:M, :N]
+
+
+# ---------------------------------------------------------------------------
+# int8-weight quantized matmul (serving fast path)
+# ---------------------------------------------------------------------------
+
+def quantize_weights(w: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-output-channel int8 quantization: w (K, N) ->
+    (w_q int8 (K, N), scale f32 (N,))."""
+    amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=0, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale.reshape(-1).astype(jnp.float32)
+
+
+def quant_matmul(x: jax.Array, w_q: jax.Array, scale: jax.Array, *,
+                 out_dtype=jnp.float32,
+                 blocks: Optional[Tuple[int, int, int]] = None,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    """x (M, K) @ dequant(w_q (K, N), scale (N,)) -> (M, N)."""
+    interp = _interpret() if interpret is None else interpret
+    M, K = x.shape
+    _, N = w_q.shape
+    if blocks is None:
+        eb = jnp.dtype(x.dtype).itemsize
+        cfg = choose_block_config(M, N, K, abytes=eb, bbytes=1, obytes=4)
+        bm, bn, bk = cfg.bm, cfg.bn, cfg.bk
+    else:
+        bm, bn, bk = blocks
+    xp = _pad2(x, bm, bk)
+    wp = _pad2(w_q, bk, bn)
+    sp = jnp.pad(scale, (0, (-N) % bn))
+    out = _qm.quant_matmul(xp, wp, sp, bm=bm, bn=bn, bk=bk,
+                           out_dtype=out_dtype, interpret=interp)
+    return out[:M, :N]

@@ -1,0 +1,114 @@
+"""Pure-jnp/numpy oracles for every kernel in ``repro.kernels``.
+
+These are the ground truth the Pallas kernels are allclose-tested against
+(shape/dtype sweeps in tests/test_kernels.py).  Integer references compute
+modulo 2^64 via numpy uint64 wraparound — exactly the semantics of the
+(hi, lo) int32-pair output of the multi-precision accumulator.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Limb algebra reference (paper §3.1, TPU-adapted balanced base-2^b digits)
+# ---------------------------------------------------------------------------
+
+LIMB_BITS = 7  # balanced base-128 digits: every digit fits signed int8
+
+
+def n_limbs_for(bits: int, limb_bits: int = LIMB_BITS) -> int:
+    """Signed balanced-digit decomposition needs ceil(bits/limb_bits) digits
+    (the balanced form absorbs the sign without an extra carry digit beyond
+    the ceiling)."""
+    return -(-bits // limb_bits)
+
+
+def limb_decompose_ref(x: np.ndarray, n_limbs: int,
+                       limb_bits: int = LIMB_BITS) -> np.ndarray:
+    """Balanced signed-digit decomposition: x = sum_i d_i * (2^limb_bits)^i
+    with every d_i in [-2^(b-1), 2^(b-1)) — int8-safe for b <= 8.
+
+    Returns int8 array of shape (n_limbs,) + x.shape.
+    """
+    base = 1 << limb_bits
+    half = base >> 1
+    rem = x.astype(np.int64)
+    digits = []
+    for _ in range(n_limbs):
+        d = ((rem + half) & (base - 1)) - half
+        digits.append(d.astype(np.int8))
+        rem = (rem - d) >> limb_bits
+    assert np.all(rem == 0), "value does not fit in the requested limbs"
+    return np.stack(digits, axis=0)
+
+
+def limb_recompose_ref(digits: np.ndarray, limb_bits: int = LIMB_BITS
+                       ) -> np.ndarray:
+    """Inverse of limb_decompose_ref (int64, exact for <=63-bit values)."""
+    acc = np.zeros(digits.shape[1:], dtype=np.int64)
+    for i in range(digits.shape[0] - 1, -1, -1):
+        acc = (acc << limb_bits) + digits[i].astype(np.int64)
+    return acc
+
+
+def int_matmul_mod64_ref(a: np.ndarray, b: np.ndarray
+                         ) -> Tuple[np.ndarray, np.ndarray]:
+    """Exact integer matmul modulo 2^64, returned as (hi, lo) int32 pairs
+    (two's complement), the multi-precision accumulator's output format."""
+    au = a.astype(np.int64).astype(np.uint64)
+    bu = b.astype(np.int64).astype(np.uint64)
+    with np.errstate(over="ignore"):
+        out = np.zeros((a.shape[0], b.shape[1]), dtype=np.uint64)
+        for k in range(a.shape[1]):  # explicit loop: uint64 matmul exact
+            out += au[:, k:k + 1] * bu[k:k + 1, :]
+    lo = (out & np.uint64(0xFFFFFFFF)).astype(np.uint32).view(np.int32)
+    hi = (out >> np.uint64(32)).astype(np.uint32).view(np.int32)
+    return hi, lo
+
+
+def diagonal_sums_ref(a_limbs: np.ndarray, b_limbs: np.ndarray) -> np.ndarray:
+    """The kernel's intermediate: S_d = sum_{i+j=d} A_i @ B_j, int32.
+    a_limbs: (la, M, K) int8; b_limbs: (lb, K, N) int8 ->
+    (la+lb-1, M, N) int32."""
+    la, lb = a_limbs.shape[0], b_limbs.shape[0]
+    M, N = a_limbs.shape[1], b_limbs.shape[2]
+    out = np.zeros((la + lb - 1, M, N), dtype=np.int32)
+    for i in range(la):
+        for j in range(lb):
+            out[i + j] += a_limbs[i].astype(np.int32) @ b_limbs[j].astype(np.int32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Float matmul references
+# ---------------------------------------------------------------------------
+
+def matmul_ref(a: jax.Array, b: jax.Array,
+               out_dtype=jnp.float32) -> jax.Array:
+    """Plain GEMM oracle with fp32 accumulation."""
+    return jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def quant_matmul_ref(x: jax.Array, w_q: jax.Array, scale: jax.Array,
+                     out_dtype=jnp.float32) -> jax.Array:
+    """int8-weight matmul oracle: x [M,K] (bf16/f32) @ (w_q [K,N] int8 *
+    scale [N] f32 per-channel)."""
+    acc = jax.lax.dot_general(
+        x.astype(jnp.float32), w_q.astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    return (acc * scale[None, :].astype(jnp.float32)).astype(out_dtype)
+
+
+def quantize_ref(w: jax.Array, axis: int = 0) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-channel int8 quantization oracle (channel = last dim)."""
+    amax = jnp.max(jnp.abs(w), axis=axis, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
+    return q, scale.reshape(-1).astype(jnp.float32)

@@ -1,0 +1,2 @@
+"""Launchers: mesh construction, sharding rules, train/serve drivers,
+multi-pod dry-run."""

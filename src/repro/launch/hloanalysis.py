@@ -1,0 +1,257 @@
+"""HLO text analyzer: loop-aware FLOP and collective-byte accounting.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE — under a
+scan-over-layers model that understates compute/collectives by the layer
+count.  This walker parses the optimized HLO text, recovers each while
+loop's trip count from its condition, and propagates multipliers through
+the computation call graph, giving:
+
+  * flops          — 2*M*N*K per dot, times the enclosing loops' trips
+  * collective_bytes — per-device transfer (ring model) per collective op,
+                       times trips
+  * per-op breakdowns for the §Perf iteration log
+
+It is deliberately text-based (no private XLA APIs) and validated against
+cost_analysis on loop-free programs (tests/test_hloanalysis.py).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16}
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{\s*$")
+_SHAPE_RE = re.compile(r"([a-z][0-9a-z]*)\[([\d,]*)\]")
+_WHILE_RE = re.compile(r"while\(.*condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_CALL_RE = re.compile(r"(?:to_apply|calls)=%?([\w\.\-]+)")
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _numel(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _first_shape(line: str) -> Optional[Tuple[str, int]]:
+    m = _SHAPE_RE.search(line)
+    if not m:
+        return None
+    return m.group(1), _numel(m.group(2))
+
+
+def _shape_bytes(dtype: str, numel: int) -> int:
+    return numel * _DTYPE_BYTES.get(dtype, 4)
+
+
+class HloModule:
+    """Parsed optimized-HLO text."""
+
+    def __init__(self, text: str, n_devices: int = 1):
+        self.n_devices = n_devices
+        self.computations: Dict[str, List[str]] = {}
+        self.entry: Optional[str] = None
+        self._parse(text)
+        self.trip_counts = {}
+        self._find_trips()
+        self.multipliers = self._propagate()
+
+    def _parse(self, text: str):
+        cur: Optional[str] = None
+        for raw in text.splitlines():
+            line = raw.strip()
+            if not line:
+                continue
+            if line.endswith("{") and ("->" in line or line.startswith("ENTRY")):
+                m = _COMP_RE.match(line)
+                if m:
+                    cur = m.group(1)
+                    self.computations[cur] = []
+                    if line.startswith("ENTRY"):
+                        self.entry = cur
+                    continue
+            if line.startswith("}"):
+                cur = None
+                continue
+            if cur is not None:
+                self.computations[cur].append(line)
+        if self.entry is None and self.computations:
+            # fall back: computation named like main/entry
+            for name in self.computations:
+                if "main" in name:
+                    self.entry = name
+                    break
+            else:
+                self.entry = next(iter(self.computations))
+
+    # -- while trip counts -----------------------------------------------------
+    def _find_trips(self):
+        """trip(body) from the companion condition computation: the largest
+        integer constant compared against the induction variable."""
+        self.whiles: List[Tuple[str, str, str]] = []  # (caller, cond, body)
+        for name, lines in self.computations.items():
+            for ln in lines:
+                m = _WHILE_RE.search(ln)
+                if m:
+                    cond, body = m.groups()
+                    self.whiles.append((name, cond, body))
+        for _, cond, body in self.whiles:
+            trips = 1
+            for ln in self.computations.get(cond, []):
+                if "constant(" in ln and ("s32[]" in ln or "u32[]" in ln
+                                          or "s64[]" in ln):
+                    mm = re.search(r"constant\((\d+)\)", ln)
+                    if mm:
+                        trips = max(trips, int(mm.group(1)))
+            self.trip_counts[body] = trips
+            self.trip_counts[cond] = trips
+
+    # -- multiplier propagation ---------------------------------------------------
+    def _edges(self, name: str) -> List[Tuple[str, int]]:
+        """(callee, extra multiplier) edges out of a computation."""
+        out = []
+        for ln in self.computations.get(name, []):
+            m = _WHILE_RE.search(ln)
+            if m:
+                cond, body = m.groups()
+                t = self.trip_counts.get(body, 1)
+                out.append((body, t))
+                out.append((cond, t))
+                continue
+            for callee in _CALL_RE.findall(ln):
+                out.append((callee, 1))
+        return out
+
+    def _propagate(self) -> Dict[str, int]:
+        mult = {self.entry: 1}
+        stack = [self.entry]
+        seen_edges = set()
+        while stack:
+            cur = stack.pop()
+            for callee, extra in self._edges(cur):
+                if callee not in self.computations:
+                    continue
+                new = mult[cur] * extra
+                key = (cur, callee)
+                if key in seen_edges and mult.get(callee, 0) >= new:
+                    continue
+                seen_edges.add(key)
+                if mult.get(callee, 0) < new:
+                    mult[callee] = new
+                    stack.append(callee)
+        return mult
+
+    # -- accounting ------------------------------------------------------------
+    def _symbols(self, lines: List[str]) -> Dict[str, Tuple[str, List[int]]]:
+        """instruction name -> (dtype, dims) from each line's assignment."""
+        table: Dict[str, Tuple[str, List[int]]] = {}
+        for ln in lines:
+            mm = re.match(r"(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*"
+                          r"([a-z][0-9a-z]*)\[([\d,]*)\]", ln)
+            if mm:
+                name, dtype, dims = mm.groups()
+                table[name] = (dtype,
+                               [int(d) for d in dims.split(",") if d])
+        return table
+
+    def dot_flops(self) -> Tuple[float, Dict[str, float]]:
+        """2*numel(result)*K per dot, times loop multipliers.  Operand
+        shapes resolve through the per-computation symbol table (optimized
+        HLO references operands by name, not inline shape)."""
+        total = 0.0
+        per_comp: Dict[str, float] = {}
+        for name, lines in self.computations.items():
+            m = self.multipliers.get(name, 0)
+            if m == 0:
+                continue
+            table = self._symbols(lines)
+            sub = 0.0
+            for ln in lines:
+                if " dot(" not in ln:
+                    continue
+                res = _first_shape(ln)
+                if res is None:
+                    continue
+                _, res_n = res
+                k = 1
+                cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ln)
+                om = re.search(r"dot\(%([\w\.\-]+)", ln)
+                if cm and om and om.group(1) in table:
+                    lhs_dims = table[om.group(1)][1]
+                    for di in cm.group(1).split(","):
+                        if di and int(di) < len(lhs_dims):
+                            k *= lhs_dims[int(di)]
+                sub += 2.0 * res_n * k
+            if sub:
+                per_comp[name] = sub * m
+                total += sub * m
+        return total, per_comp
+
+    def collective_bytes(self) -> Dict[str, Any]:
+        """Per-device transfer bytes (ring model), loop-aware."""
+        per_op: Dict[str, float] = {}
+        counts: Dict[str, int] = {}
+        total = 0.0
+        for name, lines in self.computations.items():
+            mlt = self.multipliers.get(name, 0)
+            if mlt == 0:
+                continue
+            for ln in lines:
+                op = None
+                for cand in _COLL_OPS:
+                    if f" {cand}(" in ln or f" {cand}-start(" in ln:
+                        op = cand
+                        break
+                if op is None:
+                    continue
+                res = _first_shape(ln)
+                if res is None:
+                    continue
+                dtype, numel = res
+                size = _shape_bytes(dtype, numel)
+                g = _GROUPS_IOTA_RE.search(ln)
+                if g:
+                    n = int(g.group(2))
+                else:
+                    ge = _GROUPS_EXPL_RE.search(ln)
+                    n = (len(ge.group(1).split(",")) if ge
+                         else self.n_devices)
+                n = max(2, n)
+                if op == "all-reduce":
+                    moved = 2.0 * size * (n - 1) / n
+                elif op == "collective-permute":
+                    moved = float(size)
+                else:
+                    moved = size * (n - 1) / n
+                moved *= mlt
+                per_op[op] = per_op.get(op, 0.0) + moved
+                counts[op] = counts.get(op, 0) + mlt
+                total += moved
+        return {"per_device_bytes": total, "per_op_bytes": per_op,
+                "counts": counts}
+
+    def loop_summary(self) -> List[Tuple[str, int]]:
+        return sorted(self.trip_counts.items(), key=lambda kv: -kv[1])
+
+
+def analyze(hlo_text: str, n_devices: int = 1) -> Dict[str, Any]:
+    mod = HloModule(hlo_text, n_devices)
+    flops, per_comp = mod.dot_flops()
+    coll = mod.collective_bytes()
+    return {
+        "walked_dot_flops": flops,
+        "dot_flops_by_computation": dict(
+            sorted(per_comp.items(), key=lambda kv: -kv[1])[:8]),
+        "collectives": coll,
+        "loops": mod.loop_summary()[:8],
+    }

@@ -1,0 +1,211 @@
+"""Logical-axis -> mesh PartitionSpec mapping (the array-resize knob at the
+distributed level: GTA re-arranges lanes via SysCSR, we re-arrange the mesh
+factorization per architecture x shape).
+
+Default rules:
+  embed   -> FSDP over the data axes (ZeRO-3: parameters, grads and
+             optimizer state shard over (pod, data) — required for the
+             236B config to fit)
+  heads/kv/ff/vocab/inner/experts -> "model"  (TP / EP)
+  layers  -> never sharded (scan dim)
+
+``shardings_for_params`` / ``batch_pspec`` / ``cache_pspec`` produce the
+NamedSharding trees pjit consumes; ``constrain`` is the activation
+annotation helper used inside model code boundaries.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import dp_axes
+from repro.models.config import ModelConfig
+
+PyTree = Any
+
+MODEL_AXIS = "model"
+
+
+def default_rules(mesh, *, fsdp: bool = True) -> Dict[str, Any]:
+    dp = dp_axes(mesh)
+    return {
+        "embed": dp if fsdp else None,
+        "heads": MODEL_AXIS,
+        "kv": MODEL_AXIS,
+        "ff": MODEL_AXIS,
+        "vocab": MODEL_AXIS,
+        "inner": MODEL_AXIS,
+        "experts": MODEL_AXIS,
+        "layers": None,
+        None: None,
+    }
+
+
+def _axis_divisible(dim: int, mesh, axis) -> bool:
+    if axis is None:
+        return True
+    sizes = dict(mesh.shape)
+    if isinstance(axis, (tuple, list)):
+        total = 1
+        for a in axis:
+            total *= sizes[a]
+    else:
+        total = sizes[axis]
+    return dim % total == 0
+
+
+def spec_for(axes: Tuple[Optional[str], ...], shape: Tuple[int, ...],
+             mesh, rules: Dict[str, Any]) -> P:
+    """PartitionSpec for one param from its logical axes; axes whose dim is
+    not divisible by the assigned mesh extent fall back to replication
+    (GSPMD would pad, but memory analysis is cleaner without)."""
+    entries = []
+    used = set()
+    for dim, ax in zip(shape, axes):
+        target = rules.get(ax, None)
+        # one mesh axis may appear only once in a spec
+        t = tuple(target) if isinstance(target, (tuple, list)) else (
+            (target,) if target else ())
+        if any(x in used for x in t) or not _axis_divisible(dim, mesh, target):
+            entries.append(None)
+            continue
+        used.update(t)
+        entries.append(target if not isinstance(target, list) else
+                       tuple(target))
+    return P(*entries)
+
+
+def shardings_for_params(cfg: ModelConfig, mesh, *, fsdp: bool = True,
+                         rules: Optional[Dict] = None) -> PyTree:
+    """NamedSharding tree parallel to network.param_defs(cfg)."""
+    from repro.models import network as N
+    rules = rules or default_rules(mesh, fsdp=fsdp)
+    defs = N.param_defs(cfg)
+
+    from repro.models.layers import ParamDef, is_def
+
+    def f(d: ParamDef):
+        return NamedSharding(mesh, spec_for(d.axes, d.shape, mesh, rules))
+
+    return jax.tree.map(f, defs, is_leaf=is_def)
+
+
+def quantized_param_shardings(cfg: ModelConfig, mesh, *, fsdp: bool = False,
+                              rules: Optional[Dict] = None) -> PyTree:
+    """Sharding tree matching ``quantize_params(network.init(cfg))`` —
+    QuantTensor leaves get (q: the weight's spec, scale: the spec's last
+    entry).  Default fsdp=False: the int8 serving path keeps weights
+    stationary on the model axis instead of re-gathering FSDP shards every
+    decode step (§Perf H5)."""
+    from repro.models import network as N
+    from repro.models.layers import ParamDef, is_def
+    from repro.quant.policy import DEFAULT_QUANT_KEYS, QuantTensor
+
+    rules = rules or default_rules(mesh, fsdp=fsdp)
+    defs = N.param_defs(cfg)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(defs,
+                                                         is_leaf=is_def)
+    out = []
+    for path, d in flat:
+        name = str(getattr(path[-1], "key", "")) if path else ""
+        spec = spec_for(d.axes, d.shape, mesh, rules)
+        size = 1
+        for s in d.shape:
+            size *= s
+        if (name in DEFAULT_QUANT_KEYS and len(d.shape) in (2, 3)
+                and size >= (1 << 16)):
+            # scale shape = weight shape minus the contraction (-2) dim
+            entries = list(spec) + [None] * (len(d.shape) - len(spec))
+            scale_spec = P(*(entries[:-2] + entries[-1:]))
+            out.append(QuantTensor(NamedSharding(mesh, spec),
+                                   NamedSharding(mesh, scale_spec)))
+        else:
+            out.append(NamedSharding(mesh, spec))
+    return jax.tree.unflatten(treedef, out)
+
+
+def batch_pspec(mesh) -> P:
+    """Leading-dim (global batch) sharding over the data axes."""
+    dp = dp_axes(mesh)
+    return P(dp if len(dp) > 1 else dp[0])
+
+
+def batch_shardings(batch_tree: PyTree, mesh) -> PyTree:
+    bp = batch_pspec(mesh)
+
+    def f(x):
+        shape = x.shape
+        dp_total = 1
+        for a in dp_axes(mesh):
+            dp_total *= dict(mesh.shape)[a]
+        if shape and shape[0] % dp_total == 0:
+            return NamedSharding(mesh, P(*bp, *([None] * (len(shape) - 1))))
+        # batch not divisible (e.g. long_500k B=1): shard dim 1 (seq) instead
+        if len(shape) >= 2 and shape[1] % dp_total == 0:
+            return NamedSharding(mesh, P(None, *bp,
+                                         *([None] * (len(shape) - 2))))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(f, batch_tree)
+
+
+#: model-axis dim per cache kind (None = replicate over model).  Sequence
+#: and feature dims must NOT model-shard: both force per-step all-gathers
+#: of the whole cache (§Perf H4/H5 iterations found each the hard way).
+_CACHE_MODEL_DIM = {
+    "k": 2, "v": 2,          # (B, T, KV, hd) -> KV heads
+    "c_kv": None,            # (B, T, r)      -> latent: replicate
+    "k_pe": None,            # (B, T, rp)
+    "ssm": 1,                # (B, H, P, N)   -> SSD heads
+    "conv": None,            # (B, K-1, conv_dim): tiny
+}
+
+
+def cache_shardings(cache_tree: PyTree, mesh, batch: int) -> PyTree:
+    """KV/SSM cache sharding, key-aware: batch over the data axes when
+    divisible (large seq dim otherwise, the B=1 long-context case); the
+    kind-specific heads dim over model."""
+    dp = dp_axes(mesh)
+    sizes = dict(mesh.shape)
+    dp_total = 1
+    for a in dp:
+        dp_total *= sizes[a]
+    mp = sizes[MODEL_AXIS]
+    dspec = dp if len(dp) > 1 else dp[0]
+
+    def f(path, x):
+        shape = x.shape
+        if not shape:  # pos scalars
+            return NamedSharding(mesh, P())
+        name = str(getattr(path[-1], "key", "")) if path else ""
+        entries = [None] * len(shape)
+        used_dp = False
+        if shape[0] % dp_total == 0 and shape[0] >= dp_total:
+            entries[0] = dspec
+            used_dp = True
+        mdim = _CACHE_MODEL_DIM.get(name)
+        if (mdim is not None and mdim < len(shape)
+                and shape[mdim] % mp == 0 and shape[mdim] >= mp
+                and entries[mdim] is None):
+            entries[mdim] = MODEL_AXIS
+        if not used_dp and len(shape) >= 3 and name in ("k", "v", "c_kv",
+                                                        "k_pe"):
+            # B=1 long-context: shard the (large) seq dim over data
+            if entries[1] is None and shape[1] % dp_total == 0:
+                entries[1] = dspec
+        return NamedSharding(mesh, P(*entries))
+
+    return jax.tree_util.tree_map_with_path(f, cache_tree)
+
+
+def constrain(x: jax.Array, mesh, spec: P) -> jax.Array:
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def replicated(mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,9 @@
+"""Model zoo: composable layers + pattern-scanned network assembly.
+
+  config     — ModelConfig schema (dense/MoE/SSM/hybrid/VLM/audio)
+  layers     — primitives + single-source ParamDef system
+  attention  — blockwise GQA / MLA, prefill & decode
+  moe        — sort-based capacity dispatch, EP-shardable
+  ssm        — Mamba2 SSD (chunked p-GEMM form) + O(1) decode
+  network    — assembly: scan over pattern groups, loss, serve steps
+"""

@@ -1,0 +1,187 @@
+"""Model configuration schema covering the 10 assigned architectures.
+
+One dataclass describes dense / MoE / SSM / hybrid / VLM / audio LM
+backbones; family-specific behaviour is driven by fields, not subclasses,
+so the same network assembly (models.network) serves every arch and the
+launcher selects everything with ``--arch``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional, Tuple
+
+
+class BlockKind(enum.Enum):
+    ATTN = "attn"              # attention + MLP (dense or MoE by config)
+    ATTN_LOCAL = "attn_local"  # sliding-window attention + MLP
+    MAMBA2 = "mamba2"          # SSD block (attention-free)
+    SHARED_ATTN = "shared_attn"  # zamba2-style shared-weight attention block
+
+
+class RopeMode(enum.Enum):
+    FULL = "full"          # rotary over the whole head dim
+    HALF = "half"          # chatglm-style 2d rope: first half of head dims
+    NONE = "none"          # no positional rotation (e.g. hubert encoder)
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared_experts: int = 0
+    d_ff_shared: int = 0
+    capacity_factor: float = 1.25
+    router_noise: float = 0.0
+    aux_loss_weight: float = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 256          # SSD chunk length (the p-GEMM block size)
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-V2 multi-head latent attention dims."""
+
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 1536
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None         # default d_model // n_heads
+    # --- block pattern -----------------------------------------------------
+    #: the repeating unit scanned over; e.g. gemma2 = (ATTN_LOCAL, ATTN)
+    pattern: Tuple[BlockKind, ...] = (BlockKind.ATTN,)
+    #: extra non-repeating tail blocks (e.g. zamba2's trailing mamba layers)
+    tail: Tuple[BlockKind, ...] = ()
+    # --- attention flavor ---------------------------------------------------
+    qkv_bias: bool = False
+    rope_mode: RopeMode = RopeMode.FULL
+    rope_theta: float = 10_000.0
+    local_window: int = 4096               # for ATTN_LOCAL blocks
+    attn_logit_softcap: Optional[float] = None   # gemma2: 50.0
+    final_logit_softcap: Optional[float] = None  # gemma2: 30.0
+    causal: bool = True                    # False => encoder (hubert)
+    post_norms: bool = False               # gemma2 sandwich norms
+    # --- families -----------------------------------------------------------
+    moe: Optional[MoEConfig] = None
+    moe_every: int = 1                     # apply MoE on every k-th ATTN block
+    first_layer_dense_ff: Optional[int] = None   # deepseek-v2 layer-0 dense
+    ssm: Optional[SSMConfig] = None
+    mla: Optional[MLAConfig] = None
+    n_shared_attn_sets: int = 2            # zamba2 alternating shared blocks
+    # --- embedding/head -----------------------------------------------------
+    tie_embeddings: bool = False
+    scale_embeddings: bool = False         # gemma2: * sqrt(d_model)
+    # --- frontend stubs (vlm / audio) ----------------------------------------
+    #: "none" | "patches" (vlm: prefix patch embeddings) | "frames" (audio:
+    #: the entire input is precomputed frame embeddings, no token embedding)
+    frontend: str = "none"
+    frontend_prefix_len: int = 0           # vlm: patch positions per sample
+    # --- numerics -----------------------------------------------------------
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    norm_eps: float = 1e-6
+    act: str = "silu"                      # silu (SwiGLU) | gelu (GeGLU)
+    # --- execution ----------------------------------------------------------
+    attn_block_q: int = 1024               # blockwise-attention query block
+    attn_block_kv: int = 1024              # blockwise-attention kv block
+    remat: bool = True                     # checkpoint each scanned group
+    use_pallas: bool = False               # swap ops.* kernels in (TPU runs)
+    quant_serving: bool = False            # int8 weights on the serve path
+
+    # --- derived -------------------------------------------------------------
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def n_groups_scan(self) -> int:
+        """Number of scanned repeats of ``pattern``."""
+        pat = max(1, len(self.pattern))
+        return (self.n_layers - len(self.tail)) // pat
+
+    @property
+    def is_encoder_only(self) -> bool:
+        return not self.causal
+
+    @property
+    def attention_free(self) -> bool:
+        kinds = set(self.pattern) | set(self.tail)
+        return kinds <= {BlockKind.MAMBA2}
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for long_500k: SSM or hybrid (no dense-KV-growth-bound
+        full-attention stack)."""
+        return BlockKind.MAMBA2 in set(self.pattern) | set(self.tail)
+
+    def validate(self) -> "ModelConfig":
+        pat = max(1, len(self.pattern))
+        if (self.n_layers - len(self.tail)) % pat:
+            raise ValueError(
+                f"{self.name}: n_layers={self.n_layers} minus tail "
+                f"{len(self.tail)} not divisible by pattern {pat}")
+        if self.n_heads % self.n_kv_heads:
+            raise ValueError(f"{self.name}: heads {self.n_heads} not a "
+                             f"multiple of kv heads {self.n_kv_heads}")
+        return self
+
+    def scaled_down(self, **overrides) -> "ModelConfig":
+        """A reduced same-family config for CPU smoke tests."""
+        small = dict(
+            n_layers=len(self.pattern) * 2 + len(self.tail),
+            d_model=128,
+            n_heads=4,
+            n_kv_heads=max(1, min(4, self.n_kv_heads)),
+            head_dim=32,
+            d_ff=256,
+            vocab=512,
+            attn_block_q=64, attn_block_kv=64,
+            param_dtype="float32", compute_dtype="float32",
+            remat=False,
+        )
+        if self.moe is not None:
+            # capacity_factor=4: no token drops at toy scale, so the
+            # prefill/decode == forward contract holds exactly (capacity
+            # dropping legitimately breaks it when T differs between the
+            # full and incremental paths — a property of dropping MoE, not
+            # a bug; production serving raises cf for the same reason).
+            small["moe"] = dataclasses.replace(
+                self.moe, n_experts=min(8, self.moe.n_experts),
+                top_k=min(2, self.moe.top_k), d_ff_expert=128,
+                d_ff_shared=128 if self.moe.n_shared_experts else 0,
+                capacity_factor=4.0)
+        if self.ssm is not None:
+            small["ssm"] = dataclasses.replace(
+                self.ssm, d_state=16, head_dim=16, chunk=32)
+        if self.mla is not None:
+            small["mla"] = MLAConfig(kv_lora_rank=32, q_lora_rank=64,
+                                     qk_nope_head_dim=32, qk_rope_head_dim=16,
+                                     v_head_dim=32)
+        if self.first_layer_dense_ff:
+            small["first_layer_dense_ff"] = 256
+        if self.frontend_prefix_len:
+            small["frontend_prefix_len"] = 8
+        small.update(overrides)
+        return dataclasses.replace(self, **small).validate()

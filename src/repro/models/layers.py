@@ -1,0 +1,243 @@
+"""Layer primitives + the single-source parameter definition system.
+
+Every parameter is declared once as a ``ParamDef`` (shape, logical axes,
+initializer); the same tree yields both the initialized arrays and the
+logical-axis tree that launch/sharding.py maps onto the device mesh.  No
+flax — params are plain nested dicts of jnp arrays, fully pjit-friendly.
+
+Logical axis vocabulary (mapped to mesh axes by launch.sharding):
+  embed   — d_model dim            (FSDP/ZeRO shard target)
+  heads   — attention heads x head_dim fused dim   (TP target)
+  kv      — kv heads x head_dim
+  ff      — MLP hidden             (TP target)
+  vocab   — vocabulary             (TP target)
+  experts — MoE expert dim         (EP target)
+  inner   — SSM inner dim          (TP target)
+  layers  — scan-stacked layer dim (never sharded)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Activation-sharding policy (set by launch code before tracing; no-op in
+# plain CPU tests).  GSPMD's whole-graph propagation replicates large
+# intermediates without these hints — the dry-run memory analysis is how we
+# found each call site.
+# ---------------------------------------------------------------------------
+
+_ACT_MESH = None          # jax.sharding.Mesh or None
+_DP_AXES: Tuple[str, ...] = ()
+_MP_AXIS: Optional[str] = None
+
+
+def set_activation_mesh(mesh) -> None:
+    """Enable activation constraints for subsequent traces (launch layer).
+    Pass None to disable."""
+    global _ACT_MESH, _DP_AXES, _MP_AXIS
+    if mesh is None:
+        _ACT_MESH, _DP_AXES, _MP_AXIS = None, (), None
+        return
+    _ACT_MESH = mesh
+    _DP_AXES = tuple(a for a in mesh.axis_names if a != "model")
+    _MP_AXIS = "model" if "model" in mesh.axis_names else None
+
+
+def shard_act(x: jax.Array, dims: str) -> jax.Array:
+    """Constrain activation sharding.  ``dims``: one code per axis of x —
+      'b' -> data axes (batch),  'm' -> model axis,
+      '.' -> UNCONSTRAINED (GSPMD keeps its preferred layout — forcing
+             replication here caused per-scan-step all-gathers),
+      'r' -> force replicated.
+    Axes whose size is not divisible by the target extent fall back to
+    unconstrained, so the same model code runs on any mesh (or none)."""
+    if _ACT_MESH is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec
+    U = PartitionSpec.UNCONSTRAINED
+    sizes = dict(_ACT_MESH.shape)
+    dp_total = 1
+    for a in _DP_AXES:
+        dp_total *= sizes[a]
+    entries = []
+    for code, dim in zip(dims, x.shape):
+        if code == "b" and dp_total > 1 and dim % dp_total == 0:
+            entries.append(_DP_AXES if len(_DP_AXES) > 1 else _DP_AXES[0])
+        elif (code == "m" and _MP_AXIS and dim % sizes[_MP_AXIS] == 0
+              and dim >= sizes[_MP_AXIS]):
+            entries.append(_MP_AXIS)
+        elif code == "r":
+            entries.append(None)
+        else:
+            entries.append(U)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_ACT_MESH, PartitionSpec(*entries)))
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones | small_normal
+    scale: float = 0.02
+
+    def initialize(self, key: jax.Array, dtype) -> jax.Array:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, dtype)
+        std = self.scale
+        return (jax.random.normal(key, self.shape, jnp.float32) * std
+                ).astype(dtype)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_params(defs: PyTree, key: jax.Array, dtype) -> PyTree:
+    """Materialize a ParamDef tree into arrays (deterministic per-leaf keys)."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(key, len(leaves))
+    arrays = [d.initialize(k, dtype) for d, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, arrays)
+
+
+def logical_axes(defs: PyTree) -> PyTree:
+    """The parallel tree of logical-axis tuples."""
+    return jax.tree.map(lambda d: d.axes, defs, is_leaf=is_def)
+
+
+def stack_defs(defs: PyTree, n: int) -> PyTree:
+    """Prepend a scanned 'layers' dim to every ParamDef in the tree."""
+    def f(d: ParamDef) -> ParamDef:
+        return ParamDef((n,) + d.shape, ("layers",) + d.axes, d.init, d.scale)
+    return jax.tree.map(f, defs, is_leaf=is_def)
+
+
+# ---------------------------------------------------------------------------
+# Primitives
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + gamma.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+def rope_tables(seq: int, dim: int, theta: float,
+                offset: int | jax.Array = 0) -> Tuple[jax.Array, jax.Array]:
+    """cos/sin tables (seq, dim/2), fp32."""
+    half = dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    pos = jnp.arange(seq, dtype=jnp.float32) + jnp.asarray(offset, jnp.float32)
+    ang = pos[:, None] * freqs[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array,
+               rotate_fraction: float = 1.0) -> jax.Array:
+    """x: (B, S, H, D).  Rotates the first ``rotate_fraction`` of D (the
+    chatglm 2d-rope case uses 0.5), split-half convention."""
+    d = x.shape[-1]
+    rd = int(d * rotate_fraction)
+    rd -= rd % 2
+    xr, xp = x[..., :rd], x[..., rd:]
+    x1, x2 = jnp.split(xr, 2, axis=-1)
+    c = cos[None, :, None, : rd // 2].astype(x.dtype)
+    s = sin[None, :, None, : rd // 2].astype(x.dtype)
+    rot = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return jnp.concatenate([rot, xp], axis=-1) if rd < d else rot
+
+
+def dense(x: jax.Array, w, b: Optional[jax.Array] = None) -> jax.Array:
+    """x (..., K) @ w (K, N) in the compute dtype with fp32 accumulation.
+
+    ``w`` may be a ``repro.quant.policy.QuantTensor`` (int8 + per-channel
+    scale) — the GTA INT8 serving path — in which case the matmul runs on
+    the int8 operand and dequantizes in the epilogue (exactly what
+    kernels/quant_matmul does on TPU; here expressed in XLA so it lowers
+    everywhere)."""
+    if hasattr(w, "q") and hasattr(w, "scale"):     # QuantTensor
+        acc = jax.lax.dot_general(
+            x, w.q.astype(x.dtype), (((x.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        out = acc * w.scale.astype(jnp.float32)
+    else:
+        # §Perf H1: emit the dot result in the COMPUTE dtype.  The MXU still
+        # accumulates each dot in fp32 internally; emitting bf16 means the
+        # tensor-parallel partial-sum all-reduce GSPMD attaches to this dot
+        # moves bf16, not f32 — the single largest collective payload in
+        # every train cell.  (fp32 configs are unaffected: x.dtype == f32.)
+        out = jax.lax.dot_general(
+            x, w.astype(x.dtype), (((x.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=x.dtype)
+    if b is not None:
+        out = out + b.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def activation(x: jax.Array, kind: str) -> jax.Array:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_defs(d_model: int, d_ff: int, scale: float = 0.02) -> Dict:
+    return {
+        "wi_gate": ParamDef((d_model, d_ff), ("embed", "ff"), scale=scale),
+        "wi_up": ParamDef((d_model, d_ff), ("embed", "ff"), scale=scale),
+        "wo": ParamDef((d_ff, d_model), ("ff", "embed"), scale=scale),
+    }
+
+
+def mlp_apply(p: Dict, x: jax.Array, act: str) -> jax.Array:
+    g = activation(dense(x, p["wi_gate"]), act)
+    u = dense(x, p["wi_up"])
+    return dense(g * u, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def embed_defs(vocab: int, d_model: int) -> Dict:
+    return {"table": ParamDef((vocab, d_model), ("vocab", "embed"),
+                              scale=0.02)}
+
+
+def embed_apply(p: Dict, tokens: jax.Array, dtype) -> jax.Array:
+    return jnp.take(p["table"].astype(dtype), tokens, axis=0)
+
+
+def head_apply(table_or_w: jax.Array, x: jax.Array,
+               cap: Optional[float] = None) -> jax.Array:
+    """Logits: x (B,S,D) @ w (V,D)^T -> fp32 (B,S,V), with optional softcap."""
+    logits = jax.lax.dot_general(
+        x, table_or_w.astype(x.dtype),
+        (((x.ndim - 1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    return softcap(logits, cap)

@@ -1,0 +1,340 @@
+"""Network assembly: pattern-scanned blocks, embedding/head, train & serve.
+
+The repeating block ``pattern`` (config) is scanned with stacked parameters
+(compact HLO — essential for 40-cell dry-run compiles); heterogeneous
+families are patterns of mixed BlockKind (gemma2: local/global pairs,
+zamba2: 5x mamba + shared attention).  Params are ParamDef trees
+(models.layers) so logical sharding axes ship with the structure.
+
+Public API (all pure functions):
+  param_defs(cfg)                      -> ParamDef tree
+  init(cfg, key)                      -> params
+  forward(params, cfg, batch)          -> (logits, aux_loss)
+  loss_fn(params, cfg, batch)          -> (loss, metrics)
+  init_caches(cfg, batch, max_len, dt) -> cache tree
+  prefill(params, cfg, tokens, caches) -> (logits, caches)
+  decode_step(params, cfg, tok, caches)-> (logits, caches)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models.config import BlockKind, ModelConfig, RopeMode
+from repro.models.layers import (ParamDef, dense, embed_defs, head_apply,
+                                 init_params, logical_axes, mlp_apply,
+                                 mlp_defs, rms_norm, shard_act,
+                                 stack_defs)
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+
+def _norm_def(d: int) -> ParamDef:
+    return ParamDef((d,), ("embed",), init="zeros")
+
+
+def _block_defs(cfg: ModelConfig, kind: BlockKind, *, dense_ff: int = 0
+                ) -> Dict:
+    d = cfg.d_model
+    if kind is BlockKind.MAMBA2:
+        return {"ln1": _norm_def(d), "mamba": S.mamba2_defs(cfg)}
+    if kind is BlockKind.SHARED_ATTN:
+        return {"ln1": _norm_def(d)}   # weights live in the shared stack
+    # ATTN / ATTN_LOCAL
+    defs: Dict = {"ln1": _norm_def(d), "ln2": _norm_def(d)}
+    defs["attn"] = A.mla_defs(cfg) if cfg.mla is not None else A.attn_defs(cfg)
+    if cfg.post_norms:
+        defs["post_ln1"] = _norm_def(d)
+        defs["post_ln2"] = _norm_def(d)
+    if dense_ff:
+        defs["mlp"] = mlp_defs(d, dense_ff)
+    elif cfg.moe is not None:
+        defs["moe"] = M.moe_defs(cfg)
+    else:
+        defs["mlp"] = mlp_defs(d, cfg.d_ff)
+    return defs
+
+
+def param_defs(cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    defs: Dict = {"final_norm": _norm_def(d)}
+    if cfg.frontend != "frames":
+        defs["embed"] = embed_defs(cfg.vocab, d)
+        if not cfg.tie_embeddings:
+            defs["lm_head"] = ParamDef((cfg.vocab, d), ("vocab", "embed"))
+    else:
+        defs["frame_proj"] = {"w": ParamDef((d, d), ("embed", None)),
+                              "b": ParamDef((d,), (None,), init="zeros")}
+        defs["lm_head"] = ParamDef((cfg.vocab, d), ("vocab", "embed"))
+    if cfg.frontend == "patches":
+        defs["vision_proj"] = {"w": ParamDef((d, d), ("embed", None)),
+                               "b": ParamDef((d,), (None,), init="zeros")}
+
+    group = tuple(_block_defs(cfg, k) for k in cfg.pattern)
+    defs["blocks"] = stack_defs(group, cfg.n_groups_scan)
+    if cfg.tail:
+        defs["tail_blocks"] = tuple(_block_defs(cfg, k) for k in cfg.tail)
+    if cfg.first_layer_dense_ff:
+        defs["first_block"] = _block_defs(cfg, BlockKind.ATTN,
+                                          dense_ff=cfg.first_layer_dense_ff)
+    if BlockKind.SHARED_ATTN in cfg.pattern + cfg.tail:
+        shared = {"ln1": _norm_def(d), "attn": A.attn_defs(cfg)}
+        defs["shared_attn"] = stack_defs(shared, cfg.n_shared_attn_sets)
+    return defs
+
+
+def init(cfg: ModelConfig, key: jax.Array) -> PyTree:
+    return init_params(param_defs(cfg), key, jnp.dtype(cfg.param_dtype))
+
+
+def param_logical_axes(cfg: ModelConfig) -> PyTree:
+    return logical_axes(param_defs(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+
+def _apply_block(cfg: ModelConfig, kind: BlockKind, p: Dict, x: jax.Array, *,
+                 pos_offset, cache: Optional[Dict], shared: Optional[Dict],
+                 dense_ff: bool = False
+                 ) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    eps = cfg.norm_eps
+
+    if kind is BlockKind.MAMBA2:
+        h = rms_norm(x, p["ln1"], eps)
+        out, new_cache = S.mamba2_block(p["mamba"], h, cfg, state=cache)
+        return x + out, new_cache, aux
+
+    if kind is BlockKind.SHARED_ATTN:
+        h = rms_norm(x, shared["ln1"], eps)
+        out, new_cache = A.gqa_attention(shared["attn"], h, cfg,
+                                         kind=BlockKind.ATTN,
+                                         pos_offset=pos_offset, cache=cache)
+        return x + out, new_cache, aux
+
+    # ATTN / ATTN_LOCAL
+    h = rms_norm(x, p["ln1"], eps)
+    if cfg.mla is not None:
+        out, new_cache = A.mla_attention(p["attn"], h, cfg,
+                                         pos_offset=pos_offset, cache=cache)
+    else:
+        out, new_cache = A.gqa_attention(p["attn"], h, cfg, kind=kind,
+                                         pos_offset=pos_offset, cache=cache)
+    if cfg.post_norms:
+        out = rms_norm(out, p["post_ln1"], eps)
+    x = x + out
+
+    h = rms_norm(x, p["ln2"], eps)
+    if "moe" in p and not dense_ff:
+        out, aux = M.moe_apply(p["moe"], h, cfg)
+    else:
+        out = mlp_apply(p["mlp"], h, cfg.act)
+    if cfg.post_norms:
+        out = rms_norm(out, p["post_ln2"], eps)
+    return x + out, new_cache, aux
+
+
+def _group_fn(cfg: ModelConfig, shared_stack, pos_offset, carry, scanned, *,
+              with_cache: bool):
+    """One scanned repeat of the pattern.  carry = (x, aux).
+    ``shared_stack`` (zamba2's alternating shared-attention weight sets) and
+    ``pos_offset`` are closed over — loop-invariant.  Keeping pos_offset out
+    of the carry preserves its static-zero identity so the triangular flash
+    schedule (§Perf H2) can fire inside the scan."""
+    x, aux = carry
+    if with_cache:
+        gparams, gidx, gcache = scanned
+        new_caches = []
+    else:
+        gparams, gidx = scanned
+        gcache = [None] * len(cfg.pattern)
+
+    shared_set = None
+    for i, kind in enumerate(cfg.pattern):
+        if kind is BlockKind.SHARED_ATTN:
+            sidx = gidx % cfg.n_shared_attn_sets
+            shared_set = jax.tree.map(lambda a: a[sidx], shared_stack)
+        x, nc, a = _apply_block(cfg, kind, gparams[i], x,
+                                pos_offset=pos_offset, cache=gcache[i],
+                                shared=shared_set)
+        x = shard_act(x, "b..")
+        aux = aux + a
+        if with_cache:
+            new_caches.append(nc if nc is not None else gcache[i])
+    out_carry = (x, aux)
+    return out_carry, (tuple(new_caches) if with_cache else None)
+
+
+def _run_blocks(params: PyTree, cfg: ModelConfig, x: jax.Array, *,
+                pos_offset, caches: Optional[PyTree]
+                ) -> Tuple[jax.Array, Optional[PyTree], jax.Array]:
+    """Applies first_block (if any), the scanned pattern groups, and tail
+    blocks.  caches: {"first":..., "groups": stacked, "tail": tuple}."""
+    aux = jnp.zeros((), jnp.float32)
+    with_cache = caches is not None
+    new_caches: Dict[str, Any] = {}
+
+    if "first_block" in params:
+        c = caches["first"] if with_cache else None
+        x, nc, a = _apply_block(cfg, BlockKind.ATTN, params["first_block"], x,
+                                pos_offset=pos_offset, cache=c, shared=None,
+                                dense_ff=True)
+        aux += a
+        if with_cache:
+            new_caches["first"] = nc
+
+    n_groups = cfg.n_groups_scan
+    gidx = jnp.arange(n_groups, dtype=jnp.int32)
+    body = functools.partial(_group_fn, cfg, params.get("shared_attn"),
+                             pos_offset, with_cache=with_cache)
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    if with_cache:
+        xs = (params["blocks"], gidx, caches["groups"])
+    else:
+        xs = (params["blocks"], gidx)
+    (x, aux), stacked_caches = jax.lax.scan(body, (x, aux), xs)
+    if with_cache:
+        new_caches["groups"] = stacked_caches
+
+    if "tail_blocks" in params:
+        tail_caches = []
+        for i, kind in enumerate(cfg.tail):
+            c = caches["tail"][i] if with_cache else None
+            x, nc, a = _apply_block(cfg, kind, params["tail_blocks"][i], x,
+                                    pos_offset=pos_offset, cache=c,
+                                    shared=None)
+            aux += a
+            tail_caches.append(nc)
+        if with_cache:
+            new_caches["tail"] = tuple(tail_caches)
+
+    return x, (new_caches if with_cache else None), aux
+
+
+# ---------------------------------------------------------------------------
+# Embedding / forward / loss
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params: PyTree, cfg: ModelConfig, batch: Dict
+                  ) -> jax.Array:
+    dt = jnp.dtype(cfg.compute_dtype)
+    if cfg.frontend == "frames":
+        x = batch["frames"].astype(dt)
+        return dense(x, params["frame_proj"]["w"], params["frame_proj"]["b"])
+    tok = jnp.take(params["embed"]["table"].astype(dt), batch["tokens"],
+                   axis=0)
+    if cfg.scale_embeddings:
+        tok = tok * jnp.asarray(cfg.d_model ** 0.5, dt)
+    if cfg.frontend == "patches" and "patches" in batch:
+        # prefill/train: prefix the (stub) patch embeddings; decode steps
+        # carry tokens only — the image already lives in the KV cache.
+        pe = dense(batch["patches"].astype(dt), params["vision_proj"]["w"],
+                   params["vision_proj"]["b"])
+        tok = jnp.concatenate([pe, tok], axis=1)
+    return shard_act(tok, "b..")
+
+
+def forward(params: PyTree, cfg: ModelConfig, batch: Dict
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward.  Returns (logits fp32 (B,S,V), aux_loss)."""
+    x = _embed_inputs(params, cfg, batch)
+    x, _, aux = _run_blocks(params, cfg, x, pos_offset=0, caches=None)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = (params["embed"]["table"] if cfg.tie_embeddings
+            else params["lm_head"])
+    logits = shard_act(head_apply(head, x, cfg.final_logit_softcap), "b.m")
+    return logits, aux
+
+
+def loss_fn(params: PyTree, cfg: ModelConfig, batch: Dict
+            ) -> Tuple[jax.Array, Dict]:
+    """Token-level CE (labels == -1 masked) + MoE aux loss."""
+    logits, aux = forward(params, cfg, batch)
+    labels = batch["labels"]
+    if cfg.frontend == "patches":   # labels align to the text suffix
+        logits = logits[:, -labels.shape[1]:]
+    mask = (labels >= 0).astype(jnp.float32)
+    labels_safe = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels_safe[..., None],
+                               axis=-1)[..., 0]
+    ce = (lse - gold) * mask
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(ce) / denom + aux
+    return loss, {"ce": jnp.sum(ce) / denom, "aux": aux,
+                  "tokens": jnp.sum(mask)}
+
+
+# ---------------------------------------------------------------------------
+# Serving: caches, prefill, decode
+# ---------------------------------------------------------------------------
+
+def _block_cache(cfg: ModelConfig, kind: BlockKind, batch: int, max_len: int,
+                 dtype):
+    if kind is BlockKind.MAMBA2:
+        return S.make_ssm_state(cfg, batch, dtype)
+    return A.make_kv_cache(cfg, batch, max_len, dtype)
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype=None
+                ) -> PyTree:
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    caches: Dict[str, Any] = {}
+    if cfg.first_layer_dense_ff:
+        caches["first"] = _block_cache(cfg, BlockKind.ATTN, batch, max_len,
+                                       dtype)
+
+    def stack(mk):
+        return jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[mk() for _ in range(cfg.n_groups_scan)]) if (
+            cfg.n_groups_scan > 1) else jax.tree.map(
+            lambda x: x[None], mk())
+
+    caches["groups"] = stack(lambda: tuple(
+        _block_cache(cfg, k, batch, max_len, dtype) for k in cfg.pattern))
+    if cfg.tail:
+        caches["tail"] = tuple(
+            _block_cache(cfg, k, batch, max_len, dtype) for k in cfg.tail)
+    return caches
+
+
+def _serve(params: PyTree, cfg: ModelConfig, batch: Dict, caches: PyTree,
+           pos_offset) -> Tuple[jax.Array, PyTree]:
+    x = _embed_inputs(params, cfg, batch)
+    x, new_caches, _ = _run_blocks(params, cfg, x, pos_offset=pos_offset,
+                                   caches=caches)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = (params["embed"]["table"] if cfg.tie_embeddings
+            else params["lm_head"])
+    logits = head_apply(head, x[:, -1:], cfg.final_logit_softcap)
+    return logits[:, 0], new_caches
+
+
+def prefill(params: PyTree, cfg: ModelConfig, batch: Dict, caches: PyTree
+            ) -> Tuple[jax.Array, PyTree]:
+    """Processes the prompt; returns (next-token logits (B,V), caches)."""
+    return _serve(params, cfg, batch, caches, pos_offset=0)
+
+
+def decode_step(params: PyTree, cfg: ModelConfig, tokens: jax.Array,
+                caches: PyTree, pos: jax.Array
+                ) -> Tuple[jax.Array, PyTree]:
+    """One autoregressive step.  tokens (B, 1); pos scalar int32 (uniform
+    position — the serving layer handles ragged batches by max-pos)."""
+    return _serve(params, cfg, {"tokens": tokens}, caches, pos_offset=pos)

@@ -1,0 +1,227 @@
+"""Mamba2 / SSD block (state-space duality), chunked p-GEMM formulation.
+
+SSD is the paper's classification made flesh: a recurrence with enough
+arithmetic intensity is *rewritten as block GEMMs* — the chunked algorithm
+computes intra-chunk contributions as (C B^T ⊙ L) X batched matmuls and
+carries inter-chunk state with a scan.  All heavy ops below are einsums that
+the MXU path executes; gating/softplus/decay are vector-path work.
+
+Layout follows Mamba2: d_inner = expand * d_model, heads = d_inner /
+head_dim, B/C shared per group (n_groups), scalar A per head, conv1d width
+d_conv on (x, B, C).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, SSMConfig
+from repro.models.layers import ParamDef, dense, rms_norm, shard_act
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int, int, int]:
+    s: SSMConfig = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    return d_inner, n_heads, s.d_state, s.n_groups, conv_dim
+
+
+def mamba2_defs(cfg: ModelConfig) -> Dict:
+    s: SSMConfig = cfg.ssm
+    d = cfg.d_model
+    d_inner, n_heads, d_state, n_groups, conv_dim = _dims(cfg)
+    return {
+        # fused input projection: [z (gate), x, B, C, dt]
+        "in_proj": ParamDef(
+            (d, 2 * d_inner + 2 * n_groups * d_state + n_heads),
+            ("embed", "inner")),
+        "conv_w": ParamDef((s.d_conv, conv_dim), (None, "inner"), scale=0.2),
+        "conv_b": ParamDef((conv_dim,), ("inner",), init="zeros"),
+        "A_log": ParamDef((n_heads,), ("inner",), init="zeros"),
+        "D": ParamDef((n_heads,), ("inner",), init="ones"),
+        "dt_bias": ParamDef((n_heads,), ("inner",), init="zeros"),
+        "norm": ParamDef((d_inner,), ("inner",), init="zeros"),
+        "out_proj": ParamDef((d_inner, d), ("inner", "embed")),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    d_inner, n_heads, d_state, n_groups, _ = _dims(cfg)
+    splits = [d_inner, 2 * d_inner, 2 * d_inner + n_groups * d_state,
+              2 * d_inner + 2 * n_groups * d_state]
+    z, x, Bc, Cc, dt = jnp.split(zxbcdt, splits, axis=-1)
+    return z, x, Bc, Cc, dt
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d.  x (B,S,C); w (K,C); returns (y, new_state)
+    where state carries the trailing K-1 inputs for decode."""
+    K = w.shape[0]
+    if state is None:
+        ctx = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        ctx = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(ctx[:, i:i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(K))
+    y = jax.nn.silu(y + b[None, None, :])
+    new_state = ctx[:, -(K - 1):, :] if K > 1 else ctx[:, :0, :]
+    return y, new_state
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                Cm: jax.Array, chunk: int,
+                h0: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """SSD scan in chunked/dual form.
+
+    x  (B, S, H, P)   — inputs per head (P = head_dim)
+    dt (B, S, H)      — positive step sizes (softplus applied by caller)
+    A  (H,)           — negative per-head decay rates
+    Bm, Cm (B, S, G, N) — input/output projections (G groups, N = d_state)
+    h0 (B, H, P, N)   — initial state (decode/restart), or None.
+
+    Returns (y (B,S,H,P), h_final (B,H,P,N)).
+    """
+    Bb, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    rep = H // G
+
+    # broadcast groups to heads
+    Bh = jnp.repeat(Bm, rep, axis=2)              # (B,S,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=2)
+
+    xc = shard_act(x.reshape(Bb, nc, chunk, H, P), "b..m.")
+    dtc = shard_act(dt.reshape(Bb, nc, chunk, H), "b..m")
+    Bc = shard_act(Bh.reshape(Bb, nc, chunk, H, N), "b..m.")
+    Cc = shard_act(Ch.reshape(Bb, nc, chunk, H, N), "b..m.")
+
+    dA = dtc * A[None, None, None, :]             # (B,nc,Q,H) negative
+    cums = jnp.cumsum(dA, axis=2)                 # within-chunk cumulative
+
+    # intra-chunk: L[s,t] = exp(cums[s]-cums[t]) for s>=t (decay between t,s)
+    seg = cums[:, :, :, None, :] - cums[:, :, None, :, :]   # (B,nc,Q,Q,H)
+    seg = shard_act(seg, "b...m")
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    # scores (B,nc,Q,Q,H): C_s · B_t, masked+decayed, times dt_t
+    sc = shard_act(jnp.einsum("bcshn,bcthn->bcsth", Cc, Bc), "b...m")
+    sc = sc * L * dtc[:, :, None, :, :]
+    y_intra = jnp.einsum("bcsth,bcthp->bcshp", sc, xc)
+
+    # chunk-final states: sum_t exp(cums[Q-1]-cums[t]) dt_t B_t x_t
+    decay_to_end = jnp.exp(cums[:, :, -1:, :] - cums)        # (B,nc,Q,H)
+    w = dtc * decay_to_end                                    # (B,nc,Q,H)
+    chunk_states = shard_act(
+        jnp.einsum("bcthp,bcthn->bchpn", xc * w[..., None], Bc), "b.m..")
+
+    # inter-chunk recurrence over chunk index
+    chunk_decay = jnp.exp(cums[:, :, -1, :])                  # (B,nc,H)
+
+    def scan_fn(h, inp):
+        cs, cd = inp                                          # (B,H,P,N),(B,H)
+        h_new = h * cd[:, :, None, None] + cs
+        return h_new, h
+
+    if h0 is None:
+        h0 = jnp.zeros((Bb, H, P, N), x.dtype)
+    h_fin, h_prevs = jax.lax.scan(
+        scan_fn, h0,
+        (jnp.moveaxis(chunk_states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                     # (B,nc,H,P,N)
+
+    # inter-chunk output: y_t += C_t · (decay_from_start[t] * h_prev)
+    decay_from_start = jnp.exp(cums)                          # (B,nc,Q,H)
+    y_inter = jnp.einsum("bcshn,bchpn->bcshp", Cc, h_prevs)
+    y_inter = y_inter * decay_from_start[..., None]
+
+    y = (y_intra + y_inter).reshape(Bb, S, H, P)
+    return y, h_fin
+
+
+def ssd_step(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+             Cm: jax.Array, h: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Single-token recurrent step (decode): O(1) state update.
+
+    x (B,H,P); dt (B,H); Bm/Cm (B,G,N); h (B,H,P,N)."""
+    G = Bm.shape[1]
+    H = x.shape[1]
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=1)               # (B,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=1)
+    dA = jnp.exp(dt * A[None, :])                  # (B,H)
+    h_new = h * dA[:, :, None, None] + jnp.einsum(
+        "bhp,bhn->bhpn", x * dt[..., None], Bh)
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, h_new)
+    return y, h_new
+
+
+def mamba2_block(p: Dict, x: jax.Array, cfg: ModelConfig, *,
+                 state: Optional[Dict] = None
+                 ) -> Tuple[jax.Array, Optional[Dict]]:
+    """Full Mamba2 block.  state (decode): {"conv": (B,K-1,conv_dim),
+    "ssm": (B,H,P,N)}; None for training/prefill-from-scratch."""
+    s: SSMConfig = cfg.ssm
+    d_inner, n_heads, d_state, n_groups, conv_dim = _dims(cfg)
+    B, S, _ = x.shape
+    P = s.head_dim
+
+    zxbcdt = dense(x, p["in_proj"])
+    z, xi, Bc, Cc, dt = _split_proj(cfg, zxbcdt)
+
+    conv_in = jnp.concatenate([xi, Bc, Cc], axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], p["conv_b"],
+                                      conv_state)
+    xi = conv_out[..., :d_inner]
+    Bc = conv_out[..., d_inner:d_inner + n_groups * d_state]
+    Cc = conv_out[..., d_inner + n_groups * d_state:]
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dtv = jax.nn.softplus(dt.astype(jnp.float32)
+                          + p["dt_bias"].astype(jnp.float32))
+
+    xh = xi.reshape(B, S, n_heads, P)
+    Bm = Bc.reshape(B, S, n_groups, d_state)
+    Cm = Cc.reshape(B, S, n_groups, d_state)
+
+    h0 = state["ssm"] if state is not None else None
+    if S == 1 and state is not None:
+        y, h_fin = ssd_step(xh[:, 0].astype(jnp.float32), dtv[:, 0], A,
+                            Bm[:, 0].astype(jnp.float32),
+                            Cm[:, 0].astype(jnp.float32),
+                            h0.astype(jnp.float32))
+        y = y[:, None]
+    else:
+        chunk = min(s.chunk, S)
+        y, h_fin = ssd_chunked(xh.astype(jnp.float32), dtv, A,
+                               Bm.astype(jnp.float32),
+                               Cm.astype(jnp.float32), chunk,
+                               None if h0 is None
+                               else h0.astype(jnp.float32))
+    y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = dense(y, p["out_proj"])
+    new_state = None
+    if state is not None:
+        new_state = {"conv": new_conv.astype(state["conv"].dtype),
+                     "ssm": h_fin.astype(state["ssm"].dtype)}
+    return out, new_state
+
+
+def make_ssm_state(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    s: SSMConfig = cfg.ssm
+    d_inner, n_heads, d_state, n_groups, conv_dim = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, n_heads, s.head_dim, d_state), dtype),
+    }

@@ -1,0 +1,2 @@
+"""Optimizer substrate: AdamW + schedules + int8 gradient compression."""
+from repro.optim import adamw, compression  # noqa

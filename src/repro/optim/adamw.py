@@ -1,0 +1,115 @@
+"""AdamW + schedules + global-norm clipping, as pure pjit-friendly functions.
+
+Mixed precision: params may be bf16; first/second moments and the update
+math run fp32 (master-quality update without a separate master copy — the
+fp32 m/v pair and fp32 arithmetic bound the drift; a full fp32 master can be
+enabled with ``master_copy=True`` for the strictest parity).
+
+Weight decay is masked off norms/biases/scalars (ndim < 2), the usual rule.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr_peak: float = 3e-4
+    warmup_steps: int = 200
+    total_steps: int = 10_000
+    lr_min_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    master_copy: bool = False
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: PyTree
+    v: PyTree
+    master: Optional[PyTree]
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup -> cosine decay to lr_min_ratio * peak."""
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(1.0, cfg.warmup_steps)
+    prog = jnp.clip((s - cfg.warmup_steps)
+                    / jnp.maximum(1.0, cfg.total_steps - cfg.warmup_steps),
+                    0.0, 1.0)
+    cos = cfg.lr_min_ratio + (1 - cfg.lr_min_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr_peak * jnp.where(s < cfg.warmup_steps, warm, cos)
+
+
+def init(cfg: AdamWConfig, params: PyTree) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    master = (jax.tree.map(lambda p: p.astype(jnp.float32), params)
+              if cfg.master_copy else None)
+    return AdamWState(jnp.zeros((), jnp.int32), zeros,
+                      jax.tree.map(jnp.copy, zeros), master)
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float
+                        ) -> Tuple[PyTree, jax.Array]:
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gn
+
+
+def update(cfg: AdamWConfig, grads: PyTree, state: AdamWState,
+           params: PyTree) -> Tuple[PyTree, AdamWState, Dict[str, jax.Array]]:
+    grads32, gn = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state.m, grads32)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g,
+                     state.v, grads32)
+
+    ref = state.master if cfg.master_copy else params
+
+    def upd(p, m_, v_):
+        pf = p.astype(jnp.float32)
+        u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + cfg.eps)
+        if cfg.weight_decay and p.ndim >= 2:
+            u = u + cfg.weight_decay * pf
+        return pf - lr * u
+
+    new_ref = jax.tree.map(upd, ref, m, v)
+    new_params = jax.tree.map(lambda nr, p: nr.astype(p.dtype),
+                              new_ref, params)
+    new_master = new_ref if cfg.master_copy else None
+    return (new_params,
+            AdamWState(step, m, v, new_master),
+            {"lr": lr, "grad_norm": gn})
+
+
+def state_logical_axes(param_axes: PyTree, master_copy: bool = False
+                       ) -> Any:
+    """Optimizer-state axes mirror the params (m/v shard like their param)."""
+    return AdamWState(
+        step=(),
+        m=param_axes,
+        v=param_axes,
+        master=param_axes if master_copy else None,
+    )

@@ -1,0 +1,82 @@
+"""int8 gradient compression with error feedback for the DP all-reduce.
+
+At 1000+ nodes the data-parallel gradient reduction dominates the
+interconnect; quantizing the payload to int8 with per-tensor scale cuts it
+4x (vs fp32) while stochastic rounding keeps the quantizer unbiased and the
+error-feedback buffer re-injects the residual next step (convergence-safe;
+see 1-bit Adam / EF-SGD literature).
+
+This is the GTA precision story applied to *communication*: the same
+limb/precision machinery that feeds the MXU decides the wire format.
+
+Usage inside a shard_map'd train step:
+    q, scale, new_err = compress(g + err)
+    q_sum = jax.lax.psum(q.astype(jnp.int32), axis)   # int32-safe sum
+    g_hat = decompress(q_sum, scale_psumed) / n
+Plain-pjit flows use ``compress_tree``/``decompress_tree`` around psum.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def compress(x: jax.Array, key: jax.Array
+             ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Stochastic-rounding int8 quantization.
+
+    Returns (q int8, scale f32 scalar, err f32 = x - dequant(q)).
+    E[dequant(q)] == x (unbiased).
+    """
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    y = xf / scale
+    lo = jnp.floor(y)
+    p_up = y - lo                       # in [0,1)
+    u = jax.random.uniform(key, x.shape)
+    q = jnp.clip(lo + (u < p_up), -127, 127).astype(jnp.int8)
+    err = xf - q.astype(jnp.float32) * scale
+    return q, scale, err
+
+
+def decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads: PyTree, err: PyTree, key: jax.Array
+                  ) -> Tuple[PyTree, PyTree, PyTree]:
+    """Apply error-feedback compression leaf-wise.  Returns
+    (q_tree int8, scale_tree, new_err_tree)."""
+    leaves, treedef = jax.tree.flatten(grads)
+    err_leaves = jax.tree.leaves(err)
+    keys = jax.random.split(key, len(leaves))
+    qs, scales, errs = [], [], []
+    for g, e, k in zip(leaves, err_leaves, keys):
+        q, s, ne = compress(g.astype(jnp.float32) + e, k)
+        qs.append(q)
+        scales.append(s)
+        errs.append(ne)
+    return (jax.tree.unflatten(treedef, qs),
+            jax.tree.unflatten(treedef, scales),
+            jax.tree.unflatten(treedef, errs))
+
+
+def decompress_tree(q_tree: PyTree, scale_tree: PyTree) -> PyTree:
+    return jax.tree.map(decompress, q_tree, scale_tree)
+
+
+def init_error(params: PyTree) -> PyTree:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def wire_bytes(grads: PyTree) -> Dict[str, float]:
+    """Diagnostic: fp32 vs int8 payload for the DP reduction."""
+    n = sum(x.size for x in jax.tree.leaves(grads))
+    return {"fp32_bytes": 4.0 * n, "int8_bytes": 1.0 * n,
+            "ratio": 4.0}

@@ -1,0 +1,3 @@
+"""GTA precision policy: QuantTensor weights + scheduler-driven choice."""
+from repro.quant.policy import (QuantTensor, choose_precision,  # noqa
+                                quantize_params, quantize_tensor)

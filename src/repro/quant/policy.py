@@ -1,0 +1,140 @@
+"""Precision policy — the paper's precision x dataflow co-scheduling applied
+to the live framework.
+
+``QuantTensor`` is a pytree-registered weight wrapper (int8 q + per-channel
+scale); ``models.layers.dense`` dispatches on it transparently, so
+quantizing a model for serving is a pure tree rewrite (``quantize_params``)
+and every projection in every arch picks up the GTA INT8 path with zero
+model changes.
+
+``choose_precision`` runs the actual GTA scheduling space (core.scheduler)
+over candidate precisions for a given p-GEMM and returns the cheapest
+precision whose schedule meets an accuracy floor — the paper's §5 "mixed
+scheduling of precision and dataflow" (Fig. 9) as a library call.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pgemm import PGEMM
+from repro.core.precision import BP16, INT8, INT16, Precision
+from repro.core.scheduler import GTAConfig, explore
+
+PyTree = Any
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantTensor:
+    """int8 weight + fp32 per-output-channel scale; mimics an (K, N) array."""
+
+    q: jax.Array        # (K, N) int8
+    scale: jax.Array    # (N,) f32
+
+    @property
+    def shape(self):
+        return self.q.shape
+
+    @property
+    def ndim(self):
+        return self.q.ndim
+
+    @property
+    def dtype(self):
+        return self.q.dtype
+
+    def dequant(self, dtype=jnp.bfloat16) -> jax.Array:
+        return (self.q.astype(jnp.float32)
+                * self.scale[None, :]).astype(dtype)
+
+    def tree_flatten(self):
+        return (self.q, self.scale), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def quantize_tensor(w: jax.Array) -> QuantTensor:
+    """Symmetric per-output-channel int8.  Supports (K, N) and scan-stacked
+    (L, K, N) weights (scale (N,) / (L, N)); scanning slices the QuantTensor
+    pytree per layer, so the dense() dispatch always sees 2-D."""
+    wf = w.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(wf), axis=-2, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(wf / scale), -127, 127).astype(jnp.int8)
+    return QuantTensor(q, jnp.squeeze(scale, axis=-2))
+
+
+DEFAULT_QUANT_KEYS = ("wq", "wk", "wv", "wo", "wi_gate", "wi_up",
+                      "wq_b", "wk_b", "wv_b", "in_proj", "out_proj")
+
+
+def quantize_params(params: PyTree,
+                    keys: Sequence[str] = DEFAULT_QUANT_KEYS,
+                    min_size: int = 1 << 16) -> PyTree:
+    """Rewrite selected 2-D projection weights to QuantTensors (serving).
+
+    Embedding/lm_head stay high precision (quality-critical softmax paths),
+    norms/biases are untouched.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        name = str(getattr(path[-1], "key", "")) if path else ""
+        if (name in keys and hasattr(leaf, "ndim") and leaf.ndim in (2, 3)
+                and leaf.size >= min_size):
+            out.append(quantize_tensor(leaf))
+        else:
+            out.append(leaf)
+    return jax.tree.unflatten(treedef, out)
+
+
+def quant_fraction(params: PyTree) -> float:
+    """Fraction of parameter bytes now stored int8 (diagnostic)."""
+    q = tot = 0
+    for leaf in jax.tree.leaves(
+            params, is_leaf=lambda x: isinstance(x, QuantTensor)):
+        if isinstance(leaf, QuantTensor):
+            q += leaf.q.size
+            tot += leaf.q.size
+        else:
+            tot += getattr(leaf, "size", 0) * max(
+                1, jnp.dtype(getattr(leaf, "dtype", jnp.float32)).itemsize)
+    return q / max(tot, 1)
+
+
+# ---------------------------------------------------------------------------
+# Precision choice via the GTA scheduling space (Fig. 9 as a library call)
+# ---------------------------------------------------------------------------
+
+def choose_precision(op: PGEMM,
+                     candidates: Sequence[Precision] = (INT8, BP16, INT16),
+                     config: Optional[GTAConfig] = None,
+                     quality_floor_bits: int = 8) -> Precision:
+    """Pick the cheapest precision whose GTA schedule minimizes the paper's
+    Σ-squares objective, subject to a minimum width (accuracy floor)."""
+    config = config or GTAConfig(lanes=4)
+    best_p, best_score = None, float("inf")
+    reports = {}
+    for p in candidates:
+        if p.mult_bits < quality_floor_bits:
+            continue
+        choice = explore(dataclasses.replace(op, precision=p), config)
+        reports[p.name] = choice
+    min_c = min(c.cycles for c in reports.values())
+    min_t = min(c.traffic_bytes for c in reports.values())
+    for p in candidates:
+        if p.name not in reports:
+            continue
+        c = reports[p.name]
+        score = (c.cycles / max(min_c, 1e-9)) ** 2 + (
+            c.traffic_bytes / max(min_t, 1e-9)) ** 2
+        if score < best_score:
+            best_p, best_score = p, score
+    return best_p

@@ -1,0 +1,3 @@
+"""Fault tolerance: heartbeats, stragglers, elastic restart driver."""
+from repro.runtime.faults import (FailureInjector, HeartbeatMonitor,  # noqa
+                                  RestartPolicy, run_with_restarts)

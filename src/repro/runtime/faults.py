@@ -1,0 +1,139 @@
+"""Fault-tolerance machinery: heartbeats, straggler policy, restart driver.
+
+On a 1000+-node cluster the failure model is: hosts disappear (preemption,
+HW fault), hosts straggle (thermal, network), and the job must make progress
+with bounded lost work.  The JAX runtime itself aborts collectives on lost
+hosts, so the framework's job is (a) detect, (b) decide, (c) restart from
+the last committed checkpoint with a possibly different host set (elastic).
+
+Everything here is deliberately pure-logic + wall-clock so it is fully
+unit-testable on one process; launch/train.py wires it to the real loop and
+the failure-injection tests exercise the restart path end-to-end.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+
+class HostState(enum.Enum):
+    HEALTHY = "healthy"
+    STRAGGLING = "straggling"
+    DEAD = "dead"
+
+
+@dataclasses.dataclass
+class HeartbeatConfig:
+    interval_s: float = 10.0
+    straggler_factor: float = 3.0   # x median step time => straggling
+    dead_after_s: float = 60.0
+    min_healthy_fraction: float = 0.9  # below this => shrink & restart
+
+
+class HeartbeatMonitor:
+    """Tracks per-host liveness + step latency; classifies hosts."""
+
+    def __init__(self, n_hosts: int, cfg: HeartbeatConfig = HeartbeatConfig(),
+                 clock: Callable[[], float] = time.monotonic):
+        self.cfg = cfg
+        self.clock = clock
+        self.last_seen: Dict[int, float] = {h: clock() for h in range(n_hosts)}
+        self.step_times: Dict[int, float] = {}
+
+    def beat(self, host: int, step_time_s: Optional[float] = None):
+        self.last_seen[host] = self.clock()
+        if step_time_s is not None:
+            self.step_times[host] = step_time_s
+
+    def classify(self) -> Dict[int, HostState]:
+        now = self.clock()
+        med = (sorted(self.step_times.values())[len(self.step_times) // 2]
+               if self.step_times else None)
+        out = {}
+        for h, seen in self.last_seen.items():
+            if now - seen > self.cfg.dead_after_s:
+                out[h] = HostState.DEAD
+            elif (med is not None and h in self.step_times
+                  and self.step_times[h] > self.cfg.straggler_factor * med):
+                out[h] = HostState.STRAGGLING
+            else:
+                out[h] = HostState.HEALTHY
+        return out
+
+    def decision(self) -> str:
+        """'ok' | 'mitigate' (stragglers present) | 'restart' (hosts lost)."""
+        states = self.classify()
+        dead = sum(1 for s in states.values() if s is HostState.DEAD)
+        strag = sum(1 for s in states.values() if s is HostState.STRAGGLING)
+        healthy_frac = 1 - dead / max(1, len(states))
+        if dead and healthy_frac < 1.0:
+            return "restart"
+        if healthy_frac < self.cfg.min_healthy_fraction:
+            return "restart"
+        if strag:
+            return "mitigate"
+        return "ok"
+
+
+# ---------------------------------------------------------------------------
+# Elastic mesh planning
+# ---------------------------------------------------------------------------
+
+def plan_elastic_mesh(n_chips: int, model_parallel: int
+                      ) -> Tuple[int, int]:
+    """Largest (data, model) grid fitting the surviving chips: model
+    parallelism is fixed by the architecture (must divide weights), the data
+    axis absorbs the shrink.  Returns (data, model); chips beyond
+    data*model idle until the next resize."""
+    if n_chips < model_parallel:
+        raise ValueError(f"{n_chips} chips cannot host model_parallel="
+                         f"{model_parallel}")
+    data = n_chips // model_parallel
+    return data, model_parallel
+
+
+@dataclasses.dataclass
+class RestartPolicy:
+    max_restarts: int = 100
+    backoff_s: float = 5.0
+
+
+class FailureInjector:
+    """Deterministic failure schedule for tests/drills: raises at the
+    configured steps (simulating a lost collective / dead host)."""
+
+    def __init__(self, fail_at_steps: Tuple[int, ...] = ()):
+        self.fail_at = set(fail_at_steps)
+        self.fired = set()
+
+    def maybe_fail(self, step: int):
+        if step in self.fail_at and step not in self.fired:
+            self.fired.add(step)
+            raise RuntimeError(f"[injected] host failure at step {step}")
+
+
+def run_with_restarts(train_loop: Callable[[int], int], *,
+                      start_step: int,
+                      final_step: int,
+                      policy: RestartPolicy = RestartPolicy(),
+                      on_restart: Optional[Callable[[int, Exception], int]]
+                      = None) -> int:
+    """Drives ``train_loop(start) -> reached_step`` under the restart policy.
+    ``on_restart(step, exc) -> resume_step`` typically restores the latest
+    checkpoint and returns its step.  Returns the final step reached."""
+    step = start_step
+    restarts = 0
+    while step < final_step:
+        try:
+            step = train_loop(step)
+        except Exception as exc:  # noqa: BLE001 — any host loss surfaces here
+            restarts += 1
+            if restarts > policy.max_restarts:
+                raise
+            if on_restart is not None:
+                step = on_restart(step, exc)
+            # (real deployment: sleep policy.backoff_s; tests skip the wait)
+    return step

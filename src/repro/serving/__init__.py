@@ -1,0 +1,2 @@
+"""Batched serving: prefill/decode waves over the model zoo."""
+from repro.serving.engine import Engine, Request, Result  # noqa

@@ -1,0 +1,13 @@
+import os
+
+# Tests see the default single CPU device (the dry-run sets its own flag in
+# a subprocess); keep any accidental x64 off so model dtypes stay faithful.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

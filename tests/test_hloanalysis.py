@@ -1,0 +1,79 @@
+"""HLO walker + jaxpr cost model validation (the roofline instrumentation
+must itself be trustworthy)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hloanalysis import HloModule, analyze
+from repro.launch.jaxpr_cost import step_cost
+
+
+def test_walker_matches_costanalysis_loop_free():
+    a = jnp.zeros((256, 512), jnp.bfloat16)
+    b = jnp.zeros((512, 384), jnp.bfloat16)
+    comp = jax.jit(lambda a, b: a @ b).lower(a, b).compile()
+    r = analyze(comp.as_text(), 1)
+    assert r["walked_dot_flops"] == 2 * 256 * 512 * 384
+
+
+def test_walker_multiplies_scan_trips():
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y
+
+    x = jnp.zeros((128, 128), jnp.float32)
+    w = jnp.zeros((128, 128), jnp.float32)
+    comp = jax.jit(f).lower(x, w).compile()
+    r = analyze(comp.as_text(), 1)
+    assert r["walked_dot_flops"] == 10 * 2 * 128 ** 3
+    assert max(t for _, t in r["loops"]) == 10
+
+
+def test_jaxpr_cost_exact_dot():
+    a = jnp.zeros((64, 32), jnp.float32)
+    b = jnp.zeros((32, 16), jnp.float32)
+    c = step_cost(lambda a, b: a @ b, a, b)
+    assert c["flops"] == 2 * 64 * 32 * 16
+
+
+def test_jaxpr_cost_scan_and_grad_remat():
+    w = jnp.zeros((64, 64), jnp.float32)
+    x = jnp.zeros((64, 64), jnp.float32)
+
+    def g(w, x):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(jax.checkpoint(body), x, None, length=7)
+        return jnp.sum(y)
+
+    c = step_cost(jax.grad(g), w, x)
+    # fwd + remat-fwd + dgrad + wgrad = 4 matmuls per step
+    assert c["flops"] == pytest.approx(4 * 7 * 2 * 64 ** 3, rel=0.02)
+
+
+def test_jaxpr_cost_counts_batched_dot():
+    a = jnp.zeros((4, 32, 16), jnp.float32)
+    b = jnp.zeros((4, 16, 8), jnp.float32)
+    c = step_cost(lambda a, b: jnp.einsum("bij,bjk->bik", a, b), a, b)
+    assert c["flops"] == 2 * 4 * 32 * 16 * 8
+
+
+def test_collective_parse_on_sharded_program():
+    import os
+    if jax.device_count() < 2:
+        pytest.skip("needs >1 device (run under dryrun flags)")
+    # exercised end-to-end by the dry-run artifacts; unit coverage of the
+    # transfer model:
+    mod = HloModule("""
+ENTRY %main.1 (p0: f32[16,16]) -> f32[16,16] {
+  %p0 = f32[16,16]{1,0} parameter(0)
+  ROOT %ar = f32[16,16]{1,0} all-reduce(%p0), replica_groups=[2,8]<=[16], to_apply=%add
+}
+""", 16)
+    coll = mod.collective_bytes()
+    want = 2 * 16 * 16 * 4 * 7 / 8  # 2*size*(n-1)/n, n=8
+    assert coll["per_device_bytes"] == pytest.approx(want)

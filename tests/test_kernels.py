@@ -1,0 +1,157 @@
+"""Pallas kernels vs pure-jnp/numpy oracles: shape/dtype sweeps + hypothesis
+value fuzzing (interpret mode on CPU)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dataflow import Dataflow
+from repro.kernels import accumulator, ops, ref
+from repro.kernels.limb_gemm import limb_decompose
+
+SHAPES = [(8, 16, 8), (65, 130, 75), (128, 128, 128), (33, 257, 129)]
+
+
+# ---------------------------------------------------------------------------
+# limb GEMM (exact multi-precision integer matmul)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", SHAPES, ids=str)
+@pytest.mark.parametrize("dtype,bits", [(np.int16, 16), (np.int32, 32)],
+                         ids=["int16", "int32"])
+def test_limb_matmul_exact(rng, shape, dtype, bits):
+    M, K, N = shape
+    info = np.iinfo(dtype)
+    a = rng.integers(info.min, info.max, (M, K), dtype=dtype)
+    b = rng.integers(info.min, info.max, (K, N), dtype=dtype)
+    hi, lo = ops.limb_matmul(jnp.asarray(a), jnp.asarray(b), in_bits=bits)
+    rhi, rlo = ref.int_matmul_mod64_ref(a, b)
+    np.testing.assert_array_equal(np.asarray(hi), rhi)
+    np.testing.assert_array_equal(np.asarray(lo), rlo)
+
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=60, deadline=None)
+def test_limb_matmul_value_fuzz(seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(-2**31, 2**31 - 1, (9, 17), dtype=np.int32)
+    b = rng.integers(-2**31, 2**31 - 1, (17, 5), dtype=np.int32)
+    hi, lo = ops.limb_matmul(jnp.asarray(a), jnp.asarray(b))
+    rhi, rlo = ref.int_matmul_mod64_ref(a, b)
+    assert np.array_equal(np.asarray(hi), rhi)
+    assert np.array_equal(np.asarray(lo), rlo)
+
+
+def test_limb_decompose_matches_ref(rng):
+    x = rng.integers(-2**31, 2**31 - 1, (64,), dtype=np.int32)
+    got = np.asarray(limb_decompose(jnp.asarray(x), ref.n_limbs_for(32)))
+    want = ref.limb_decompose_ref(x.astype(np.int64), ref.n_limbs_for(32))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_limb_decompose_jnp_extremes():
+    x = jnp.asarray([2**31 - 1, -2**31, 0, -1], jnp.int32)
+    d = np.asarray(limb_decompose(x, ref.n_limbs_for(32)))
+    back = ref.limb_recompose_ref(d)
+    np.testing.assert_array_equal(back, [2**31 - 1, -2**31, 0, -1])
+
+
+# ---------------------------------------------------------------------------
+# multi-precision accumulator (Fig. 3)
+# ---------------------------------------------------------------------------
+
+@given(st.lists(st.integers(-2**31, 2**31 - 1), min_size=1, max_size=9))
+@settings(max_examples=200, deadline=None)
+def test_accumulator_matches_bigint(diag_vals):
+    limb_bits = 7
+    diags = jnp.asarray(np.asarray(diag_vals, np.int32)[:, None, None])
+    hi, lo = accumulator.combine_diagonals(diags, limb_bits)
+    want = sum(int(v) << (limb_bits * d) for d, v in enumerate(diag_vals))
+    want &= (1 << 64) - 1
+    got = ((int(np.asarray(hi)[0, 0]) & 0xFFFFFFFF) << 32) | (
+        int(np.asarray(lo)[0, 0]) & 0xFFFFFFFF)
+    assert got == want
+
+
+def test_accumulator_rejects_non_int32():
+    with pytest.raises(TypeError):
+        accumulator.combine_diagonals(jnp.zeros((3, 2, 2), jnp.float32), 7)
+
+
+# ---------------------------------------------------------------------------
+# mpgemm (WS / IS / OS schedules)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("df", [Dataflow.OS, Dataflow.WS, Dataflow.IS],
+                         ids=lambda d: d.value)
+@pytest.mark.parametrize("shape", [(100, 200, 150), (128, 128, 128),
+                                   (16, 300, 48)], ids=str)
+def test_mpgemm_matches_ref_f32(rng, df, shape):
+    M, K, N = shape
+    a = jnp.asarray(rng.standard_normal((M, K)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((K, N)), jnp.float32)
+    got = np.asarray(ops.matmul(a, b, dataflow=df))
+    want = np.asarray(ref.matmul_ref(a, b))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_mpgemm_bf16(rng):
+    a = jnp.asarray(rng.standard_normal((96, 160)), jnp.bfloat16)
+    b = jnp.asarray(rng.standard_normal((160, 64)), jnp.bfloat16)
+    got = np.asarray(ops.matmul(a, b), dtype=np.float32)
+    want = np.asarray(ref.matmul_ref(a, b), dtype=np.float32)
+    np.testing.assert_allclose(got, want, rtol=3e-2, atol=3e-1)
+
+
+def test_mpgemm_dataflows_agree(rng):
+    a = jnp.asarray(rng.standard_normal((64, 96)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((96, 80)), jnp.float32)
+    outs = [np.asarray(ops.matmul(a, b, dataflow=df))
+            for df in (Dataflow.OS, Dataflow.WS, Dataflow.IS)]
+    np.testing.assert_allclose(outs[0], outs[1], rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(outs[0], outs[2], rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# quant matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(64, 128, 96), (130, 256, 70)], ids=str)
+def test_quant_matmul_matches_ref(rng, shape):
+    M, K, N = shape
+    x = jnp.asarray(rng.standard_normal((M, K)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((K, N)), jnp.float32)
+    wq, sc = ops.quantize_weights(w)
+    got = np.asarray(ops.quant_matmul(x, wq, sc))
+    want = np.asarray(ref.quant_matmul_ref(x, wq, sc))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_quantize_weights_error_bound(rng):
+    w = jnp.asarray(rng.standard_normal((256, 64)), jnp.float32)
+    wq, sc = ops.quantize_weights(w)
+    deq = np.asarray(wq, np.float32) * np.asarray(sc)[None, :]
+    err = np.abs(deq - np.asarray(w))
+    # per-channel max error <= scale/2 (symmetric rounding)
+    assert np.all(err <= np.asarray(sc)[None, :] * 0.5 + 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# SSD intra-chunk kernel (the p-GEMM chain of the SSM family)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(4, 32, 16, 8), (6, 64, 32, 16)],
+                         ids=str)
+def test_ssd_intra_kernel_matches_ref(rng, shape):
+    from repro.kernels import ssd
+    G, Q, P, N = shape
+    x = jnp.asarray(rng.standard_normal((G, Q, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (G, Q)), jnp.float32)
+    cums = jnp.cumsum(-dt * 0.5, axis=1)
+    b = jnp.asarray(rng.standard_normal((G, Q, N)), jnp.float32)
+    c = jnp.asarray(rng.standard_normal((G, Q, N)), jnp.float32)
+    got = np.asarray(ssd.ssd_intra(x, dt, cums, b, c))
+    want = np.asarray(ssd.ssd_intra_ref(x, dt, cums, b, c))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)

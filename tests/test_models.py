@@ -1,0 +1,176 @@
+"""Per-arch smoke tests (reduced configs) + serving-path equivalences +
+family-specific correctness (SSD vs naive recurrence, MoE dispatch, local
+attention windows)."""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs as CONFIGS
+from repro.configs.shapes import SHAPES, live_cells, skip_reason
+from repro.models import network as N
+from repro.models import ssm as SSM
+from repro.models.config import BlockKind
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B=2, S=64):
+    if cfg.frontend == "frames":
+        return {"frames": jax.random.normal(KEY, (B, S, cfg.d_model),
+                                            jnp.float32),
+                "labels": jnp.zeros((B, S), jnp.int32)}
+    if cfg.frontend == "patches":
+        P = cfg.frontend_prefix_len
+        return {"tokens": jnp.ones((B, S - P), jnp.int32),
+                "patches": 0.02 * jax.random.normal(
+                    KEY, (B, P, cfg.d_model), jnp.float32),
+                "labels": jnp.zeros((B, S - P), jnp.int32)}
+    return {"tokens": jnp.ones((B, S), jnp.int32) * 5,
+            "labels": jnp.zeros((B, S), jnp.int32)}
+
+
+@pytest.mark.parametrize("arch", CONFIGS.ARCH_IDS)
+def test_arch_smoke_forward_and_grad(arch):
+    """Reduced same-family config: one forward/train step, output shapes,
+    no NaNs (deliverable f)."""
+    cfg = CONFIGS.get(arch).scaled_down()
+    params = N.init(cfg, KEY)
+    batch = _batch(cfg)
+    logits, aux = jax.jit(lambda p, b: N.forward(p, cfg, b))(params, batch)
+    S_out = batch["labels"].shape[1] + (cfg.frontend_prefix_len
+                                        if cfg.frontend == "patches" else 0)
+    assert logits.shape == (2, S_out, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+    loss, _ = N.loss_fn(params, cfg, batch)
+    g = jax.grad(lambda p: N.loss_fn(p, cfg, batch)[0])(params)
+    gn = sum(float(jnp.sum(jnp.square(x.astype(jnp.float32))))
+             for x in jax.tree.leaves(g))
+    assert np.isfinite(float(loss)) and np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch", ["qwen2_0_5b", "deepseek_v2_236b",
+                                  "mamba2_2_7b", "zamba2_7b", "gemma2_9b"])
+def test_prefill_decode_matches_forward(arch):
+    """Teacher-forced decode through the cache must reproduce the full
+    forward logits (the serving-path correctness contract)."""
+    cfg = CONFIGS.get(arch).scaled_down()
+    if cfg.is_encoder_only:
+        pytest.skip("encoder-only")
+    params = N.init(cfg, KEY)
+    B, S = 2, 32
+    toks = jax.random.randint(KEY, (B, S), 3, cfg.vocab)
+
+    full_logits, _ = N.forward(params, cfg, {"tokens": toks})
+
+    caches = N.init_caches(cfg, B, 64, jnp.float32)
+    split = S // 2
+    lg, caches = N.prefill(params, cfg, {"tokens": toks[:, :split]}, caches)
+    np.testing.assert_allclose(
+        np.asarray(lg), np.asarray(full_logits[:, split - 1]),
+        rtol=2e-2, atol=2e-2)
+    # decode the second half token by token
+    for t in range(split, S):
+        lg, caches = N.decode_step(params, cfg, toks[:, t - 1:t]
+                                   if False else toks[:, t:t + 1], caches,
+                                   jnp.asarray(t, jnp.int32))
+        np.testing.assert_allclose(
+            np.asarray(lg), np.asarray(full_logits[:, t]),
+            rtol=2e-2, atol=2e-2)
+
+
+def test_local_attention_equals_full_when_window_covers():
+    cfg = CONFIGS.get("llava_next_mistral_7b").scaled_down(
+        local_window=4096, frontend="none", frontend_prefix_len=0)
+    params = N.init(cfg, KEY)
+    toks = jax.random.randint(KEY, (2, 48), 3, cfg.vocab)
+    lg_local, _ = N.forward(params, cfg, {"tokens": toks})
+    cfg_full = dataclasses.replace(
+        cfg, pattern=(BlockKind.ATTN,) * len(cfg.pattern))
+    lg_full, _ = N.forward(params, cfg_full, {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(lg_local), np.asarray(lg_full),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_chunked_matches_naive_recurrence(rng):
+    """The p-GEMM (dual) form of SSD must equal the plain recurrence."""
+    B, S, H, P, G, Nst, chunk = 2, 64, 4, 8, 1, 16, 16
+    x = jnp.asarray(rng.standard_normal((B, S, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (B, S, H)), jnp.float32)
+    A = -jnp.asarray(rng.uniform(0.5, 2.0, (H,)), jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((B, S, G, Nst)), jnp.float32)
+    Cm = jnp.asarray(rng.standard_normal((B, S, G, Nst)), jnp.float32)
+
+    y_chunk, h_chunk = SSM.ssd_chunked(x, dt, A, Bm, Cm, chunk)
+
+    # naive: h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t ; y_t = C_t h_t
+    h = np.zeros((B, H, P, Nst), np.float32)
+    ys = []
+    xn, dtn = np.asarray(x), np.asarray(dt)
+    Bn = np.repeat(np.asarray(Bm), H // G, axis=2)
+    Cn = np.repeat(np.asarray(Cm), H // G, axis=2)
+    An = np.asarray(A)
+    for t in range(S):
+        decay = np.exp(dtn[:, t] * An[None, :])          # (B,H)
+        h = h * decay[:, :, None, None] + np.einsum(
+            "bhp,bhn->bhpn", xn[:, t] * dtn[:, t][..., None], Bn[:, t])
+        ys.append(np.einsum("bhn,bhpn->bhp", Cn[:, t], h))
+    y_naive = np.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), y_naive,
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(h_chunk), h, rtol=2e-3, atol=2e-3)
+
+
+def test_ssd_step_matches_chunked(rng):
+    B, S_len, H, P, G, Nst = 1, 8, 2, 4, 1, 8
+    x = jnp.asarray(rng.standard_normal((B, S_len, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.05, 0.2, (B, S_len, H)), jnp.float32)
+    A = -jnp.ones((H,), jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((B, S_len, G, Nst)), jnp.float32)
+    Cm = jnp.asarray(rng.standard_normal((B, S_len, G, Nst)), jnp.float32)
+    y_c, h_c = SSM.ssd_chunked(x, dt, A, Bm, Cm, chunk=4)
+    h = jnp.zeros((B, H, P, Nst), jnp.float32)
+    for t in range(S_len):
+        y_t, h = SSM.ssd_step(x[:, t], dt[:, t], A, Bm[:, t], Cm[:, t], h)
+        np.testing.assert_allclose(np.asarray(y_t), np.asarray(y_c[:, t]),
+                                   rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_c),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_moe_single_expert_equals_dense(rng):
+    """top_k=1 with E=1 must reduce to the plain expert MLP."""
+    from repro.models import moe as M
+    from repro.models.config import MoEConfig
+    cfg = CONFIGS.get("llama4_scout_17b_a16e").scaled_down()
+    cfg = dataclasses.replace(
+        cfg, moe=MoEConfig(n_experts=1, top_k=1, d_ff_expert=64,
+                           n_shared_experts=0, capacity_factor=2.0))
+    p = {
+        "router": jnp.zeros((cfg.d_model, 1), jnp.float32),
+        "wi_gate": jnp.asarray(rng.standard_normal(
+            (1, cfg.d_model, 64)) * 0.05, jnp.float32),
+        "wi_up": jnp.asarray(rng.standard_normal(
+            (1, cfg.d_model, 64)) * 0.05, jnp.float32),
+        "wo": jnp.asarray(rng.standard_normal(
+            (1, 64, cfg.d_model)) * 0.05, jnp.float32),
+    }
+    x = jnp.asarray(rng.standard_normal((2, 8, cfg.d_model)), jnp.float32)
+    out, aux = M.moe_apply(p, x, cfg)
+    g = jax.nn.silu(x @ p["wi_gate"][0])
+    u = x @ p["wi_up"][0]
+    want = (g * u) @ p["wo"][0]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_live_cells_count():
+    cells = live_cells()
+    assert len(cells) == 31  # 40 - 7 long_500k skips - hubert decode/long
+    assert ("mamba2_2_7b", "long_500k") in cells
+    assert ("qwen1_5_4b", "long_500k") not in cells
+    assert ("hubert_xlarge", "decode_32k") not in cells
+    assert ("hubert_xlarge", "prefill_32k") in cells

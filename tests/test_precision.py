@@ -1,0 +1,73 @@
+"""Limb algebra + Table-3 closed form (paper §3.1)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.precision import (ALL_PRECISIONS, BP16, FP16, FP32, FP64,
+                                  INT8, INT16, INT32, INT64, PE_BITS,
+                                  precision, product_limb_pairs, simd_gain,
+                                  vector_pes_per_mult, ws_row_expansion)
+from repro.kernels.ref import (limb_decompose_ref, limb_recompose_ref,
+                               n_limbs_for)
+
+TABLE3 = {"INT8": 8.0, "INT16": 4.0, "INT32": 2.0, "INT64": 1.0,
+          "BP16": 16.0, "FP16": 4.0, "FP32": 3.56, "FP64": 1.3}
+
+
+def test_limb_counts():
+    assert INT8.limbs == 1 and INT16.limbs == 2
+    assert INT32.limbs == 4 and INT64.limbs == 8
+    assert BP16.limbs == 1 and FP16.limbs == 2
+    assert FP32.limbs == 3 and FP64.limbs == 7
+
+
+@pytest.mark.parametrize("p", ALL_PRECISIONS, ids=lambda p: p.name)
+def test_table3_simd_gains(p):
+    assert simd_gain(p) == pytest.approx(TABLE3[p.name], rel=0.01)
+
+
+def test_lookup_aliases():
+    assert precision("bf16") is BP16
+    assert precision("int32") is INT32
+    with pytest.raises(KeyError):
+        precision("int4")
+
+
+def test_expansion_rules():
+    # WS: linear in limbs; vector: quadratic (paper Fig. 1)
+    assert ws_row_expansion(INT32) == 4
+    assert vector_pes_per_mult(INT32) == 16
+
+
+def test_product_limb_pairs_antidiagonals():
+    groups = product_limb_pairs(4)
+    assert set(groups) == set(range(7))
+    assert sum(len(v) for v in groups.values()) == 16
+    for d, pairs in groups.items():
+        assert all(i + j == d for i, j in pairs)
+
+
+@given(st.lists(st.integers(-2**31, 2**31 - 1), min_size=1, max_size=64))
+@settings(max_examples=200, deadline=None)
+def test_balanced_decompose_roundtrip_int32(vals):
+    x = np.asarray(vals, np.int64)
+    d = limb_decompose_ref(x, n_limbs_for(32))
+    assert d.dtype == np.int8
+    back = limb_recompose_ref(d)
+    np.testing.assert_array_equal(back, x)
+
+
+@given(st.lists(st.integers(-2**15, 2**15 - 1), min_size=1, max_size=64))
+@settings(max_examples=100, deadline=None)
+def test_balanced_decompose_roundtrip_int16(vals):
+    x = np.asarray(vals, np.int64)
+    d = limb_decompose_ref(x, n_limbs_for(16))
+    back = limb_recompose_ref(d)
+    np.testing.assert_array_equal(back, x)
+
+
+def test_decompose_extremes():
+    x = np.asarray([2**31 - 1, -2**31, 0, -1, 1], np.int64)
+    d = limb_decompose_ref(x, n_limbs_for(32))
+    np.testing.assert_array_equal(limb_recompose_ref(d), x)

@@ -1,0 +1,153 @@
+"""p-GEMM classification, dataflow cost models, scheduling-space invariants
+(paper §3.2 / §5)."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dataflow import (ArrayShape, Dataflow, Direction, Pattern,
+                                 candidate_costs, cost_os, cost_simd,
+                                 cost_ws_is, match_pattern)
+from repro.core.pgemm import (ExecPath, PGEMM, VectorOp, classify,
+                              conv2d_as_pgemm, linear_as_pgemm, split_paths)
+from repro.core.precision import BP16, FP64, INT8, INT16, INT32
+from repro.core.scheduler import (GTAConfig, explore,
+                                  is_on_or_dominated_boundary, pareto_front,
+                                  sum_of_squares_priority)
+
+ARR = ArrayShape(16, 16)
+
+dims = st.integers(1, 2048)
+precs = st.sampled_from([INT8, INT16, INT32, BP16, FP64])
+
+
+def _op(m, n, k, p=INT8, b=1):
+    return PGEMM("t", M=m, N=n, K=k, precision=p, batch=b)
+
+
+# ---------------------------------------------------------------------------
+# classification
+# ---------------------------------------------------------------------------
+
+def test_classify_paths():
+    assert classify(_op(512, 512, 512)) is ExecPath.GEMM
+    assert classify(VectorOp("v", 1000, INT8)) is ExecPath.VECTOR
+
+
+def test_conv_as_pgemm_im2col():
+    g = conv2d_as_pgemm("c", batch=2, in_ch=3, out_ch=8, img_hw=(8, 8),
+                        kernel_hw=(3, 3), pad=1, precision=INT8)
+    assert (g.M, g.N, g.K) == (2 * 8 * 8, 8, 27)
+
+
+def test_split_paths_degenerate_gemm_to_vector():
+    tiny = _op(1, 1, 2)  # inner product: vector path
+    gemms, vecs = split_paths([tiny, _op(128, 128, 128)])
+    assert len(gemms) == 1 and len(vecs) == 1
+
+
+# ---------------------------------------------------------------------------
+# pattern matching (Fig. 5)
+# ---------------------------------------------------------------------------
+
+def test_patterns_fig5():
+    # WS spatial dims: (K on rows, N on cols/limbs)
+    assert match_pattern(Dataflow.WS, _op(99, 4, 4), ARR) is Pattern.UNCOVER_1
+    assert match_pattern(Dataflow.WS, _op(9, 2, 99), ARR) is Pattern.UNCOVER_2
+    assert match_pattern(Dataflow.WS, _op(9, 4, 99), ARR) is Pattern.COVER_2
+    assert match_pattern(Dataflow.WS, _op(9, 999, 16), ARR) is Pattern.COVER_3
+    assert match_pattern(Dataflow.WS, _op(9, 99, 99), ARR) is Pattern.COVER_1
+    assert match_pattern(Dataflow.OS, _op(99, 99, 5), ARR) is Pattern.COVER_1
+
+
+# ---------------------------------------------------------------------------
+# cost model invariants
+# ---------------------------------------------------------------------------
+
+@given(m=dims, n=dims, k=dims, p=precs)
+@settings(max_examples=150, deadline=None)
+def test_work_conservation(m, n, k, p):
+    """No schedule can beat perfect utilization: cycles * PEs >= limb-MACs."""
+    op = PGEMM("t", M=m, N=n, K=k, precision=p)
+    need = op.macs * p.limbs * p.limbs
+    for r in candidate_costs(op, ARR, k_folds=[1, 4]):
+        assert r.cycles * ARR.pes >= need * 0.999
+        assert 0.0 <= r.utilization <= 1.0
+
+
+@given(m=dims, n=dims, k=dims, p=precs)
+@settings(max_examples=150, deadline=None)
+def test_traffic_at_least_compulsory_stationary(m, n, k, p):
+    """Every systolic schedule moves at least each operand once."""
+    op = PGEMM("t", M=m, N=n, K=k, precision=p)
+    eb = p.bytes
+    compulsory = eb * (m * k + k * n + m * n)
+    for r in candidate_costs(op, ARR, k_folds=[1]):
+        if r.schedule.dataflow is Dataflow.SIMD:
+            continue
+        assert r.traffic_bytes >= 0.999 * compulsory
+
+
+def test_kfold_conflict_uncover():
+    """The paper's utilization-vs-reuse conflict: on an Uncover-2 case,
+    folding K cuts cycles but raises traffic."""
+    op = PGEMM("t", M=64, N=3, K=512, precision=INT8)  # K >> rows, tiny N
+    r1 = cost_ws_is(op, ARR, input_stationary=False, k_fold=1)
+    r4 = cost_ws_is(op, ARR, input_stationary=False, k_fold=4)
+    assert r4.cycles < r1.cycles
+    assert r4.traffic_bytes >= r1.traffic_bytes
+
+
+def test_direction_swaps_reread_operand():
+    op = PGEMM("t", M=4096, N=64, K=512, precision=INT8)
+    lat = cost_os(op, ARR, direction=Direction.LATERAL)
+    ver = cost_os(op, ARR, direction=Direction.VERTICAL)
+    assert lat.traffic_bytes != ver.traffic_bytes
+
+
+def test_simd_wins_tiny_k():
+    """RGB-style p-GEMM (K=3): the scheduler should prefer vectorization
+    (paper §5: 'some p-GEMM operators may get better result from
+    vectorization')."""
+    op = PGEMM("rgb", M=1920 * 1080, N=3, K=3, precision=INT8)
+    choice = explore(op, GTAConfig(lanes=4))
+    assert choice.best.schedule.dataflow is Dataflow.SIMD
+
+
+def test_big_gemm_prefers_systolic():
+    op = PGEMM("ffl", M=2048, N=4096, K=4096, precision=BP16)
+    choice = explore(op, GTAConfig(lanes=4))
+    assert choice.best.schedule.dataflow is not Dataflow.SIMD
+
+
+# ---------------------------------------------------------------------------
+# priority rule
+# ---------------------------------------------------------------------------
+
+@given(m=dims, n=dims, k=dims, p=precs)
+@settings(max_examples=100, deadline=None)
+def test_priority_pick_is_non_dominated(m, n, k, p):
+    op = PGEMM("t", M=m, N=n, K=k, precision=p)
+    choice = explore(op, GTAConfig(lanes=4))
+    assert is_on_or_dominated_boundary(choice.best, choice.space)
+
+
+def test_pareto_front_sorted_and_non_dominated():
+    op = PGEMM("t", M=300, N=300, K=300, precision=INT16)
+    space = explore(op, GTAConfig(lanes=4)).space
+    front = pareto_front(space)
+    assert front
+    for a, b in zip(front, front[1:]):
+        assert a.cycles <= b.cycles and a.traffic_bytes >= b.traffic_bytes
+
+
+def test_arrangements_enumerate_divisors():
+    cfg = GTAConfig(lanes=4)
+    shapes = {(a.rows, a.cols) for a in cfg.arrangements()}
+    assert shapes == {(8, 32), (16, 16), (32, 8)}
+
+
+def test_mask_group_partitioning():
+    cfg = GTAConfig(lanes=256)
+    assert cfg.groups == 4 and cfg.group_lanes == 64

@@ -1,0 +1,240 @@
+"""Data pipeline, optimizer, compression, checkpointing, runtime faults,
+quant policy."""
+
+import os
+import tempfile
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.optim import adamw, compression
+from repro.quant.policy import (QuantTensor, choose_precision,
+                                quantize_params, quantize_tensor)
+from repro.core.pgemm import PGEMM
+from repro.core.precision import BP16, INT8, INT16
+from repro.runtime.faults import (FailureInjector, HeartbeatConfig,
+                                  HeartbeatMonitor, HostState,
+                                  plan_elastic_mesh, run_with_restarts)
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic_and_seekable():
+    ds = SyntheticLM(DataConfig(vocab=1000, seq_len=64, global_batch=4))
+    b1 = ds.batch_at(7)
+    b2 = ds.batch_at(7)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = ds.batch_at(8)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+
+
+def test_data_host_sharding_partitions_batch():
+    ds = SyntheticLM(DataConfig(vocab=1000, seq_len=32, global_batch=8))
+    full = ds.batch_at(3)
+    parts = [ds.host_batch_at(3, h, 4) for h in range(4)]
+    got = np.concatenate([p["tokens"] for p in parts])
+    np.testing.assert_array_equal(got, full["tokens"])
+
+
+def test_data_labels_shifted_and_masked():
+    ds = SyntheticLM(DataConfig(vocab=1000, seq_len=128, global_batch=2))
+    b = ds.batch_at(0)
+    toks, labels = b["tokens"][0], b["labels"][0]
+    for i in range(len(toks) - 1):
+        if toks[i] != 2:  # not EOS
+            assert labels[i] == toks[i + 1] or labels[i] == -1
+        else:
+            assert labels[i] == -1
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_converges_on_quadratic():
+    cfg = adamw.AdamWConfig(lr_peak=0.1, warmup_steps=5, total_steps=200,
+                            weight_decay=0.0, clip_norm=10.0)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = adamw.init(cfg, params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}   # d/dw ||w||^2
+        params, state, m = adamw.update(cfg, grads, state, params)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 1e-2
+
+
+def test_schedule_warmup_and_decay():
+    cfg = adamw.AdamWConfig(lr_peak=1e-3, warmup_steps=10, total_steps=100)
+    lrs = [float(adamw.schedule(cfg, jnp.asarray(s))) for s in
+           (0, 5, 10, 50, 100)]
+    assert lrs[0] == 0.0 and lrs[1] == pytest.approx(5e-4)
+    assert lrs[2] == pytest.approx(1e-3)
+    assert lrs[4] == pytest.approx(1e-4, rel=0.01)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones((10,)) * 10}
+    clipped, gn = adamw.clip_by_global_norm(g, 1.0)
+    assert float(gn) == pytest.approx(np.sqrt(1000), rel=1e-5)
+    assert float(adamw.global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+def test_compression_unbiased():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2048,)) * 0.1
+    deqs = []
+    for i in range(64):
+        q, s, _ = compression.compress(x, jax.random.fold_in(key, i))
+        deqs.append(compression.decompress(q, s))
+    mean = np.mean(np.stack([np.asarray(d) for d in deqs]), axis=0)
+    # stochastic rounding: mean over trials approaches x
+    np.testing.assert_allclose(mean, np.asarray(x), atol=2e-3)
+
+
+def test_compression_error_feedback_bounded():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(jax.random.PRNGKey(2), (512,))
+    q, s, err = compression.compress(x, key)
+    assert float(jnp.max(jnp.abs(err))) <= float(s) + 1e-6
+
+
+def test_compress_tree_roundtrip_structure():
+    g = {"a": jnp.ones((8, 8)), "b": {"c": jnp.zeros((4,))}}
+    e = compression.init_error(g)
+    q, s, ne = compression.compress_tree(g, e, jax.random.PRNGKey(0))
+    d = compression.decompress_tree(q, s)
+    assert jax.tree.structure(d) == jax.tree.structure(g)
+    np.testing.assert_allclose(np.asarray(d["a"]), 1.0, atol=0.02)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_and_gc():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep_last=2)
+        tree = {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+                "opt": {"m": jnp.ones((4,), jnp.bfloat16)}}
+        for step in (10, 20, 30):
+            mgr.save(step, jax.tree.map(lambda x: x * step, tree),
+                     blocking=True, extra={"step": step})
+        assert mgr.steps() == [20, 30]   # keep_last=2
+        restored, extra = mgr.restore(tree)
+        assert extra["step"] == 30
+        np.testing.assert_allclose(np.asarray(restored["w"]),
+                                   np.asarray(tree["w"]) * 30)
+        assert restored["opt"]["m"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_restore_specific_step():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep_last=5)
+        tree = {"x": jnp.ones((3,))}
+        mgr.save(1, tree, blocking=True)
+        mgr.save(2, jax.tree.map(lambda x: x * 2, tree), blocking=True)
+        r, _ = mgr.restore(tree, step=1)
+        np.testing.assert_allclose(np.asarray(r["x"]), 1.0)
+
+
+def test_checkpoint_crash_leaves_no_partial_commit():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        os.makedirs(os.path.join(d, "step_000000099.tmp/h0000"))
+        assert mgr.latest_step() is None  # tmp dirs invisible
+
+
+# ---------------------------------------------------------------------------
+# runtime faults
+# ---------------------------------------------------------------------------
+
+def test_heartbeat_classification():
+    t = [0.0]
+    mon = HeartbeatMonitor(4, HeartbeatConfig(dead_after_s=60,
+                                              straggler_factor=3.0),
+                           clock=lambda: t[0])
+    for h in range(4):
+        mon.beat(h, step_time_s=1.0)
+    mon.beat(3, step_time_s=10.0)        # straggler
+    t[0] = 61.0
+    mon.beat(0, 1.0)
+    mon.beat(1, 1.0)
+    mon.beat(2, 1.0)                      # wait, 3 is now stale too
+    states = mon.classify()
+    assert states[0] is HostState.HEALTHY
+    assert states[3] is HostState.DEAD   # last seen at t=0, now 61
+    assert mon.decision() == "restart"
+
+
+def test_plan_elastic_mesh():
+    assert plan_elastic_mesh(512, 16) == (32, 16)
+    assert plan_elastic_mesh(500, 16) == (31, 16)
+    with pytest.raises(ValueError):
+        plan_elastic_mesh(8, 16)
+
+
+def test_run_with_restarts_resumes():
+    calls = []
+
+    def loop(start):
+        calls.append(start)
+        if len(calls) == 1:
+            raise RuntimeError("boom")
+        return 10
+
+    reached = run_with_restarts(loop, start_step=0, final_step=10,
+                                on_restart=lambda s, e: 3)
+    assert reached == 10
+    assert calls == [0, 3]
+
+
+def test_failure_injector_fires_once():
+    inj = FailureInjector(fail_at_steps=(5,))
+    inj.maybe_fail(4)
+    with pytest.raises(RuntimeError):
+        inj.maybe_fail(5)
+    inj.maybe_fail(5)  # second pass: already fired
+
+
+# ---------------------------------------------------------------------------
+# quant policy
+# ---------------------------------------------------------------------------
+
+def test_quant_tensor_dense_dispatch(rng):
+    from repro.models.layers import dense
+    x = jnp.asarray(rng.standard_normal((4, 64)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((64, 32)), jnp.float32)
+    qt = quantize_tensor(w)
+    out_q = dense(x, qt)
+    out_f = dense(x, w)
+    rel = float(jnp.max(jnp.abs(out_q - out_f))
+                / (jnp.max(jnp.abs(out_f)) + 1e-9))
+    assert rel < 0.05
+
+
+def test_quantize_params_targets_projections(rng):
+    from repro import configs as CONFIGS
+    from repro.models import network as N
+    cfg = CONFIGS.get("qwen2_0_5b").scaled_down()
+    params = N.init(cfg, jax.random.PRNGKey(0))
+    qp = quantize_params(params, min_size=0)
+    leaves = jax.tree.leaves(
+        qp, is_leaf=lambda x: isinstance(x, QuantTensor))
+    assert any(isinstance(l, QuantTensor) for l in leaves)
+    # embedding stays full precision
+    assert not isinstance(qp["embed"]["table"], QuantTensor)
+
+
+def test_choose_precision_prefers_int8_when_memory_bound():
+    op = PGEMM("decode", M=8, N=4096, K=4096, precision=BP16)
+    assert choose_precision(op).name == "INT8"

@@ -1,0 +1,122 @@
+"""End-to-end system behaviour: train loop convergence, checkpoint/restart
+exactness under injected failures, serving engine, simulator reproduction of
+the paper's headline comparisons."""
+
+import tempfile
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs as CONFIGS
+from repro.launch.train import TrainConfig, train
+from repro.models import network as N
+from repro.runtime.faults import FailureInjector
+from repro.serving.engine import Engine, Request
+
+
+def _tiny_cfg():
+    return CONFIGS.get("qwen2_0_5b").scaled_down()
+
+
+def test_train_loop_loss_decreases():
+    cfg = _tiny_cfg()
+    metrics = train(cfg, TrainConfig(steps=25, global_batch=4, seq_len=64,
+                                     log_every=100))
+    assert np.isfinite(metrics["loss"])
+    assert metrics["loss"] < np.log(cfg.vocab)  # below uniform entropy
+
+
+def test_restart_exactness_with_injected_failures():
+    """A run interrupted by host failures must reach the same final loss as
+    an uninterrupted run (checkpoint + seekable data)."""
+    cfg = _tiny_cfg()
+    base = dict(steps=12, global_batch=2, seq_len=32, ckpt_every=4,
+                log_every=100)
+    with tempfile.TemporaryDirectory() as d1, \
+            tempfile.TemporaryDirectory() as d2:
+        clean = train(cfg, TrainConfig(ckpt_dir=d1, **base))
+        faulty = train(cfg, TrainConfig(ckpt_dir=d2, **base),
+                       injector=FailureInjector(fail_at_steps=(6,)))
+        assert clean["loss"] == pytest.approx(faulty["loss"], abs=1e-5)
+
+
+def test_engine_greedy_deterministic():
+    cfg = _tiny_cfg()
+    params = N.init(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, slots=2, max_len=96)
+    prompt = np.arange(3, 19, dtype=np.int32)
+    reqs = [Request(rid=i, prompt=prompt, max_new_tokens=6,
+                    temperature=0.0) for i in range(2)]
+    out = eng.run(reqs)
+    np.testing.assert_array_equal(out[0].tokens, out[1].tokens)
+    assert len(out[0].tokens) <= 6
+
+
+def test_engine_wave_scheduling_more_requests_than_slots():
+    cfg = _tiny_cfg()
+    params = N.init(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, slots=2, max_len=64)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(3, cfg.vocab, 8,
+                                               ).astype(np.int32),
+                    max_new_tokens=3) for i in range(5)]
+    out = eng.run(reqs)
+    assert sorted(r.rid for r in out) == [0, 1, 2, 3, 4]
+
+
+def test_quantized_engine_agrees_with_fp():
+    """int8 serving should agree with fp serving on most greedy tokens."""
+    from repro.quant.policy import quantize_params
+    cfg = _tiny_cfg()
+    params = N.init(cfg, jax.random.PRNGKey(0))
+    prompt = np.arange(3, 35, dtype=np.int32)
+    fp = Engine(cfg, params, slots=1, max_len=96).run(
+        [Request(0, prompt, max_new_tokens=8)])[0]
+    q = Engine(cfg, quantize_params(params), slots=1, max_len=96).run(
+        [Request(0, prompt, max_new_tokens=8)])[0]
+    n = min(len(fp.tokens), len(q.tokens))
+    agree = np.mean(fp.tokens[:n] == q.tokens[:n]) if n else 1.0
+    assert agree >= 0.5  # random-init logits are near-flat; some flips ok
+
+
+def test_simulator_reproduces_paper_direction():
+    """GTA beats every baseline on the workload suite; arithmetic means land
+    within ~2.5x of the paper's claimed averages (exact magnitudes depend on
+    Table-2 sizes the source text garbles — see EXPERIMENTS.md)."""
+    import statistics
+    from repro.core.simulator import (BASELINES, compare_vs,
+                                      speedup_and_mem_eff)
+    from repro.core.workloads import WORKLOADS
+    paper = {"VPU-Ara": (6.45, 7.76), "GPGPU-H100": (3.39, 5.35),
+             "CGRA-hycube": (25.83, 8.76)}
+    for b in BASELINES:
+        sp, me = [], []
+        for ops in WORKLOADS.values():
+            g, base = compare_vs(b, ops)
+            s, m = speedup_and_mem_eff(g, base)
+            sp.append(s)
+            me.append(m)
+        sp_m, me_m = statistics.mean(sp), statistics.mean(me)
+        want_s, _want_m = paper[b]
+        assert sp_m > 1.0 and me_m > 1.0, (b, sp_m, me_m)
+        assert want_s / 2.5 <= sp_m <= want_s * 2.5, (b, sp_m)
+
+
+def test_dryrun_matrix_results_if_present():
+    """Integration check over the committed dry-run artifacts: every
+    non-skip cell must have compiled, fit the skip policy, and carry
+    roofline terms."""
+    from benchmarks.roofline_report import load_cells
+    cells = load_cells()
+    if not cells:
+        pytest.skip("dry-run artifacts not generated yet")
+    by_status = {}
+    for c in cells:
+        by_status.setdefault(c["status"], []).append(c)
+        if c["status"] == "ok":
+            r = c["roofline"]
+            assert r["compute_s"] >= 0 and r["memory_s"] > 0
+            assert c["memory"]["temp_bytes"] is not None
+    assert len(by_status.get("ok", [])) >= 62  # 31 live cells x 2 meshes

@@ -1,0 +1,96 @@
+"""TPU tiling bridge (core.tiling) + mesh sharding rules (launch.sharding)."""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.core.dataflow import Dataflow
+from repro.core.tiling import (BLOCK_BUDGET_BYTES, candidate_block_configs,
+                               choose_block_config, working_set_bytes)
+
+dims = st.integers(1, 16384)
+
+
+@given(m=dims, n=dims, k=dims)
+@settings(max_examples=100, deadline=None)
+def test_block_configs_respect_vmem_budget(m, n, k):
+    cfg = choose_block_config(m, n, k)
+    ws = working_set_bytes(cfg.bm, cfg.bn, cfg.bk, 2, 2, 4)
+    assert ws <= BLOCK_BUDGET_BYTES
+    assert cfg.bn % 128 == 0 and cfg.bk % 128 == 0
+
+
+@given(m=dims, n=dims, k=dims)
+@settings(max_examples=60, deadline=None)
+def test_chosen_block_config_non_dominated(m, n, k):
+    cands = candidate_block_configs(m, n, k)
+    best = choose_block_config(m, n, k)
+    for c in cands:
+        assert not (c.mxu_passes < best.mxu_passes
+                    and c.hbm_bytes < best.hbm_bytes)
+
+
+def test_dataflow_filter():
+    cfg = choose_block_config(512, 512, 512, allowed=(Dataflow.OS,))
+    assert cfg.dataflow is Dataflow.OS
+
+
+# ---------------------------------------------------------------------------
+# sharding rules (1-device meshes exercise the spec logic)
+# ---------------------------------------------------------------------------
+
+def _mesh11():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def test_spec_for_divisibility_fallback():
+    from repro.launch.sharding import default_rules, spec_for
+    mesh = _mesh11()
+    rules = default_rules(mesh)
+    # divisible dims take their rule; mesh extent 1 divides everything
+    s = spec_for(("embed", "ff"), (64, 256), mesh, rules)
+    assert s == P(("data",), "model") or s == P("data", "model")
+
+
+def test_param_shardings_cover_all_leaves():
+    from repro import configs as C
+    from repro.launch.sharding import shardings_for_params
+    from repro.models import network as N
+    cfg = C.get("qwen2_0_5b").scaled_down()
+    mesh = _mesh11()
+    sh = shardings_for_params(cfg, mesh)
+    params = jax.eval_shape(lambda: N.init(cfg, jax.random.PRNGKey(0)))
+    assert jax.tree.structure(sh) == jax.tree.structure(params)
+
+
+def test_cache_shardings_key_aware():
+    import jax.numpy as jnp
+    from repro.launch.sharding import cache_shardings
+    mesh = _mesh11()
+    tree = {
+        "k": jax.ShapeDtypeStruct((8, 128, 4, 32), jnp.bfloat16),
+        "c_kv": jax.ShapeDtypeStruct((8, 128, 64), jnp.bfloat16),
+        "ssm": jax.ShapeDtypeStruct((8, 16, 8, 8), jnp.float32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    sh = cache_shardings(tree, mesh, batch=8)
+    # latent cache never model-shards seq/feature dims
+    assert sh["c_kv"].spec[1] is None and sh["c_kv"].spec[2] is None
+    # kv cache model-shards the KV-heads dim (index 2)
+    assert sh["k"].spec[2] in ("model", None)
+    assert sh["pos"].spec == P()
+
+
+def test_quantized_param_shardings_structure():
+    from repro import configs as C
+    from repro.launch.sharding import quantized_param_shardings
+    from repro.models import network as N
+    from repro.quant.policy import quantize_params
+    cfg = C.get("qwen2_0_5b").scaled_down()
+    mesh = _mesh11()
+    sh = quantized_param_shardings(cfg, mesh)
+    qsds = jax.eval_shape(
+        lambda: quantize_params(N.init(cfg, jax.random.PRNGKey(0))))
+    assert jax.tree.structure(sh) == jax.tree.structure(qsds)
