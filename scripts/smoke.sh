@@ -1,0 +1,10 @@
+#!/usr/bin/env bash
+# Fast pre-merge smoke: the tier-1 suite minus slow markers, then the
+# serving benchmark in --dry mode (asserts the continuous engine beats the
+# wave baseline on the mixed-length trace).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q -m "not slow"
+python -m benchmarks.serve_bench --dry

@@ -1,0 +1,47 @@
+"""Version-tolerant aliases for JAX APIs that moved between releases.
+
+The repo targets a range of JAX versions (the container pins one; TPU pods
+often run another), and two APIs this codebase leans on were renamed:
+
+  * ``jax.shard_map`` — stable alias added ~0.6; before that only
+    ``jax.experimental.shard_map.shard_map`` exists, with ``check_rep``
+    instead of ``check_vma`` and no ``axis_names`` parameter.
+  * ``pltpu.CompilerParams`` — named ``TPUCompilerParams`` until ~0.4.x.
+
+All call sites import from here instead of feature-testing locally.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.experimental.pallas import tpu as _pltpu
+
+# --------------------------------------------------------------------------
+# pallas-TPU compiler params
+# --------------------------------------------------------------------------
+
+TPUCompilerParams = getattr(_pltpu, "CompilerParams", None) or getattr(
+    _pltpu, "TPUCompilerParams")
+
+
+# --------------------------------------------------------------------------
+# shard_map
+# --------------------------------------------------------------------------
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma: bool = False):
+    """``jax.shard_map`` when available, else the experimental one.
+
+    The legacy API ignores ``axis_names`` (every mesh axis is manual, which
+    is what the callers here want anyway) and spells ``check_vma`` as
+    ``check_rep``.
+    """
+    if hasattr(jax, "shard_map"):
+        kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check_vma)
+        if axis_names is not None:
+            kwargs["axis_names"] = axis_names
+        return jax.shard_map(f, **kwargs)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)

@@ -79,6 +79,22 @@ FP64 = Precision("FP64", 64, 53, PClass.FLOAT)
 ALL_PRECISIONS = (INT8, INT16, INT32, INT64, BP16, FP16, FP32, FP64)
 BY_NAME: Dict[str, Precision] = {p.name: p for p in ALL_PRECISIONS}
 
+_DTYPE_TO_NAME = {"int8": "INT8", "int16": "INT16", "int32": "INT32",
+                  "int64": "INT64", "bfloat16": "BP16", "float16": "FP16",
+                  "float32": "FP32", "float64": "FP64"}
+
+
+def precision_for_dtype(dtype, default: str | None = None) -> Precision:
+    """GTA precision for a numpy/jax dtype.  The single source of truth
+    for the mapping (kernels and the serving engine key the ScheduleCache
+    with it — divergent copies would silently split the cache).  Unknown
+    dtypes raise unless ``default`` names a fallback precision."""
+    import numpy as np
+    name = _DTYPE_TO_NAME.get(np.dtype(dtype).name, default)
+    if name is None:
+        raise ValueError(f"no GTA precision for dtype {dtype}")
+    return BY_NAME[name]
+
 
 def precision(name: str) -> Precision:
     """Look up a precision by (case-insensitive) name."""

@@ -19,12 +19,16 @@ inspect the whole space.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import math
-from typing import List, Optional, Sequence, Tuple
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.core.dataflow import (ArrayShape, CostReport, candidate_costs)
+from repro.core.dataflow import (ArrayShape, CostReport, Dataflow, Direction,
+                                 candidate_costs)
 from repro.core.pgemm import PGEMM
+from repro.core.precision import BY_NAME, Precision
 
 MPRA_DIM = 8  # each lane carries one 8x8 MPRA (paper §4.1)
 
@@ -115,6 +119,115 @@ def schedule_workload(ops: Sequence[PGEMM], config: GTAConfig,
     """Schedule every p-GEMM of a workload independently (the paper schedules
     per-operator; inter-operator fusion is out of scope)."""
     return [explore(op, config) for op in ops]
+
+
+# ---------------------------------------------------------------------------
+# ScheduleCache: memoized schedule selection for the serving hot path
+# ---------------------------------------------------------------------------
+
+GemmKey = Tuple[int, int, int, str]  # (M, N, K, precision name)
+
+
+@dataclasses.dataclass(frozen=True)
+class CachedChoice:
+    """The memoized winner of one ``explore`` run: everything a kernel needs
+    to apply the schedule (dataflow, lane arrangement, K-fold, tiling-ring
+    direction) plus the modeled costs for reporting."""
+
+    dataflow: Dataflow
+    array: ArrayShape
+    k_fold: int
+    direction: Direction
+    cycles: float
+    traffic_bytes: float
+
+
+class ScheduleCache:
+    """Shape -> schedule memo consulted on the serving hot path.
+
+    Contract: ``resolve(M, N, K, precision)`` runs the full paper §5
+    exploration (``explore`` + ``sum_of_squares_priority``) exactly once per
+    distinct ``(M, N, K, precision)`` GEMM and returns the winning
+    :class:`CachedChoice`; every later call with the same shape is a dict
+    hit.  ``kernels.ops.matmul`` consumes the choice (dataflow + k_fold are
+    applied to the Pallas dispatch, the dataflow also narrows the TPU block
+    search) and records the application via :meth:`note_applied`, so tests
+    and benchmarks can assert the cached schedule actually reached the
+    kernel.  Thread-safe: the continuous serving engine resolves from its
+    admission thread while benchmarks read stats.
+    """
+
+    def __init__(self, config: Optional[GTAConfig] = None,
+                 k_folds: Optional[List[int]] = None):
+        self.config = config or GTAConfig()
+        self.k_folds = k_folds
+        self._entries: Dict[GemmKey, CachedChoice] = {}
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        #: bounded tail of (key, CachedChoice) kernel applications — enough
+        #: for tests/benchmarks to assert the choice landed without growing
+        #: forever on a long-running serving hot path.
+        self.applied: "collections.deque[Tuple[GemmKey, CachedChoice]]" = (
+            collections.deque(maxlen=1024))
+        self.applied_total = 0
+
+    @staticmethod
+    def key_of(M: int, N: int, K: int,
+               precision: "Precision | str") -> GemmKey:
+        name = precision if isinstance(precision, str) else precision.name
+        return (int(M), int(N), int(K), name)
+
+    def resolve(self, M: int, N: int, K: int,
+                precision: "Precision | str") -> CachedChoice:
+        key = self.key_of(M, N, K, precision)
+        with self._lock:
+            hit = self._entries.get(key)
+            if hit is not None:
+                self.hits += 1
+                return hit
+        # explore outside the lock (it is pure and may be slow); a racing
+        # duplicate exploration just recomputes the same deterministic entry.
+        prec = BY_NAME[key[3]]
+        op = PGEMM("serve", M=key[0], N=key[1], K=key[2], precision=prec)
+        choice = explore(op, self.config, self.k_folds)
+        sched = choice.best.schedule
+        entry = CachedChoice(dataflow=sched.dataflow, array=sched.array,
+                             k_fold=sched.k_fold, direction=sched.direction,
+                             cycles=choice.best.cycles,
+                             traffic_bytes=choice.best.traffic_bytes)
+        with self._lock:
+            self.misses += 1
+            self._entries.setdefault(key, entry)
+            return self._entries[key]
+
+    def insert(self, M: int, N: int, K: int, precision: "Precision | str",
+               choice: CachedChoice) -> None:
+        """Force an entry (tests / offline-tuned overrides)."""
+        with self._lock:
+            self._entries[self.key_of(M, N, K, precision)] = choice
+
+    def note_applied(self, M: int, N: int, K: int,
+                     precision: "Precision | str",
+                     choice: CachedChoice) -> None:
+        with self._lock:
+            self.applied.append((self.key_of(M, N, K, precision), choice))
+            self.applied_total += 1
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {"hits": self.hits, "misses": self.misses,
+                    "entries": len(self._entries),
+                    "applied": self.applied_total}
+
+    def summary(self) -> List[Tuple[GemmKey, CachedChoice]]:
+        """Entries sorted by modeled cycles, heaviest first."""
+        with self._lock:
+            return sorted(self._entries.items(),
+                          key=lambda kv: -kv[1].cycles)
 
 
 # ---------------------------------------------------------------------------

@@ -30,6 +30,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import TPUCompilerParams
+
 
 def _limb_gemm_kernel(a_ref, b_ref, out_ref, acc_ref, *, gk: int):
     """One (bm, bn) output tile: accumulate la*lb limb matmuls into
@@ -88,7 +90,7 @@ def limb_gemm_diagonals(a_limbs: jax.Array, b_limbs: jax.Array, *,
         out_specs=pl.BlockSpec((n_diag, bm, bn), lambda m, n, k: (0, m, n)),
         out_shape=jax.ShapeDtypeStruct((n_diag, M, N), jnp.int32),
         scratch_shapes=[pltpu.VMEM((n_diag, bm, bn), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=TPUCompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name="limb_gemm",

@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import TPUCompilerParams
+
 from repro.core.dataflow import Dataflow
 
 
@@ -56,14 +58,46 @@ def _partial_kernel(a_ref, b_ref, out_ref):
         preferred_element_type=jnp.float32)
 
 
+def _os_fold_kernel(a_ref, b_ref, out_ref, acc_ref, *, gkf: int):
+    """OS with K-folding (paper §5 Uncover remedy): fold band ``fi`` owns a
+    contiguous K-segment, accumulates it on-chip, and spills its own partial
+    output plane — the wrapper's reduction materializes the extra
+    partial-sum traffic the ``core.dataflow`` cost model charges."""
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        a_ref[...], b_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == gkf - 1)
+    def _flush():
+        out_ref[0, :, :] = acc_ref[...]
+
+
+def _fold_bands(gk: int, k_fold: int) -> int:
+    """Largest divisor of ``gk`` not exceeding the requested fold."""
+    f = max(1, min(k_fold, gk))
+    while gk % f:
+        f -= 1
+    return f
+
+
 @functools.partial(jax.jit, static_argnames=("dataflow", "bm", "bn", "bk",
-                                             "out_dtype", "interpret"))
+                                             "k_fold", "out_dtype",
+                                             "interpret"))
 def mpgemm(a: jax.Array, b: jax.Array, *, dataflow: Dataflow = Dataflow.OS,
-           bm: int = 128, bn: int = 128, bk: int = 128,
+           bm: int = 128, bn: int = 128, bk: int = 128, k_fold: int = 1,
            out_dtype=jnp.float32, interpret: bool = True) -> jax.Array:
     """GEMM with an explicit systolic-dataflow schedule.
 
     a: (M, K), b: (K, N); M/N/K multiples of bm/bn/bk (ops.matmul pads).
+    ``k_fold > 1`` (OS only) splits K into fold bands with separate partial
+    planes, mirroring the scheduler's Uncover remedy; WS/IS already
+    materialize one partial plane per K-step so the fold is a no-op there.
     """
     M, K = a.shape
     K2, N = b.shape
@@ -74,6 +108,29 @@ def mpgemm(a: jax.Array, b: jax.Array, *, dataflow: Dataflow = Dataflow.OS,
     gm, gn, gk = M // bm, N // bn, K // bk
 
     if dataflow is Dataflow.OS or dataflow is Dataflow.SIMD:
+        f = _fold_bands(gk, k_fold)
+        if f > 1:
+            gkf = gk // f
+            partials = pl.pallas_call(
+                functools.partial(_os_fold_kernel, gkf=gkf),
+                grid=(gm, gn, f, gkf),
+                in_specs=[
+                    pl.BlockSpec((bm, bk),
+                                 lambda m, n, fi, k: (m, fi * gkf + k)),
+                    pl.BlockSpec((bk, bn),
+                                 lambda m, n, fi, k: (fi * gkf + k, n)),
+                ],
+                out_specs=pl.BlockSpec((1, bm, bn),
+                                       lambda m, n, fi, k: (fi, m, n)),
+                out_shape=jax.ShapeDtypeStruct((f, M, N), jnp.float32),
+                scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+                compiler_params=TPUCompilerParams(
+                    dimension_semantics=("parallel", "parallel", "arbitrary",
+                                         "arbitrary")),
+                interpret=interpret,
+                name="mpgemm_os_fold",
+            )(a, b)
+            return jnp.sum(partials, axis=0).astype(out_dtype)
         kernel = functools.partial(_os_kernel, gk=gk, out_dtype=out_dtype)
         return pl.pallas_call(
             kernel,
@@ -85,7 +142,7 @@ def mpgemm(a: jax.Array, b: jax.Array, *, dataflow: Dataflow = Dataflow.OS,
             out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
             out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
             scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-            compiler_params=pltpu.CompilerParams(
+            compiler_params=TPUCompilerParams(
                 dimension_semantics=("parallel", "parallel", "arbitrary")),
             interpret=interpret,
             name="mpgemm_os",
@@ -102,7 +159,7 @@ def mpgemm(a: jax.Array, b: jax.Array, *, dataflow: Dataflow = Dataflow.OS,
             ],
             out_specs=pl.BlockSpec((1, bm, bn), lambda n, k, m: (k, m, n)),
             out_shape=jax.ShapeDtypeStruct((gk, M, N), jnp.float32),
-            compiler_params=pltpu.CompilerParams(
+            compiler_params=TPUCompilerParams(
                 dimension_semantics=("parallel", "arbitrary", "arbitrary")),
             interpret=interpret,
             name="mpgemm_ws",
@@ -118,7 +175,7 @@ def mpgemm(a: jax.Array, b: jax.Array, *, dataflow: Dataflow = Dataflow.OS,
             ],
             out_specs=pl.BlockSpec((1, bm, bn), lambda m, k, n: (k, m, n)),
             out_shape=jax.ShapeDtypeStruct((gk, M, N), jnp.float32),
-            compiler_params=pltpu.CompilerParams(
+            compiler_params=TPUCompilerParams(
                 dimension_semantics=("parallel", "arbitrary", "arbitrary")),
             interpret=interpret,
             name="mpgemm_is",

@@ -15,7 +15,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.dataflow import Dataflow
-from repro.core.precision import Precision, precision as precision_by_name
+from repro.core.precision import (Precision, precision as precision_by_name,
+                                  precision_for_dtype)
+from repro.core.scheduler import ScheduleCache
 from repro.core.tiling import BlockConfig, choose_block_config
 from repro.kernels import accumulator
 from repro.kernels import limb_gemm as _lg
@@ -94,21 +96,45 @@ def limb_matmul_i32(a: jax.Array, b: jax.Array, **kw) -> jax.Array:
 def matmul(a: jax.Array, b: jax.Array, *, dataflow: Dataflow = Dataflow.OS,
            out_dtype=jnp.float32,
            blocks: Optional[Tuple[int, int, int]] = None,
+           schedule: Optional[ScheduleCache] = None,
            interpret: Optional[bool] = None) -> jax.Array:
-    """GEMM through the mpgemm kernel (pads to block multiples)."""
+    """GEMM through the mpgemm kernel (pads to block multiples).
+
+    With ``schedule`` (a :class:`repro.core.scheduler.ScheduleCache`) the
+    paper's §5 exploration picks the kernel schedule: the first call with a
+    given (M, N, K, precision) explores and memoizes; every later call is a
+    cache hit.  The cached dataflow overrides ``dataflow``, the cached
+    ``k_fold`` reaches the Pallas dispatch, and the TPU block search is
+    narrowed to the chosen stationarity.  Each application is recorded via
+    ``schedule.note_applied`` so callers can verify the choice landed.
+    """
     interp = _interpret() if interpret is None else interpret
     M, K = a.shape
     _, N = b.shape
+
+    k_fold = 1
+    if schedule is not None:
+        prec = precision_for_dtype(a.dtype)
+        choice = schedule.resolve(M, N, K, prec)
+        # SIMD = "vectorize this p-GEMM": on TPU that is still the MXU OS
+        # pipeline (there is no separate vector GEMM unit to fall back to).
+        dataflow = (Dataflow.OS if choice.dataflow is Dataflow.SIMD
+                    else choice.dataflow)
+        k_fold = choice.k_fold
+        schedule.note_applied(M, N, K, prec, choice)
+
     if blocks is None:
         eb = jnp.dtype(a.dtype).itemsize
-        cfg = choose_block_config(M, N, K, abytes=eb, bbytes=eb, obytes=4)
+        allowed = (dataflow,) if schedule is not None else None
+        cfg = choose_block_config(M, N, K, abytes=eb, bbytes=eb, obytes=4,
+                                  allowed=allowed)
         bm, bn, bk = cfg.bm, cfg.bn, cfg.bk
     else:
         bm, bn, bk = blocks
     ap = _pad2(a, bm, bk)
     bp = _pad2(b, bk, bn)
     out = _mp.mpgemm(ap, bp, dataflow=dataflow, bm=bm, bn=bn, bk=bk,
-                     out_dtype=out_dtype, interpret=interp)
+                     k_fold=k_fold, out_dtype=out_dtype, interpret=interp)
     return out[:M, :N]
 
 

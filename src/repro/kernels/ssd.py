@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import TPUCompilerParams
+
 
 def _ssd_intra_kernel(x_ref, dt_ref, cums_ref, b_ref, c_ref, y_ref):
     """Blocks (one grid step): x (Q, P); dt/cums (Q, H_blk... flattened to
@@ -72,7 +74,7 @@ def ssd_intra(x: jax.Array, dt: jax.Array, cums: jax.Array, b: jax.Array,
         ],
         out_specs=pl.BlockSpec((1, Q, P), lambda g: (g, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((G, Q, P), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=TPUCompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
         name="ssd_intra",

@@ -33,6 +33,11 @@ _COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
              "collective-permute")
 _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 _GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+#: lhs operand of a dot: optional inline typed shape (the layout suffix may
+#: carry tiling annotations, e.g. ``{1,0:T(8,128)}``), then the name.
+_DOT_LHS_RE = re.compile(
+    r"\sdot\(\s*(?:([a-z][0-9a-z]*)\[([\d,]*)\](?:\{[^}]*\})?\s+)?"
+    r"%?([\w\.\-]+)")
 
 
 def _numel(dims: str) -> int:
@@ -164,6 +169,24 @@ class HloModule:
                                [int(d) for d in dims.split(",") if d])
         return table
 
+    @staticmethod
+    def _dot_lhs_dims(line: str, table) -> Optional[List[int]]:
+        """LHS operand dims of a ``dot(...)`` instruction.  Optimized HLO
+        prints operands either with an inline typed shape
+        (``dot(f32[256,512]{1,0} %call, ...)``) or as a bare name
+        (``dot(%call, ...)``) — try the inline shape first, then the
+        per-computation symbol table.  Dropping this lookup silently sets
+        the contraction length to 1 and undercounts every dot by K."""
+        m = _DOT_LHS_RE.search(line)
+        if not m:
+            return None
+        dims, name = m.group(2), m.group(3)
+        if dims is not None:
+            return [int(d) for d in dims.split(",") if d]
+        if name in table:
+            return table[name][1]
+        return None
+
     def dot_flops(self) -> Tuple[float, Dict[str, float]]:
         """2*numel(result)*K per dot, times loop multipliers.  Operand
         shapes resolve through the per-computation symbol table (optimized
@@ -185,9 +208,8 @@ class HloModule:
                 _, res_n = res
                 k = 1
                 cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ln)
-                om = re.search(r"dot\(%([\w\.\-]+)", ln)
-                if cm and om and om.group(1) in table:
-                    lhs_dims = table[om.group(1)][1]
+                lhs_dims = self._dot_lhs_dims(ln, table)
+                if cm and lhs_dims is not None:
                     for di in cm.group(1).split(","):
                         if di and int(di) < len(lhs_dims):
                             k *= lhs_dims[int(di)]

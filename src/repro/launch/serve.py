@@ -1,5 +1,11 @@
 """Serving driver: loads (or initializes) a model, optionally quantizes it
-with the GTA precision policy, and serves batched requests.
+with the GTA precision policy, and serves requests through the
+continuous-batching engine (or the wave baseline for comparison).
+
+Requests are submitted through the engine's async queue API with an
+arrival process (``--arrival-ms`` mean inter-arrival gap) so the
+continuous engine actually interleaves admissions with in-flight decode —
+the scenario the slot-level design exists for.
 
 CLI (CPU demo sizes):
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
@@ -10,7 +16,7 @@ from __future__ import annotations
 
 import argparse
 import time
-from typing import Optional
+from typing import List
 
 import jax
 import numpy as np
@@ -19,7 +25,12 @@ from repro import configs as CONFIGS
 from repro.checkpoint.manager import CheckpointManager
 from repro.models import network as N
 from repro.quant.policy import quantize_params
-from repro.serving.engine import Engine, Request
+from repro.serving.engine import (ContinuousEngine, Request, Result,
+                                  WaveEngine)
+
+
+def _percentile(xs: List[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
 
 
 def main(argv=None):
@@ -32,6 +43,11 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--engine", choices=("continuous", "wave"),
+                    default="continuous")
+    ap.add_argument("--arrival-ms", type=float, default=0.0,
+                    help="mean inter-arrival gap (continuous engine only); "
+                         "0 = offered all at once")
     ap.add_argument("--quant", action="store_true",
                     help="int8 GTA serving path (QuantTensor weights)")
     ap.add_argument("--temperature", type=float, default=0.0)
@@ -54,21 +70,45 @@ def main(argv=None):
         params = quantize_params(params)
         print("[serve] int8-quantized projections (GTA serving path)")
 
-    eng = Engine(cfg, params, slots=args.slots, max_len=args.max_len)
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
-                    prompt=rng.integers(3, cfg.vocab,
-                                        args.prompt_len).astype(np.int32),
-                    max_new_tokens=args.max_new,
+                    prompt=rng.integers(
+                        3, cfg.vocab,
+                        max(1, int(rng.integers(
+                            args.prompt_len // 2,
+                            args.prompt_len + 1)))).astype(np.int32),
+                    max_new_tokens=max(1, int(rng.integers(
+                        args.max_new // 2, args.max_new + 1))),
                     temperature=args.temperature)
             for i in range(args.requests)]
+
     t0 = time.perf_counter()
-    results = eng.run(reqs)
+    if args.engine == "wave":
+        eng = WaveEngine(cfg, params, slots=args.slots, max_len=args.max_len)
+        results: List[Result] = eng.run(reqs)
+    else:
+        eng = ContinuousEngine(cfg, params, slots=args.slots,
+                               max_len=args.max_len)
+        eng.start()
+        for r in reqs:
+            if args.arrival_ms > 0:
+                time.sleep(rng.exponential(args.arrival_ms / 1e3))
+            eng.submit(r)
+        results = [eng.get_result(timeout=600) for _ in reqs]
+        eng.stop()
     dt = time.perf_counter() - t0
+
     toks = sum(len(r.tokens) for r in results)
-    print(f"[serve] {len(results)} requests, {toks} tokens in {dt:.2f}s "
-          f"({toks / max(dt, 1e-9):.1f} tok/s)")
-    for r in results[:4]:
+    lats = [r.latency_s for r in results]
+    print(f"[serve:{args.engine}] {len(results)} requests, {toks} tokens "
+          f"in {dt:.2f}s ({toks / max(dt, 1e-9):.1f} tok/s)  "
+          f"latency p50={_percentile(lats, 50)*1e3:.0f}ms "
+          f"p99={_percentile(lats, 99)*1e3:.0f}ms")
+    if args.engine == "continuous":
+        st = eng.schedule.stats()
+        print(f"[serve] schedule cache: {st['entries']} schedules, "
+              f"{st['hits']} hits / {st['misses']} misses")
+    for r in sorted(results, key=lambda r: r.rid)[:4]:
         print(f"  rid={r.rid} new_tokens={len(r.tokens)} "
               f"prefill={r.prefill_s*1e3:.0f}ms decode={r.decode_s*1e3:.0f}ms")
 

@@ -112,7 +112,8 @@ def make_compressed_dp_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
     shard_map (the distributed-optimization feature).  Params replicated;
     batch sharded over 'data'.  step(params, opt, err, key, batch) -> ..."""
     from jax.sharding import PartitionSpec as P
-    from jax.experimental.shard_map import shard_map
+
+    from repro.compat import shard_map
 
     def loss(p, b):
         return N.loss_fn(p, cfg, b)
@@ -138,7 +139,7 @@ def make_compressed_dp_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
         dp_step, mesh=mesh,
         in_specs=(rep, rep, rep, rep, bspec),
         out_specs=(rep, rep, rep, rep),
-        check_rep=False)
+        check_vma=False)
     return jax.jit(smapped)
 
 

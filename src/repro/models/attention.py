@@ -169,7 +169,14 @@ def _flash(q: jax.Array, k: jax.Array, v: jax.Array, *,
         T = k.shape[1]
     nblk = T // block
 
-    qpos = jnp.asarray(q_offset, jnp.int32) + jnp.arange(Sq, dtype=jnp.int32)
+    # q_offset / kv_valid are scalars (uniform batch) or (B,) vectors
+    # (continuous batching: per-slot positions and validity bounds); both
+    # shapes flow through one (1|B, Sq) qpos / (1|B, 1, 1) bound layout.
+    qpos = (jnp.atleast_1d(jnp.asarray(q_offset, jnp.int32))[:, None]
+            + jnp.arange(Sq, dtype=jnp.int32)[None, :])
+    kv_bound = (None if kv_valid is None else
+                jnp.atleast_1d(jnp.asarray(kv_valid, jnp.int32))[:, None,
+                                                                 None])
     qf = q.astype(jnp.float32) * scale
 
     # Distribution scheme (Megatron-SP style, works for ANY head count):
@@ -201,14 +208,14 @@ def _flash(q: jax.Array, k: jax.Array, v: jax.Array, *,
         # scores: Sq over model (train/prefill); fully pinned for decode
         s = shard_act(s, "brrrr" if dec else "b..m.")
         s = softcap(s, logit_cap)
-        mask = jnp.ones((Sq, block), dtype=bool)
+        mask = jnp.ones((1, Sq, block), dtype=bool)
         if causal:
-            mask &= kvpos[None, :] <= qpos[:, None]
+            mask &= kvpos[None, None, :] <= qpos[:, :, None]
         if window is not None:
-            mask &= qpos[:, None] - kvpos[None, :] < window
-        if kv_valid is not None:
-            mask &= kvpos[None, :] < kv_valid
-        s = jnp.where(mask[None, None, None], s, NEG_INF)
+            mask &= qpos[:, :, None] - kvpos[None, None, :] < window
+        if kv_bound is not None:
+            mask &= kvpos[None, None, :] < kv_bound
+        s = jnp.where(mask[:, None, None], s, NEG_INF)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         p = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m - m_new)
@@ -236,6 +243,20 @@ def _flash(q: jax.Array, k: jax.Array, v: jax.Array, *,
 def _split_heads(x: jax.Array, n: int, hd: int) -> jax.Array:
     B, S, _ = x.shape
     return x.reshape(B, S, n, hd)
+
+
+def _cache_write(buf: jax.Array, update: jax.Array, pos) -> jax.Array:
+    """Write ``update`` (B, S, ...) into ``buf`` (B, T, ...) at time index
+    ``pos``: scalar (uniform batch, the wave engine / teacher-forced paths)
+    or (B,) (continuous batching, each slot at its own depth)."""
+    update = update.astype(buf.dtype)
+    if getattr(pos, "ndim", 0):
+        def one(b, u, p):
+            return jax.lax.dynamic_update_slice(
+                b, u, (p,) + (0,) * (b.ndim - 1))
+        return jax.vmap(one)(buf, update, pos)
+    return jax.lax.dynamic_update_slice(
+        buf, update, (0, pos) + (0,) * (buf.ndim - 2))
 
 
 def gqa_attention(p: Dict, x: jax.Array, cfg: ModelConfig, *,
@@ -267,10 +288,8 @@ def gqa_attention(p: Dict, x: jax.Array, cfg: ModelConfig, *,
 
     new_cache = None
     if cache is not None:
-        ck = jax.lax.dynamic_update_slice(
-            cache["k"], k.astype(cache["k"].dtype), (0, cache["pos"], 0, 0))
-        cv = jax.lax.dynamic_update_slice(
-            cache["v"], v.astype(cache["v"].dtype), (0, cache["pos"], 0, 0))
+        ck = _cache_write(cache["k"], k, cache["pos"])
+        cv = _cache_write(cache["v"], v, cache["pos"])
         new_cache = {"k": ck, "v": cv, "pos": cache["pos"] + S}
         k_att, v_att = ck, cv
         kv_valid = cache["pos"] + S
@@ -318,12 +337,8 @@ def mla_attention(p: Dict, x: jax.Array, cfg: ModelConfig, *,
 
     new_cache = None
     if cache is not None:
-        ckv = jax.lax.dynamic_update_slice(
-            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype),
-            (0, cache["pos"], 0))
-        cpe = jax.lax.dynamic_update_slice(
-            cache["k_pe"], k_pe.astype(cache["k_pe"].dtype),
-            (0, cache["pos"], 0))
+        ckv = _cache_write(cache["c_kv"], c_kv, cache["pos"])
+        cpe = _cache_write(cache["k_pe"], k_pe, cache["pos"])
         new_cache = {"c_kv": ckv, "k_pe": cpe, "pos": cache["pos"] + S}
         c_att, pe_att = ckv, cpe
         kv_valid = cache["pos"] + S

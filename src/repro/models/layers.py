@@ -144,25 +144,34 @@ def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
 
 def rope_tables(seq: int, dim: int, theta: float,
                 offset: int | jax.Array = 0) -> Tuple[jax.Array, jax.Array]:
-    """cos/sin tables (seq, dim/2), fp32."""
+    """cos/sin tables, fp32.  Scalar ``offset`` -> (seq, dim/2); vector
+    ``offset`` (B,) (continuous-batching decode, per-slot positions) ->
+    (B, seq, dim/2)."""
     half = dim // 2
     freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
-    pos = jnp.arange(seq, dtype=jnp.float32) + jnp.asarray(offset, jnp.float32)
-    ang = pos[:, None] * freqs[None, :]
+    off = jnp.asarray(offset, jnp.float32)
+    pos = jnp.arange(seq, dtype=jnp.float32) + off[..., None]
+    ang = pos[..., None] * freqs
     return jnp.cos(ang), jnp.sin(ang)
 
 
 def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array,
                rotate_fraction: float = 1.0) -> jax.Array:
     """x: (B, S, H, D).  Rotates the first ``rotate_fraction`` of D (the
-    chatglm 2d-rope case uses 0.5), split-half convention."""
+    chatglm 2d-rope case uses 0.5), split-half convention.  Tables are
+    (S, D/2) shared across the batch, or (B, S, D/2) per-slot (ragged
+    decode)."""
     d = x.shape[-1]
     rd = int(d * rotate_fraction)
     rd -= rd % 2
     xr, xp = x[..., :rd], x[..., rd:]
     x1, x2 = jnp.split(xr, 2, axis=-1)
-    c = cos[None, :, None, : rd // 2].astype(x.dtype)
-    s = sin[None, :, None, : rd // 2].astype(x.dtype)
+    if cos.ndim == 3:        # per-slot tables: (B, S, half) -> (B, S, 1, half)
+        c = cos[:, :, None, : rd // 2].astype(x.dtype)
+        s = sin[:, :, None, : rd // 2].astype(x.dtype)
+    else:
+        c = cos[None, :, None, : rd // 2].astype(x.dtype)
+        s = sin[None, :, None, : rd // 2].astype(x.dtype)
     rot = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
     return jnp.concatenate([rot, xp], axis=-1) if rd < d else rot
 

@@ -332,9 +332,80 @@ def prefill(params: PyTree, cfg: ModelConfig, batch: Dict, caches: PyTree
     return _serve(params, cfg, batch, caches, pos_offset=0)
 
 
+def prefill_ragged(params: PyTree, cfg: ModelConfig, batch: Dict,
+                   caches: PyTree, last_index: jax.Array
+                   ) -> Tuple[jax.Array, PyTree]:
+    """Prefill for right-padded prompts (real tokens first, pad after):
+    returns logits gathered at per-row ``last_index`` (the final REAL
+    token) instead of the last position.
+
+    The pad tail writes garbage KV past each prompt; the serving layer
+    masks it with a per-slot validity bound (cache pos = true length) and
+    decode overwrites it in place — so prompts of different lengths share
+    one jitted bucket without perturbing logits.
+    """
+    x = _embed_inputs(params, cfg, batch)
+    x, new_caches, _ = _run_blocks(params, cfg, x, pos_offset=0,
+                                   caches=caches)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = (params["embed"]["table"] if cfg.tie_embeddings
+            else params["lm_head"])
+    idx = jnp.asarray(last_index, jnp.int32)
+    xl = jnp.take_along_axis(x, idx[:, None, None], axis=1)   # (B, 1, D)
+    logits = head_apply(head, xl, cfg.final_logit_softcap)
+    return logits[:, 0], new_caches
+
+
 def decode_step(params: PyTree, cfg: ModelConfig, tokens: jax.Array,
                 caches: PyTree, pos: jax.Array
                 ) -> Tuple[jax.Array, PyTree]:
-    """One autoregressive step.  tokens (B, 1); pos scalar int32 (uniform
-    position — the serving layer handles ragged batches by max-pos)."""
+    """One autoregressive step.  tokens (B, 1); pos int32 — scalar for a
+    uniform wave (the seed engine's max-pos convention) or (B,) for
+    per-slot ragged positions (continuous batching; caches must then carry
+    per-slot pos leaves, see ``expand_cache_pos``)."""
     return _serve(params, cfg, {"tokens": tokens}, caches, pos_offset=pos)
+
+
+# ---------------------------------------------------------------------------
+# Continuous-batching cache utilities (slot-level admission)
+# ---------------------------------------------------------------------------
+
+def _path_keys(path) -> Tuple:
+    return tuple(getattr(p, "key", None) for p in path)
+
+
+def expand_cache_pos(caches: PyTree, batch: int) -> PyTree:
+    """Per-slot cache positions: replace every per-layer ``pos`` leaf
+    (scalar, or (G,) under the scanned group stack) with a ``(..., batch)``
+    int vector so each slot advances independently."""
+    def fn(path, leaf):
+        if "pos" in _path_keys(path):
+            return jnp.zeros(leaf.shape + (batch,), leaf.dtype)
+        return leaf
+    return jax.tree_util.tree_map_with_path(fn, caches)
+
+
+def insert_slot_caches(caches: PyTree, slot_caches: PyTree, slot: jax.Array,
+                       pos_value: jax.Array) -> PyTree:
+    """Write a freshly prefilled single-request cache (batch=1, scalar
+    pos) into slot ``slot`` of a per-slot batched cache tree; the slot's
+    pos leaves are set to ``pos_value`` (the request's true prompt length,
+    not the padded bucket).  Grouped (scanned) leaves carry the stack dim
+    first, so their batch axis is 1; tail/first leaves batch at axis 0.
+    """
+    pos_value = jnp.asarray(pos_value, jnp.int32)
+
+    def fn(path, big, small):
+        names = _path_keys(path)
+        if "pos" in names:
+            val = jnp.broadcast_to(pos_value.astype(big.dtype),
+                                   big.shape[:-1] + (1,))
+            starts = (0,) * (big.ndim - 1) + (slot,)
+            return jax.lax.dynamic_update_slice(big, val, starts)
+        ax = 1 if names and names[0] == "groups" else 0
+        starts = [0] * big.ndim
+        starts[ax] = slot
+        return jax.lax.dynamic_update_slice(big, small.astype(big.dtype),
+                                            tuple(starts))
+
+    return jax.tree_util.tree_map_with_path(fn, caches, slot_caches)

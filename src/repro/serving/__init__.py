@@ -1,2 +1,10 @@
-"""Batched serving: prefill/decode waves over the model zoo."""
-from repro.serving.engine import Engine, Request, Result  # noqa
+"""Serving: slot-level continuous batching + the wave baseline.
+
+``Engine`` is the continuous engine; ``WaveEngine`` keeps the seed
+wave-drain behavior for benchmarks.  ``ScheduleCache`` (re-exported from
+``core.scheduler``) is the shape -> (dataflow, arrangement, k_fold) memo
+both the engine hot path and ``kernels.ops.matmul`` consult.
+"""
+from repro.core.scheduler import ScheduleCache  # noqa
+from repro.serving.engine import (ContinuousEngine, Engine, Request,  # noqa
+                                  Result, WaveEngine)

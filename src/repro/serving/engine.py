@@ -1,30 +1,124 @@
-"""Batched serving engine: prefill + decode waves, slot-based scheduling.
+"""Serving engines: slot-level continuous batching (v2) + the wave baseline.
 
-Wave-level continuous batching: requests queue; each wave fills all slots,
-prefills once (right-padded prompts share one jitted prefill), then decodes
-in lockstep with per-slot stop tracking.  Uniform KV write positions keep
-the decode step a single fused program (per-slot ragged positions would
-force scatter-per-slot — the engine pads prompts instead; the padding
-tokens are masked out of attention by the cache-validity bound).
+``ContinuousEngine`` (the default ``Engine``) admits requests per SLOT:
+the moment a slot finishes its request, the next queued request is
+prefilled into that slot while the other slots keep decoding — no wave
+barrier.  The design:
 
-The decode step is one jitted function reused across waves; sampling is
-temperature/greedy with a per-slot PRNG.
+  * **Per-slot KV validity.**  Caches carry a per-slot ``pos`` vector
+    (``network.expand_cache_pos``); attention masks each slot at its own
+    bound and decode writes each slot at its own depth, so slots at
+    different sequence depths batch into one jitted decode step.
+  * **Bucketed ragged prefill.**  A new prompt is right-padded to the next
+    bucket length and prefilled alone (batch=1) through a per-bucket jit
+    cache (``network.prefill_ragged`` gathers the logits of the last REAL
+    token), then spliced into its slot with ``network.insert_slot_caches``
+    with pos = the true prompt length — pad garbage beyond it is masked by
+    the validity bound and progressively overwritten by decode.  SSM /
+    hybrid archs (recurrent state is order-sensitive) fall back to the
+    seed's right-ALIGNED alignment with pos = bucket length.
+  * **Async queue API.**  ``submit`` enqueues from any thread;
+    ``serve_forever``/``start`` pump admission+decode on a background
+    thread; results arrive on a thread-safe queue (``get_result``).
+    ``run(requests)`` is the synchronous convenience wrapper.
+
+**ScheduleCache contract.**  The engine owns a
+:class:`repro.core.scheduler.ScheduleCache` and, on every admission and
+decode-shape change, resolves the step's dominant p-GEMMs
+(qkv/out/mlp/head projections at the current token count) through the
+paper-§5 exploration — first sight of a (M, N, K, precision) explores and
+memoizes the (dataflow, arrangement, k_fold) winner; afterwards the hot
+path is a dict hit.  The same cache object plugs into
+``kernels.ops.matmul(..., schedule=...)``, which applies the memoized
+choice to the Pallas dispatch, so offline exploration and online serving
+share one schedule store (``engine.schedule.stats()`` reports hit rates).
+
+``WaveEngine`` keeps the seed behavior (whole wave prefilled together,
+drained together) as the benchmark baseline.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+import queue as _queue
+import threading
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.precision import precision_for_dtype
+from repro.core.scheduler import ScheduleCache
 from repro.models import network as N
-from repro.models.config import ModelConfig
+from repro.models.config import BlockKind, ModelConfig
 
 PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Jitted serving programs, cached PER CONFIG (not per engine instance):
+# spinning up a fresh engine over the same model must not recompile, and
+# sampling is fused into each program so one step = one dispatch + one sync.
+# ---------------------------------------------------------------------------
+
+def _sample_traced(key, logits, temps):
+    key, sub = jax.random.split(key)
+    greedy = jnp.argmax(logits, axis=-1)
+    sampled = jax.random.categorical(
+        sub, logits / jnp.maximum(temps, 1e-6)[:, None])
+    return jnp.where(temps <= 0, greedy, sampled).astype(jnp.int32), key
+
+
+#: (id(cfg), max_len) -> (cfg strong-ref, {name: jitted fn}); the strong
+#: ref pins the id so the cache key stays valid.  LRU-bounded: a process
+#: sweeping many configs must not accumulate compiled executables forever.
+_FN_CACHE: "collections.OrderedDict[Tuple[int, int], Tuple[ModelConfig, Dict[str, Any]]]" = (
+    collections.OrderedDict())
+_FN_CACHE_MAX = 8
+
+
+def _engine_fns(cfg: ModelConfig, max_len: int) -> Dict[str, Any]:
+    ent = _FN_CACHE.get((id(cfg), max_len))
+    if ent is not None and ent[0] is cfg:
+        _FN_CACHE.move_to_end((id(cfg), max_len))
+        return ent[1]
+    dt = jnp.dtype(cfg.compute_dtype)
+
+    def decode_sample(params, toks, caches, pos, key, temps):
+        logits, caches = N.decode_step(params, cfg, toks, caches, pos)
+        tok, key = _sample_traced(key, logits, temps)
+        return tok, caches, key
+
+    def admit_ragged(params, toks, caches, slot, pos0, last_idx, key, temp):
+        small = N.init_caches(cfg, 1, max_len, dt)
+        logits, small = N.prefill_ragged(params, cfg, {"tokens": toks},
+                                         small, last_idx)
+        caches = N.insert_slot_caches(caches, small, slot, pos0)
+        tok, key = _sample_traced(key, logits, temp[None])
+        return tok[0], caches, key
+
+    def admit_aligned(params, toks, caches, slot, pos0, key, temp):
+        small = N.init_caches(cfg, 1, max_len, dt)
+        logits, small = N.prefill(params, cfg, {"tokens": toks}, small)
+        caches = N.insert_slot_caches(caches, small, slot, pos0)
+        tok, key = _sample_traced(key, logits, temp[None])
+        return tok[0], caches, key
+
+    fns = {
+        "decode_sample": jax.jit(decode_sample),
+        "admit_ragged": jax.jit(admit_ragged),
+        "admit_aligned": jax.jit(admit_aligned),
+        "prefill": jax.jit(lambda p, b, c: N.prefill(p, cfg, b, c)),
+        "decode": jax.jit(
+            lambda p, t, c, pos: N.decode_step(p, cfg, t, c, pos)),
+    }
+    _FN_CACHE[(id(cfg), max_len)] = (cfg, fns)
+    while len(_FN_CACHE) > _FN_CACHE_MAX:
+        _FN_CACHE.popitem(last=False)
+    return fns
 
 
 @dataclasses.dataclass
@@ -42,9 +136,321 @@ class Result:
     tokens: np.ndarray
     prefill_s: float
     decode_s: float
+    latency_s: float = 0.0      # submit -> finish (continuous engine)
+    ttft_s: float = 0.0         # submit -> first token
 
 
-class Engine:
+def _bucket_for(n: int, buckets: Sequence[int]) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return buckets[-1]
+
+
+@dataclasses.dataclass
+class _Slot:
+    """Host-side state of one in-flight request."""
+
+    req: Request
+    produced: List[int]
+    cur_tok: int
+    t_submit: float
+    t_admit: float
+    t_prefill_done: float
+    t_first: float
+
+
+class ContinuousEngine:
+    """Slot-level continuous-batching engine (see module docstring)."""
+
+    def __init__(self, cfg: ModelConfig, params: PyTree, *, slots: int = 8,
+                 max_len: int = 2048, seed: int = 0,
+                 prefill_buckets: Optional[Sequence[int]] = None,
+                 schedule_cache: Optional[ScheduleCache] = None):
+        if cfg.is_encoder_only:
+            raise ValueError(f"{cfg.name} is encoder-only: no decode serving")
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.key = jax.random.PRNGKey(seed)
+        self.schedule = schedule_cache or ScheduleCache()
+
+        # recurrent (SSM) state is order-sensitive: trailing pad tokens
+        # would corrupt it, so hybrid archs keep the seed's right-aligned
+        # (leading-pad) prefill; pure-attention archs run exact ragged
+        # prefill with the validity bound masking the pad tail.
+        kinds = tuple(cfg.pattern) + tuple(cfg.tail)
+        self._ragged = BlockKind.MAMBA2 not in kinds
+
+        if prefill_buckets is None:
+            prefill_buckets, b = [], 16
+            while b < max_len:
+                prefill_buckets.append(b)
+                b *= 2
+        # every admissible prompt (<= max_len) must have a bucket: drop
+        # oversize buckets, always keep max_len as the terminal bucket.
+        self.buckets = sorted(
+            {b for b in prefill_buckets if b <= max_len} | {max_len})
+
+        self._fns = _engine_fns(cfg, max_len)
+
+        self.caches = N.expand_cache_pos(
+            N.init_caches(cfg, slots, max_len), slots)
+        self._slots: List[Optional[_Slot]] = [None] * slots
+        self._pos = np.zeros(slots, np.int32)   # mirror of cache pos leaves
+
+        self._pending: "collections.deque[Tuple[Request, float]]" = (
+            collections.deque())
+        self._results: "_queue.Queue[Result]" = _queue.Queue()
+        self._cv = threading.Condition()
+        self._stop = False
+        self._thread: Optional[threading.Thread] = None
+        self._loop_error: Optional[BaseException] = None
+        self.steps = 0          # decode steps executed (benchmark metric)
+        self.prefills = 0
+
+    # -- async request/result API -------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        """Enqueue a request (thread-safe); admitted at the next step.
+        Raises immediately (in the caller's thread) on requests that can
+        never be served, so the background loop stays healthy."""
+        if len(req.prompt) > self.max_len:
+            raise ValueError(
+                f"prompt {len(req.prompt)} exceeds max_len {self.max_len}")
+        if len(req.prompt) == 0:
+            raise ValueError("empty prompt")
+        with self._cv:
+            self._pending.append((req, time.perf_counter()))
+            self._cv.notify()
+
+    def get_result(self, timeout: Optional[float] = None) -> Result:
+        """Blocks until the next finished request (completion order).
+        Raises RuntimeError if the serve loop died instead of hanging —
+        but drains already-finished results first."""
+        deadline = None if timeout is None else time.perf_counter() + timeout
+        while True:
+            step_timeout = (0.1 if deadline is None else
+                            min(0.1, max(0.0, deadline - time.perf_counter())))
+            try:
+                return self._results.get(timeout=step_timeout)
+            except _queue.Empty:
+                if self._loop_error is not None:
+                    raise RuntimeError(
+                        "serve loop died") from self._loop_error
+                if deadline is not None and time.perf_counter() >= deadline:
+                    raise
+
+    def start(self) -> None:
+        """Pump admission + decode on a background thread."""
+        if self._thread is not None:
+            return
+        self._stop = False
+        self._thread = threading.Thread(target=self._serve_loop,
+                                        name="engine-serve", daemon=True)
+        self._thread.start()
+
+    def stop(self) -> None:
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _serve_loop(self) -> None:
+        while True:
+            with self._cv:
+                if self._stop:
+                    return
+                idle = (not self._pending
+                        and all(s is None for s in self._slots))
+                if idle:
+                    self._cv.wait(timeout=0.05)
+                    continue
+            try:
+                self.step()
+            except BaseException as e:  # noqa: BLE001 - surface via getters
+                self._loop_error = e
+                raise
+
+    # -- scheduling-space wiring --------------------------------------------
+
+    def _register_gemms(self, m_tokens: int, head_rows: int) -> None:
+        """Resolve the step's dominant p-GEMMs through the schedule cache
+        (memoized: only the first sight of a shape explores).  ``m_tokens``
+        is the block-interior token count; ``head_rows`` the rows reaching
+        the LM head (1 for a single-request prefill, ``slots`` for a
+        decode step — the head sees one row per batched sequence)."""
+        cfg = self.cfg
+        prec = precision_for_dtype(cfg.compute_dtype, default="FP32").name
+        d = cfg.d_model
+        shapes = [(m_tokens, cfg.n_heads * cfg.hd, d),
+                  (m_tokens, cfg.n_kv_heads * cfg.hd, d),
+                  (m_tokens, d, cfg.n_heads * cfg.hd)]
+        if cfg.moe is not None:
+            shapes.append((m_tokens, cfg.moe.d_ff_expert, d))
+            shapes.append((m_tokens, d, cfg.moe.d_ff_expert))
+        else:
+            shapes.append((m_tokens, cfg.d_ff, d))
+            shapes.append((m_tokens, d, cfg.d_ff))
+        shapes.append((head_rows, cfg.vocab, d))
+        for M, Nn, K in shapes:
+            self.schedule.resolve(M, Nn, K, prec)
+
+    # -- admission -----------------------------------------------------------
+
+    def _free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self._slots):
+            if s is None:
+                return i
+        return None
+
+    def _admit_one(self, slot: int, req: Request, t_submit: float) -> None:
+        plen = len(req.prompt)
+        if plen > self.max_len:
+            raise ValueError(f"prompt {plen} exceeds max_len {self.max_len}")
+        bucket = _bucket_for(plen, self.buckets)
+        t0 = time.perf_counter()
+        self._register_gemms(bucket, 1)
+
+        toks = np.zeros((1, bucket), np.int32)
+        temp = jnp.asarray(req.temperature, jnp.float32)
+        slot_j = jnp.asarray(slot, jnp.int32)
+        if self._ragged:
+            toks[0, :plen] = req.prompt
+            pos0 = plen
+            tok, self.caches, self.key = self._fns["admit_ragged"](
+                self.params, jnp.asarray(toks), self.caches, slot_j,
+                jnp.asarray(pos0, jnp.int32),
+                jnp.asarray([plen - 1], jnp.int32), self.key, temp)
+        else:
+            # aligned mode consumes the whole bucket as KV positions, so a
+            # terminal (== max_len) bucket would leave zero decode headroom
+            # and silently truncate to 1 token; re-pad such prompts to the
+            # smallest valid length instead (SSM prefill requires S to be
+            # a multiple of the scan chunk, else 8).  Prompts within one
+            # quantum of max_len still truncate — a window, not a bug.
+            if bucket >= self.max_len and plen < self.max_len:
+                q = (self.cfg.ssm.chunk if self.cfg.ssm is not None else 8)
+                # any S <= chunk is a valid prefill length; beyond that S
+                # must be a chunk multiple (ssm.ssd_chunked contract)
+                bucket = plen if plen <= q else -(-plen // q) * q
+                bucket = min(self.max_len, bucket)
+                toks = np.zeros((1, bucket), np.int32)
+            toks[0, bucket - plen:] = req.prompt   # right-align (seed rule)
+            pos0 = bucket
+            tok, self.caches, self.key = self._fns["admit_aligned"](
+                self.params, jnp.asarray(toks), self.caches, slot_j,
+                jnp.asarray(pos0, jnp.int32), self.key, temp)
+        self._pos[slot] = pos0
+        self.prefills += 1
+
+        tok0 = int(np.asarray(tok))
+        t1 = time.perf_counter()
+        st = _Slot(req=req, produced=[tok0], cur_tok=tok0,
+                   t_submit=t_submit, t_admit=t0, t_prefill_done=t1,
+                   t_first=t1)
+        self._slots[slot] = st
+        # pos0 == max_len means zero decode headroom (aligned mode can pad
+        # a prompt up to the full window): the next write would clamp onto
+        # the last real token, so finish with the prefill token instead.
+        if (st.cur_tok == req.eos
+                or len(st.produced) >= req.max_new_tokens
+                or pos0 >= self.max_len):
+            self._finish(slot)
+
+    def _admit(self) -> None:
+        while True:
+            slot = self._free_slot()
+            if slot is None:
+                return
+            with self._cv:
+                if not self._pending:
+                    return
+                req, t_submit = self._pending.popleft()
+            self._admit_one(slot, req, t_submit)
+
+    def _finish(self, slot: int) -> None:
+        st = self._slots[slot]
+        now = time.perf_counter()
+        self._results.put(Result(
+            rid=st.req.rid,
+            tokens=np.asarray(st.produced, np.int32),
+            prefill_s=st.t_prefill_done - st.t_admit,
+            decode_s=now - st.t_prefill_done,
+            latency_s=now - st.t_submit,
+            ttft_s=st.t_first - st.t_submit))
+        self._slots[slot] = None
+
+    # -- the decode step ------------------------------------------------------
+
+    def step(self) -> int:
+        """Admit what fits, run ONE batched decode step over the active
+        slots, finish/refill.  Returns the number of active slots after
+        the step (0 = idle)."""
+        self._admit()
+        active = [i for i, s in enumerate(self._slots) if s is not None]
+        if not active:
+            return 0
+
+        self._register_gemms(self.slots, self.slots)
+        toks = np.zeros((self.slots, 1), np.int32)
+        temps = np.zeros(self.slots, np.float32)
+        for i in active:
+            toks[i, 0] = self._slots[i].cur_tok
+            temps[i] = self._slots[i].req.temperature
+
+        tok, self.caches, self.key = self._fns["decode_sample"](
+            self.params, jnp.asarray(toks), self.caches,
+            jnp.asarray(self._pos), self.key, jnp.asarray(temps))
+        # every slot's cache pos advanced by 1 (inactive slots write masked
+        # garbage in place); mirror it so the next step agrees.
+        self._pos += 1
+        self.steps += 1
+
+        tok_np = np.asarray(tok)
+        for i in active:
+            st = self._slots[i]
+            st.produced.append(int(tok_np[i]))
+            st.cur_tok = int(tok_np[i])
+            if (st.cur_tok == st.req.eos
+                    or len(st.produced) >= st.req.max_new_tokens
+                    or self._pos[i] >= self.max_len):
+                self._finish(i)
+        self._admit()
+        return sum(s is not None for s in self._slots)
+
+    # -- synchronous convenience ----------------------------------------------
+
+    def run(self, requests: Sequence[Request]) -> List[Result]:
+        """Serve all requests; returns results in COMPLETION order (rid
+        identifies the request — short requests admitted late legitimately
+        finish before long early ones).  Mutually exclusive with the
+        background loop: engine state is single-pumper."""
+        if self._thread is not None:
+            raise RuntimeError(
+                "run() while the background serve loop is active; use "
+                "submit()/get_result() instead (or stop() first)")
+        for r in requests:
+            self.submit(r)
+        out: List[Result] = []
+        while len(out) < len(requests):
+            self.step()
+            while True:
+                try:
+                    out.append(self._results.get_nowait())
+                except _queue.Empty:
+                    break
+        return out
+
+
+class WaveEngine:
+    """Seed wave-level engine (kept as the benchmark baseline): each wave
+    fills all slots, prefills once (right-padded prompts share one jitted
+    prefill), then decodes in lockstep until the whole wave drains."""
+
     def __init__(self, cfg: ModelConfig, params: PyTree, *, slots: int = 8,
                  max_len: int = 2048, seed: int = 0):
         self.cfg = cfg
@@ -52,29 +458,27 @@ class Engine:
         self.slots = slots
         self.max_len = max_len
         self.key = jax.random.PRNGKey(seed)
-
-        self._prefill = jax.jit(
-            lambda p, b, c: N.prefill(p, cfg, b, c))
-        self._decode = jax.jit(
-            lambda p, t, c, pos: N.decode_step(p, cfg, t, c, pos))
+        self.steps = 0
+        fns = _engine_fns(cfg, max_len)
+        self._prefill, self._decode = fns["prefill"], fns["decode"]
 
     def _sample(self, logits: jax.Array, temps: np.ndarray) -> jax.Array:
-        self.key, sub = jax.random.split(self.key)
-        greedy = jnp.argmax(logits, axis=-1)
-        temp = jnp.asarray(np.maximum(temps, 1e-6), jnp.float32)
-        sampled = jax.random.categorical(sub, logits / temp[:, None])
-        return jnp.where(jnp.asarray(temps) <= 0, greedy, sampled)
+        tok, self.key = _sample_traced(self.key, logits,
+                                       jnp.asarray(temps, jnp.float32))
+        return tok
 
     def run(self, requests: Sequence[Request]) -> List[Result]:
         """Serve all requests in waves of ``slots``."""
         out: List[Result] = []
         queue = list(requests)
+        t_start = time.perf_counter()
         while queue:
             wave, queue = queue[:self.slots], queue[self.slots:]
-            out.extend(self._run_wave(wave))
+            out.extend(self._run_wave(wave, t_start))
         return out
 
-    def _run_wave(self, wave: Sequence[Request]) -> List[Result]:
+    def _run_wave(self, wave: Sequence[Request], t_start: float
+                  ) -> List[Result]:
         B = len(wave)
         plen = max(len(r.prompt) for r in wave)
         toks = np.zeros((B, plen), np.int32)
@@ -103,13 +507,24 @@ class Engine:
                         done[i] = True
             if done.all():
                 break
+            if plen + step >= self.max_len:
+                # KV window exhausted: a further write would clamp onto the
+                # last row and corrupt attention — truncate the wave.
+                break
             pos = jnp.asarray(plen + step, jnp.int32)
             logits, caches = self._decode(self.params,
                                           tok[:, None].astype(jnp.int32),
                                           caches, pos)
+            self.steps += 1
             tok = self._sample(logits, temps)
         jax.block_until_ready(logits)
         t2 = time.perf_counter()
 
         return [Result(r.rid, np.asarray(produced[i], np.int32),
-                       t1 - t0, t2 - t1) for i, r in enumerate(wave)]
+                       t1 - t0, t2 - t1, latency_s=t2 - t_start,
+                       ttft_s=t1 - t_start)
+                for i, r in enumerate(wave)]
+
+
+#: default engine: slot-level continuous batching
+Engine = ContinuousEngine

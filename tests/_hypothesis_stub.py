@@ -1,0 +1,140 @@
+"""Vendored fallback for ``hypothesis`` when the real package is absent.
+
+The tier-1 suite property-tests the scheduling/tiling/kernel layers with
+``@given`` over integer/list/sampled strategies.  Offline containers cannot
+``pip install hypothesis``, so this shim replays each test over a FIXED,
+deterministic set of example draws: boundary values first (min/max/1), then
+pseudo-random draws from a per-test seeded PRNG.  It implements exactly the
+strategy surface the suite uses (``integers``, ``lists``, ``sampled_from``)
+plus pass-through ``settings``; anything fancier should use the real
+package.
+
+Import pattern (each property-test module):
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:                       # offline container
+        from _hypothesis_stub import given, settings, strategies as st
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+from types import SimpleNamespace
+from typing import Any, Callable, List
+
+#: examples per @given test (boundaries + random draws).  Kept small: the
+#: stub's job is regression coverage, not exhaustive search.
+MAX_EXAMPLES_CAP = 25
+
+
+class Strategy:
+    """A deterministic example source: ``boundaries`` are always replayed
+    first, then ``draw(rng)`` fills the remaining example budget."""
+
+    def __init__(self, draw: Callable[[random.Random], Any],
+                 boundaries: List[Any]):
+        self._draw = draw
+        self.boundaries = boundaries
+
+    def draw(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> Strategy:
+    span = [min_value, max_value]
+    mids = [v for v in ((min_value + max_value) // 2, min_value + 1)
+            if min_value <= v <= max_value]
+    return Strategy(lambda rng: rng.randint(min_value, max_value),
+                    span + mids)
+
+
+def sampled_from(elements) -> Strategy:
+    elems = list(elements)
+    return Strategy(lambda rng: rng.choice(elems), list(elems))
+
+
+def lists(elements: Strategy, min_size: int = 0,
+          max_size: int = 10) -> Strategy:
+    def draw(rng: random.Random):
+        n = rng.randint(min_size, max_size)
+        return [elements.draw(rng) for _ in range(n)]
+
+    def clamp(xs):
+        """Cycle-pad up to min_size, truncate to max_size."""
+        while len(xs) < min_size:
+            xs.append(xs[len(xs) % len(elements.boundaries)])
+        return xs[: max(min_size, min(len(xs), max_size))]
+
+    bounds = []
+    if elements.boundaries and max_size > 0:
+        bounds.append(clamp([elements.boundaries[0]]))
+        bounds.append(clamp(list(elements.boundaries)))
+    return Strategy(draw, bounds)
+
+
+strategies = SimpleNamespace(integers=integers, sampled_from=sampled_from,
+                             lists=lists)
+
+
+def settings(*, max_examples: int = 100, deadline=None, **_ignored):
+    """Records the example budget on the decorated function; ``given``
+    reads it (in either decorator order) and caps it at the stub limit."""
+
+    def deco(fn):
+        fn._stub_settings = {"max_examples": max_examples}
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies: Strategy, **kw_strategies: Strategy):
+    """Replays the test over boundary examples + seeded random draws."""
+
+    def deco(fn):
+        sig = inspect.signature(fn)
+        params = list(sig.parameters)
+        # positional strategies bind to fn's leading parameters; whatever is
+        # left (pytest fixtures) stays visible in the wrapper's signature so
+        # collection still injects them.
+        pos_names = params[: len(arg_strategies)]
+        provided = set(pos_names) | set(kw_strategies)
+        remaining = [p for n, p in sig.parameters.items()
+                     if n not in provided]
+
+        @functools.wraps(fn)
+        def wrapper(*call_args, **call_kwargs):
+            cfg = (getattr(wrapper, "_stub_settings", None)
+                   or getattr(fn, "_stub_settings", {}))
+            budget = min(cfg.get("max_examples", MAX_EXAMPLES_CAP),
+                         MAX_EXAMPLES_CAP)
+            rng = random.Random(fn.__qualname__)
+
+            names = pos_names + list(kw_strategies)
+            strats = (list(arg_strategies)
+                      + [kw_strategies[n] for n in kw_strategies])
+
+            # boundary examples: i-th boundary of every strategy together
+            n_bound = max((len(s.boundaries) for s in strats), default=0)
+            examples = []
+            for i in range(n_bound):
+                examples.append([s.boundaries[min(i, len(s.boundaries) - 1)]
+                                 for s in strats])
+            while len(examples) < budget:
+                examples.append([s.draw(rng) for s in strats])
+
+            for ex in examples[:budget]:
+                kw = dict(zip(names, ex))
+                try:
+                    fn(*call_args, **{**kw, **call_kwargs})
+                except Exception as e:  # noqa: BLE001 - re-raise with example
+                    raise AssertionError(
+                        f"falsifying example (hypothesis stub): "
+                        f"kwargs={kw}: {e}") from e
+
+        wrapper.__signature__ = sig.replace(parameters=remaining)
+        return wrapper
+
+    return deco

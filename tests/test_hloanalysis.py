@@ -33,6 +33,22 @@ def test_walker_multiplies_scan_trips():
     assert max(t for _, t in r["loops"]) == 10
 
 
+def test_walker_parses_tiled_layout_operands():
+    """TPU dumps annotate layouts like ``{1,0:T(8,128)}``; the dot-operand
+    parser must still recover the inline LHS shape (regression: the layout
+    regex only accepted ``{digits,commas}`` and silently fell back to
+    K=1)."""
+    mod = HloModule("""
+ENTRY %main.1 (p0: f32[4,8], p1: f32[8,16]) -> f32[4,16] {
+  %p0 = f32[4,8]{1,0:T(8,128)} parameter(0)
+  %p1 = f32[8,16]{1,0:T(8,128)} parameter(1)
+  ROOT %dot.1 = f32[4,16]{1,0:T(8,128)} dot(f32[4,8]{1,0:T(8,128)} %p0, f32[8,16]{1,0:T(8,128)} %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+""")
+    flops, _ = mod.dot_flops()
+    assert flops == 2 * 4 * 16 * 8
+
+
 def test_jaxpr_cost_exact_dot():
     a = jnp.zeros((64, 32), jnp.float32)
     b = jnp.zeros((32, 16), jnp.float32)

@@ -2,7 +2,10 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:              # offline container: vendored shim
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.core.precision import (ALL_PRECISIONS, BP16, FP16, FP32, FP64,
                                   INT8, INT16, INT32, INT64, PE_BITS,

@@ -4,7 +4,10 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:              # offline container: vendored shim
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.core.dataflow import (ArrayShape, Dataflow, Direction, Pattern,
                                  candidate_costs, cost_os, cost_simd,

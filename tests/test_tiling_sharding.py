@@ -3,7 +3,10 @@
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:              # offline container: vendored shim
+    from _hypothesis_stub import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 
 from repro.core.dataflow import Dataflow
