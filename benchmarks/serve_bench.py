@@ -1,19 +1,38 @@
-"""Serving benchmark: continuous (slot-level) engine vs the seed wave engine.
+"""Serving benchmark: paged vs dense continuous batching vs the wave seed.
 
-Generates a mixed-length request trace (short interactive prompts mixed
-with long-decode stragglers — the workload wave batching is worst at),
-serves it through BOTH engines with identical params/sampling, and reports
-tokens/sec plus p50/p99 request latency.  The continuous engine wins by
-construction on this trace: a wave drains at the pace of its slowest
-member (sum over waves of max(max_new)) while slot-level admission keeps
-every slot busy (~total_tokens / slots decode steps).
+Generates a mixed-length request trace with SHARED PROMPT PREFIXES
+(groups of chat-style requests over one system prompt + long-prompt
+stragglers — the workload the paged KV pool is built for) and serves it
+through three engines with identical params/sampling:
+
+  wave        seed baseline: whole wave prefilled together, drained together
+  dense       continuous batching over dense ``slots x max_len`` KV stripes
+  paged       continuous batching over the block-paged KV pool (prefix
+              sharing + chunked prefill + batched admission)
+
+Reported per engine: tokens/sec, decode steps, request-latency p50/p99,
+TTFT p50/p95, peak KV bytes.  Paged adds the pool telemetry (blocks,
+shared-prefix token hits, peak block usage) and the decode-gap bound.
+
+Acceptance gates (exit nonzero on violation):
+  * continuous (dense) needs FEWER decode steps than wave for the same
+    token budget — the deterministic form of the PR-1 throughput gate
+    (wall-clock tok/s is reported but never gated: CI hosts are noisy);
+  * paged produces TOKEN-IDENTICAL greedy output to dense;
+  * paged peak KV bytes < dense KV bytes (the memory-ceiling win);
+  * at most ONE chunk batch runs between consecutive decode steps
+    (deterministic interleave bound — chunked prefill bounds the
+    admission stall by construction, the gate checks the construction
+    held; wall-clock gap times are reported as telemetry only);
+  * the paged-decode gather-GEMM shapes appear in the ScheduleCache
+    application log, recorded by the engine after each real paged-decode
+    dispatch (the paper's schedule space covers the new hot path).
 
     PYTHONPATH=src python -m benchmarks.serve_bench          # full trace
     PYTHONPATH=src python -m benchmarks.serve_bench --dry    # CI smoke
 
 Emits ``name,us_per_call,derived`` CSV lines (benchmarks/run.py contract)
-plus a human table, and exits nonzero if the continuous engine does not
-beat the wave engine on throughput (the acceptance gate).
+plus a human table, and writes experiments/bench/serve_bench.json.
 """
 
 from __future__ import annotations
@@ -30,45 +49,70 @@ import numpy as np
 ART_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                        "bench")
 
+PREFIX_LEN = 32          # shared system-prompt prefix (2 blocks of 16)
+
 
 def _trace(n_requests: int, slots: int, vocab: int, seed: int = 0):
-    """Mixed trace: mostly short chat-style requests + periodic long-decode
-    stragglers (one per wave-worth of requests, so every wave of the
-    baseline is held hostage by one straggler)."""
+    """Mixed shared-prefix trace: requests arrive in groups of 4 sharing a
+    system-prompt prefix; most are short chat turns, one per slots-worth
+    is a long-prompt straggler with a long decode (the request wave
+    batching is worst at, and whose prompt only chunked prefill admits
+    without stalling resident slots)."""
     from repro.serving.engine import Request
     rng = np.random.default_rng(seed)
+    prefixes = [rng.integers(3, vocab, PREFIX_LEN).astype(np.int32)
+                for _ in range(-(-n_requests // 4))]
     reqs = []
     for i in range(n_requests):
         straggler = (i % slots) == (slots - 1)
-        plen = int(rng.integers(24, 48) if straggler
-                   else rng.integers(4, 16))
+        tail_len = int(rng.integers(48, 64) if straggler
+                       else rng.integers(4, 16))
         max_new = int(rng.integers(24, 32) if straggler
                       else rng.integers(2, 8))
-        reqs.append(Request(
-            rid=i, prompt=rng.integers(3, vocab, plen).astype(np.int32),
-            max_new_tokens=max_new, eos=-1))   # eos=-1: decode full budget
+        prompt = np.concatenate([prefixes[i // 4],
+                                 rng.integers(3, vocab, tail_len
+                                              ).astype(np.int32)])
+        reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=max_new,
+                            eos=-1))   # eos=-1: decode the full budget
     return reqs
 
 
-def _summarize(name: str, results, wall: float, steps: int) -> Dict:
+def _pct(xs, q):
+    return round(float(np.percentile(xs, q)) * 1e3, 1)
+
+
+def _summarize(name: str, results, wall: float, eng) -> Dict:
     toks = int(sum(len(r.tokens) for r in results))
     lats = sorted(r.latency_s for r in results)
-    return {
+    ttfts = sorted(r.ttft_s for r in results)
+    gaps = np.diff(np.asarray(eng.decode_times, np.float64)) if (
+        hasattr(eng, "decode_times") and len(eng.decode_times) > 1
+    ) else np.asarray([0.0])
+    row = {
         "engine": name,
         "requests": len(results),
         "new_tokens": toks,
         "wall_s": round(wall, 3),
         "tok_per_s": round(toks / max(wall, 1e-9), 2),
-        "decode_steps": steps,
-        "p50_latency_ms": round(float(np.percentile(lats, 50)) * 1e3, 1),
-        "p99_latency_ms": round(float(np.percentile(lats, 99)) * 1e3, 1),
+        "decode_steps": eng.steps,
+        "p50_latency_ms": _pct(lats, 50),
+        "p99_latency_ms": _pct(lats, 99),
+        "p50_ttft_ms": _pct(ttfts, 50),
+        "p95_ttft_ms": _pct(ttfts, 95),
+        "max_decode_gap_ms": round(float(gaps.max()) * 1e3, 1),
     }
+    if hasattr(eng, "kv_bytes"):
+        kv = eng.kv_bytes()
+        row["kv_allocated_bytes"] = kv["allocated"]
+        row["kv_peak_bytes"] = kv["peak"]
+    return row
 
 
 def run_bench(n_requests: int, slots: int, max_len: int,
               warmup: bool = True) -> List[Dict]:
     import jax
     from repro import configs as CONFIGS
+    from repro.kernels import paged_attention as PA
     from repro.models import network as N
     from repro.serving.engine import ContinuousEngine, WaveEngine
 
@@ -76,43 +120,91 @@ def run_bench(n_requests: int, slots: int, max_len: int,
     params = N.init(cfg, jax.random.PRNGKey(0))
     reqs = _trace(n_requests, slots, cfg.vocab)
 
+    def engines():
+        return {
+            "wave": WaveEngine(cfg, params, slots=slots, max_len=max_len),
+            "dense": ContinuousEngine(cfg, params, slots=slots,
+                                      max_len=max_len, paged=False),
+            "paged": ContinuousEngine(cfg, params, slots=slots,
+                                      max_len=max_len, paged=True),
+        }
+
     if warmup:
         # run the SAME trace on throwaway engines: the jitted serving
         # programs are cached per config (engine.py), so the timed runs
         # below measure steady-state serving, not XLA compilation.
-        ContinuousEngine(cfg, params, slots=slots, max_len=max_len).run(reqs)
-        WaveEngine(cfg, params, slots=slots, max_len=max_len).run(reqs)
+        for eng in engines().values():
+            eng.run(reqs)
 
-    rows = []
-    eng_w = WaveEngine(cfg, params, slots=slots, max_len=max_len)
-    t0 = time.perf_counter()
-    res_w = eng_w.run(reqs)
-    rows.append(_summarize("wave", res_w, time.perf_counter() - t0,
-                           eng_w.steps))
+    rows, tokens_by_engine, paged_eng = [], {}, None
+    for name, eng in engines().items():
+        t0 = time.perf_counter()
+        res = eng.run(reqs)
+        rows.append(_summarize(name, res, time.perf_counter() - t0, eng))
+        tokens_by_engine[name] = {r.rid: list(map(int, r.tokens))
+                                  for r in res}
+        if name == "paged":
+            paged_eng = eng
+            rows[-1]["pool"] = eng.pool.stats()
+            rows[-1]["chunk_steps"] = eng.chunk_steps
+            rows[-1]["max_chunk_gap"] = eng.max_chunk_gap
+            rows[-1]["max_chunk_ms"] = round(
+                max(eng.chunk_durations, default=0.0) * 1e3, 1)
+        if name == "dense":
+            rows[-1]["schedule_cache"] = eng.schedule.stats()
 
-    eng_c = ContinuousEngine(cfg, params, slots=slots, max_len=max_len)
-    t0 = time.perf_counter()
-    res_c = eng_c.run(reqs)
-    rows.append(_summarize("continuous", res_c, time.perf_counter() - t0,
-                           eng_c.steps))
-    rows[-1]["schedule_cache"] = eng_c.schedule.stats()
-
-    # same sampling seed + greedy trace => identical total work
-    assert rows[0]["new_tokens"] == rows[1]["new_tokens"], rows
-    return rows
+    # ---- gates --------------------------------------------------------------
+    by = {r["engine"]: r for r in rows}
+    failures = []
+    # deterministic form of "continuous beats wave": fewer decode steps
+    # for the same token budget IS the throughput mechanism (wall-clock
+    # tok/s is reported above but too noisy to gate CI on).
+    if by["dense"]["decode_steps"] >= by["wave"]["decode_steps"]:
+        failures.append(
+            f"dense continuous took {by['dense']['decode_steps']} decode "
+            f"steps vs wave {by['wave']['decode_steps']} — slot-level "
+            f"admission failed to outschedule the wave")
+    # same sampling budget + eos=-1 => identical token COUNTS everywhere;
+    # a shortfall means the wave engine truncated (padded prompt + decode
+    # overran max_len) and the throughput gate would compare unequal work.
+    if by["wave"]["new_tokens"] != by["dense"]["new_tokens"]:
+        failures.append(
+            f"wave served {by['wave']['new_tokens']} tokens vs dense "
+            f"{by['dense']['new_tokens']} — unequal work, raise --max-len")
+    if tokens_by_engine["paged"] != tokens_by_engine["dense"]:
+        failures.append("paged output != dense output (greedy)")
+    if by["paged"]["kv_peak_bytes"] >= by["dense"]["kv_peak_bytes"]:
+        failures.append("paged peak KV not below dense")
+    # decode-gap bound, DETERMINISTIC form: at most ONE chunk batch may
+    # run between consecutive decode steps while slots are decoding (the
+    # engine interleaves by construction; this gate checks the
+    # construction held).  Wall-clock gap/chunk times are reported above
+    # as telemetry only — host timing jitter must not fail CI.
+    if by["paged"]["max_chunk_gap"] > 1:
+        failures.append(
+            f"{by['paged']['max_chunk_gap']} chunk batches ran between "
+            f"decode steps — chunked prefill failed to interleave")
+    applied = {k[:3] for k, _ in paged_eng.schedule.applied}
+    missing = [s for s in PA.gather_gemm_shapes(
+        cfg, paged_eng.pool.block_size) if tuple(s) not in applied]
+    if missing:
+        failures.append(f"gather GEMM shapes missing from schedule "
+                        f"application log: {missing}")
+    by["paged"]["gather_gemms_in_applied_log"] = not missing
+    return rows, failures
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--dry", action="store_true",
-                    help="small CI smoke (fewer requests, no warmup reuse)")
+                    help="small CI smoke (fewer requests)")
     ap.add_argument("--requests", type=int, default=None)
     ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--max-len", type=int, default=96)
+    ap.add_argument("--max-len", type=int, default=160)
     args = ap.parse_args(argv)
 
     n = args.requests or (8 if args.dry else 24)
-    rows = run_bench(n, args.slots, args.max_len, warmup=True)
+    rows, failures = run_bench(n, args.slots, args.max_len, warmup=True)
 
     os.makedirs(ART_DIR, exist_ok=True)
     with open(os.path.join(ART_DIR, "serve_bench.json"), "w") as f:
@@ -121,22 +213,33 @@ def main(argv=None) -> int:
     for r in rows:
         print(f"serve_{r['engine']},{r['wall_s']*1e6:.0f},"
               f"{r['tok_per_s']}tok/s")
-    print(f"{'engine':<12}{'tok/s':>8}{'steps':>7}{'p50ms':>8}{'p99ms':>8}")
+    hdr = (f"{'engine':<8}{'tok/s':>8}{'steps':>7}{'p50ms':>8}{'p99ms':>8}"
+           f"{'ttft50':>8}{'ttft95':>8}{'gapms':>7}{'peakKV':>9}")
+    print(hdr)
     for r in rows:
-        print(f"{r['engine']:<12}{r['tok_per_s']:>8.1f}"
+        peak = r.get("kv_peak_bytes", 0)
+        print(f"{r['engine']:<8}{r['tok_per_s']:>8.1f}"
               f"{r['decode_steps']:>7d}{r['p50_latency_ms']:>8.1f}"
-              f"{r['p99_latency_ms']:>8.1f}")
-    wave, cont = rows[0], rows[1]
-    speedup = cont["tok_per_s"] / max(wave["tok_per_s"], 1e-9)
-    print(f"continuous/wave throughput: {speedup:.2f}x  "
-          f"(decode steps {cont['decode_steps']} vs {wave['decode_steps']})")
-    sc = cont["schedule_cache"]
+              f"{r['p99_latency_ms']:>8.1f}{r['p50_ttft_ms']:>8.1f}"
+              f"{r['p95_ttft_ms']:>8.1f}{r['max_decode_gap_ms']:>7.1f}"
+              f"{peak:>9d}")
+    by = {r["engine"]: r for r in rows}
+    print(f"continuous/wave throughput: "
+          f"{by['dense']['tok_per_s']/max(by['wave']['tok_per_s'],1e-9):.2f}x")
+    pool = by["paged"]["pool"]
+    print(f"paged pool: peak {pool['peak_used']}/{pool['num_blocks']} blocks"
+          f", {pool['shared_token_hits']} shared-prefix token hits, "
+          f"{by['paged']['chunk_steps']} chunk batches")
+    print(f"paged/dense peak KV: {by['paged']['kv_peak_bytes']}/"
+          f"{by['dense']['kv_peak_bytes']} bytes "
+          f"({by['paged']['kv_peak_bytes']/by['dense']['kv_peak_bytes']:.2f}x)"
+          )
+    sc = by["dense"]["schedule_cache"]
     print(f"schedule cache: {sc['entries']} schedules, {sc['hits']} hits / "
           f"{sc['misses']} misses")
-    if cont["tok_per_s"] <= wave["tok_per_s"]:
-        print("FAIL: continuous engine did not beat wave engine")
-        return 1
-    return 0
+    for msg in failures:
+        print(f"FAIL: {msg}")
+    return 1 if failures else 0
 
 
 if __name__ == "__main__":

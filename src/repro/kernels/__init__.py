@@ -5,6 +5,10 @@
   accumulator  — Fig.-3 multi-precision accumulator (uint32-pair shift-adds)
   mpgemm       — fp GEMM with WS / IS / OS selectable block schedules (§5)
   quant_matmul — int8-weight serving path (GTA's native-precision fast case)
+  paged_attention — paged-decode attention for the block-paged KV pool
+                 (scalar-prefetched block tables, online softmax; pure-JAX
+                 gather fallback off-TPU; gather-GEMM shapes registered
+                 with the paper-§5 ScheduleCache)
   ops          — public padded/jit'd wrappers; block shapes chosen by the
                  GTA scheduling bridge (core.tiling)
   ref          — pure-jnp/numpy oracles for all of the above

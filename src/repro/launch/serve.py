@@ -43,8 +43,11 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=256)
-    ap.add_argument("--engine", choices=("continuous", "wave"),
-                    default="continuous")
+    ap.add_argument("--engine", choices=("continuous", "dense", "wave"),
+                    default="continuous",
+                    help="continuous = paged KV pool (default); dense = "
+                         "continuous batching over dense stripes; wave = "
+                         "seed baseline")
     ap.add_argument("--arrival-ms", type=float, default=0.0,
                     help="mean inter-arrival gap (continuous engine only); "
                          "0 = offered all at once")
@@ -88,7 +91,8 @@ def main(argv=None):
         results: List[Result] = eng.run(reqs)
     else:
         eng = ContinuousEngine(cfg, params, slots=args.slots,
-                               max_len=args.max_len)
+                               max_len=args.max_len,
+                               paged=args.engine != "dense")
         eng.start()
         for r in reqs:
             if args.arrival_ms > 0:
@@ -104,10 +108,17 @@ def main(argv=None):
           f"in {dt:.2f}s ({toks / max(dt, 1e-9):.1f} tok/s)  "
           f"latency p50={_percentile(lats, 50)*1e3:.0f}ms "
           f"p99={_percentile(lats, 99)*1e3:.0f}ms")
-    if args.engine == "continuous":
+    if args.engine != "wave":
         st = eng.schedule.stats()
         print(f"[serve] schedule cache: {st['entries']} schedules, "
               f"{st['hits']} hits / {st['misses']} misses")
+        if eng.paged:
+            ps = eng.pool.stats()
+            kv = eng.kv_bytes()
+            print(f"[serve] kv pool: peak {ps['peak_used']}/"
+                  f"{ps['num_blocks']} blocks, "
+                  f"{ps['shared_token_hits']} shared-prefix token hits, "
+                  f"peak KV {kv['peak']} / allocated {kv['allocated']} B")
     for r in sorted(results, key=lambda r: r.rid)[:4]:
         print(f"  rid={r.rid} new_tokens={len(r.tokens)} "
               f"prefill={r.prefill_s*1e3:.0f}ms decode={r.decode_s*1e3:.0f}ms")

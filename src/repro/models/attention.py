@@ -8,7 +8,10 @@ classified GEMMs; softmax is vector-path work), and on TPU the blocks map
 onto MXU tiles exactly like core.tiling prescribes.
 
 Shapes: x (B, S, D); q (B, S, H, hd); k/v (B, T, KV, hd); caches are
-(B, T_max, KV, hd) with a scalar write position.
+(B, T_max, KV, hd) with a scalar write position — or, block-paged
+(serving.kv_pool layout), a shared pool (num_blocks, block_size, KV, hd)
+addressed through a per-slot block table (pass ``block_table`` to the
+attention calls; decode then routes through the paged-decode kernel).
 """
 
 from __future__ import annotations
@@ -259,16 +262,76 @@ def _cache_write(buf: jax.Array, update: jax.Array, pos) -> jax.Array:
         buf, update, (0, pos) + (0,) * (buf.ndim - 2))
 
 
+# ---------------------------------------------------------------------------
+# Paged KV-cache access (block-table indirection, serving.kv_pool layout)
+# ---------------------------------------------------------------------------
+
+def paged_flat_index(block_table: jax.Array, pos: jax.Array, block_size: int
+                     ) -> jax.Array:
+    """Map per-row logical positions to flat pool indices.
+
+    block_table (B, nbs) int32; pos (B, S) int32 -> (B, S) indices into the
+    flattened pool ``(num_blocks * block_size, ...)``.  Positions beyond
+    the table width resolve to the NULL block (0), like unallocated
+    entries: stray writes (inactive slots riding along in a batched step)
+    land in the trash block, never in a neighbour's data, and stray reads
+    are masked by the validity bound."""
+    nbs = block_table.shape[1]
+    blk = pos // block_size
+    oob = (blk < 0) | (blk >= nbs)
+    bid = jnp.take_along_axis(block_table, jnp.clip(blk, 0, nbs - 1),
+                              axis=1)
+    bid = jnp.where(oob, 0, bid)
+    return bid * block_size + pos % block_size
+
+
+def _paged_write(buf: jax.Array, update: jax.Array, pos,
+                 block_table: jax.Array) -> jax.Array:
+    """Scatter ``update`` (B, S, ...) into the pool ``buf``
+    (num_blocks, block_size, ...) at logical positions ``pos`` (B,) ..
+    ``pos + S`` through the block table."""
+    nb, bs = buf.shape[0], buf.shape[1]
+    B, S = update.shape[0], update.shape[1]
+    pos_rows = (jnp.atleast_1d(jnp.asarray(pos, jnp.int32))[:, None]
+                + jnp.arange(S, dtype=jnp.int32)[None, :])
+    idx = paged_flat_index(block_table, pos_rows, bs).reshape(-1)
+    flat = buf.reshape((nb * bs,) + buf.shape[2:])
+    upd = update.astype(buf.dtype).reshape((B * S,) + update.shape[2:])
+    flat = flat.at[idx].set(upd, mode="drop")
+    return flat.reshape(buf.shape)
+
+
+def _paged_gather(buf: jax.Array, block_table: jax.Array) -> jax.Array:
+    """Gather each row's blocks into a contiguous (B, nbs*block_size, ...)
+    view — delegates to the canonical gather in
+    ``kernels.paged_attention`` so every paged read path shares one
+    implementation (the Pallas kernel performs the same gather
+    block-by-block through scalar-prefetched tables instead of
+    materializing it)."""
+    from repro.kernels import paged_attention as PA
+    return PA.gather_pool_blocks(buf, block_table)
+
+
 def gqa_attention(p: Dict, x: jax.Array, cfg: ModelConfig, *,
                   kind: BlockKind,
                   pos_offset: jax.Array | int = 0,
                   cache: Optional[Dict] = None,
+                  block_table: Optional[jax.Array] = None,
+                  pos_advance: Optional[jax.Array] = None,
                   ) -> Tuple[jax.Array, Optional[Dict]]:
     """Full-sequence (cache=None) or cached (prefill/decode) GQA attention.
 
     With a cache dict {"k","v","pos"}: writes k/v at ``pos`` and attends over
     the valid prefix — one call serves prefill (S>1) and decode (S=1).
-    """
+
+    With ``block_table`` (B, nbs) the cache leaves are interpreted as the
+    block-paged pool (num_blocks, block_size, KV, hd): writes scatter and
+    reads gather through the table (``serving.kv_pool`` layout).  Decode
+    steps (S == 1) route through ``kernels.paged_attention.decode_attention``
+    — the Pallas paged-decode kernel on TPU, the pure-JAX gather fallback
+    elsewhere.  ``pos_advance`` (B,) overrides the cache-pos increment
+    (chunked ragged prefill advances by each row's REAL token count, not
+    the padded chunk length)."""
     B, S, _ = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     G = H // KV
@@ -287,7 +350,24 @@ def gqa_attention(p: Dict, x: jax.Array, cfg: ModelConfig, *,
     scale = hd ** -0.5
 
     new_cache = None
-    if cache is not None:
+    if cache is not None and block_table is not None:
+        adv = S if pos_advance is None else jnp.asarray(pos_advance,
+                                                        jnp.int32)
+        ck = _paged_write(cache["k"], k, cache["pos"], block_table)
+        cv = _paged_write(cache["v"], v, cache["pos"], block_table)
+        new_cache = {"k": ck, "v": cv, "pos": cache["pos"] + adv}
+        kv_valid = cache["pos"] + adv
+        if S == 1:
+            from repro.kernels import paged_attention as PA
+            out = PA.decode_attention(
+                q.reshape(B, KV, G, hd), ck, cv, block_table,
+                jnp.atleast_1d(kv_valid), scale=scale, window=window,
+                logit_cap=cfg.attn_logit_softcap)
+            out = out.reshape(B, 1, H * hd)
+            return dense(out, p["wo"]), new_cache
+        k_att = _paged_gather(ck, block_table)
+        v_att = _paged_gather(cv, block_table)
+    elif cache is not None:
         ck = _cache_write(cache["k"], k, cache["pos"])
         cv = _cache_write(cache["v"], v, cache["pos"])
         new_cache = {"k": ck, "v": cv, "pos": cache["pos"] + S}
@@ -312,10 +392,18 @@ def gqa_attention(p: Dict, x: jax.Array, cfg: ModelConfig, *,
 def mla_attention(p: Dict, x: jax.Array, cfg: ModelConfig, *,
                   pos_offset: jax.Array | int = 0,
                   cache: Optional[Dict] = None,
+                  block_table: Optional[jax.Array] = None,
+                  pos_advance: Optional[jax.Array] = None,
                   ) -> Tuple[jax.Array, Optional[Dict]]:
     """Multi-head latent attention.  Cache stores only (c_kv, k_pe):
     kv_lora_rank + rope_head_dim floats per token (the paper-relevant
-    'skinny p-GEMM' decompression happens per block)."""
+    'skinny p-GEMM' decompression happens per block).
+
+    ``block_table`` switches the cache leaves to the block-paged pool
+    layout (num_blocks, block_size, dim): writes scatter / reads gather
+    through the table.  The latent cache is already the paper's compressed
+    'skinny' operand, so the gather fallback (not the GQA paged-decode
+    kernel) is the paged hot path here."""
     m: MLAConfig = cfg.mla
     B, S, _ = x.shape
     H = cfg.n_heads
@@ -336,7 +424,16 @@ def mla_attention(p: Dict, x: jax.Array, cfg: ModelConfig, *,
     k_pe = apply_rope(k_pe[:, :, None, :], cos, sin)[:, :, 0, :]
 
     new_cache = None
-    if cache is not None:
+    if cache is not None and block_table is not None:
+        adv = S if pos_advance is None else jnp.asarray(pos_advance,
+                                                        jnp.int32)
+        ckv = _paged_write(cache["c_kv"], c_kv, cache["pos"], block_table)
+        cpe = _paged_write(cache["k_pe"], k_pe, cache["pos"], block_table)
+        new_cache = {"c_kv": ckv, "k_pe": cpe, "pos": cache["pos"] + adv}
+        c_att = _paged_gather(ckv, block_table)
+        pe_att = _paged_gather(cpe, block_table)
+        kv_valid = cache["pos"] + adv
+    elif cache is not None:
         ckv = _cache_write(cache["c_kv"], c_kv, cache["pos"])
         cpe = _cache_write(cache["k_pe"], k_pe, cache["pos"])
         new_cache = {"c_kv": ckv, "k_pe": cpe, "pos": cache["pos"] + S}
@@ -410,5 +507,29 @@ def make_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype
     return {
         "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.hd), dtype),
         "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.hd), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def make_paged_kv_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
+                        dtype) -> Dict:
+    """Empty per-layer BLOCK-PAGED cache pool for one attention block
+    (``serving.kv_pool`` layout: no batch dim — slots map logical
+    positions onto pool blocks through the shared block table).  ``pos``
+    stays the per-slot write cursor (expanded by
+    ``network.expand_cache_pos``)."""
+    if cfg.mla is not None:
+        return {
+            "c_kv": jnp.zeros((num_blocks, block_size,
+                               cfg.mla.kv_lora_rank), dtype),
+            "k_pe": jnp.zeros((num_blocks, block_size,
+                               cfg.mla.qk_rope_head_dim), dtype),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((num_blocks, block_size, cfg.n_kv_heads, cfg.hd),
+                       dtype),
+        "v": jnp.zeros((num_blocks, block_size, cfg.n_kv_heads, cfg.hd),
+                       dtype),
         "pos": jnp.zeros((), jnp.int32),
     }

@@ -108,32 +108,45 @@ def param_logical_axes(cfg: ModelConfig) -> PyTree:
 
 def _apply_block(cfg: ModelConfig, kind: BlockKind, p: Dict, x: jax.Array, *,
                  pos_offset, cache: Optional[Dict], shared: Optional[Dict],
-                 dense_ff: bool = False
+                 dense_ff: bool = False, block_table=None, pos_advance=None,
+                 seq_lens=None
                  ) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
-    """Returns (x, new_cache, aux_loss)."""
+    """Returns (x, new_cache, aux_loss).
+
+    ``block_table`` (B, nbs) switches attention caches to the block-paged
+    pool layout; ``pos_advance`` (B,) overrides the per-call cache-pos
+    increment (ragged chunked prefill); ``seq_lens`` (B,) enables the SSM
+    masked-update scan so trailing pads leave recurrent state exact."""
     aux = jnp.zeros((), jnp.float32)
     eps = cfg.norm_eps
 
     if kind is BlockKind.MAMBA2:
         h = rms_norm(x, p["ln1"], eps)
-        out, new_cache = S.mamba2_block(p["mamba"], h, cfg, state=cache)
+        out, new_cache = S.mamba2_block(p["mamba"], h, cfg, state=cache,
+                                        seq_len=seq_lens)
         return x + out, new_cache, aux
 
     if kind is BlockKind.SHARED_ATTN:
         h = rms_norm(x, shared["ln1"], eps)
         out, new_cache = A.gqa_attention(shared["attn"], h, cfg,
                                          kind=BlockKind.ATTN,
-                                         pos_offset=pos_offset, cache=cache)
+                                         pos_offset=pos_offset, cache=cache,
+                                         block_table=block_table,
+                                         pos_advance=pos_advance)
         return x + out, new_cache, aux
 
     # ATTN / ATTN_LOCAL
     h = rms_norm(x, p["ln1"], eps)
     if cfg.mla is not None:
         out, new_cache = A.mla_attention(p["attn"], h, cfg,
-                                         pos_offset=pos_offset, cache=cache)
+                                         pos_offset=pos_offset, cache=cache,
+                                         block_table=block_table,
+                                         pos_advance=pos_advance)
     else:
         out, new_cache = A.gqa_attention(p["attn"], h, cfg, kind=kind,
-                                         pos_offset=pos_offset, cache=cache)
+                                         pos_offset=pos_offset, cache=cache,
+                                         block_table=block_table,
+                                         pos_advance=pos_advance)
     if cfg.post_norms:
         out = rms_norm(out, p["post_ln1"], eps)
     x = x + out
@@ -148,13 +161,14 @@ def _apply_block(cfg: ModelConfig, kind: BlockKind, p: Dict, x: jax.Array, *,
     return x + out, new_cache, aux
 
 
-def _group_fn(cfg: ModelConfig, shared_stack, pos_offset, carry, scanned, *,
-              with_cache: bool):
+def _group_fn(cfg: ModelConfig, shared_stack, pos_offset, block_table,
+              pos_advance, seq_lens, carry, scanned, *, with_cache: bool):
     """One scanned repeat of the pattern.  carry = (x, aux).
-    ``shared_stack`` (zamba2's alternating shared-attention weight sets) and
-    ``pos_offset`` are closed over — loop-invariant.  Keeping pos_offset out
-    of the carry preserves its static-zero identity so the triangular flash
-    schedule (§Perf H2) can fire inside the scan."""
+    ``shared_stack`` (zamba2's alternating shared-attention weight sets),
+    ``pos_offset`` and the paged-serving operands (``block_table``,
+    ``pos_advance``, ``seq_lens``) are closed over — loop-invariant.
+    Keeping pos_offset out of the carry preserves its static-zero identity
+    so the triangular flash schedule (§Perf H2) can fire inside the scan."""
     x, aux = carry
     if with_cache:
         gparams, gidx, gcache = scanned
@@ -170,7 +184,8 @@ def _group_fn(cfg: ModelConfig, shared_stack, pos_offset, carry, scanned, *,
             shared_set = jax.tree.map(lambda a: a[sidx], shared_stack)
         x, nc, a = _apply_block(cfg, kind, gparams[i], x,
                                 pos_offset=pos_offset, cache=gcache[i],
-                                shared=shared_set)
+                                shared=shared_set, block_table=block_table,
+                                pos_advance=pos_advance, seq_lens=seq_lens)
         x = shard_act(x, "b..")
         aux = aux + a
         if with_cache:
@@ -180,7 +195,8 @@ def _group_fn(cfg: ModelConfig, shared_stack, pos_offset, carry, scanned, *,
 
 
 def _run_blocks(params: PyTree, cfg: ModelConfig, x: jax.Array, *,
-                pos_offset, caches: Optional[PyTree]
+                pos_offset, caches: Optional[PyTree], block_table=None,
+                pos_advance=None, seq_lens=None
                 ) -> Tuple[jax.Array, Optional[PyTree], jax.Array]:
     """Applies first_block (if any), the scanned pattern groups, and tail
     blocks.  caches: {"first":..., "groups": stacked, "tail": tuple}."""
@@ -192,7 +208,8 @@ def _run_blocks(params: PyTree, cfg: ModelConfig, x: jax.Array, *,
         c = caches["first"] if with_cache else None
         x, nc, a = _apply_block(cfg, BlockKind.ATTN, params["first_block"], x,
                                 pos_offset=pos_offset, cache=c, shared=None,
-                                dense_ff=True)
+                                dense_ff=True, block_table=block_table,
+                                pos_advance=pos_advance, seq_lens=seq_lens)
         aux += a
         if with_cache:
             new_caches["first"] = nc
@@ -200,7 +217,8 @@ def _run_blocks(params: PyTree, cfg: ModelConfig, x: jax.Array, *,
     n_groups = cfg.n_groups_scan
     gidx = jnp.arange(n_groups, dtype=jnp.int32)
     body = functools.partial(_group_fn, cfg, params.get("shared_attn"),
-                             pos_offset, with_cache=with_cache)
+                             pos_offset, block_table, pos_advance, seq_lens,
+                             with_cache=with_cache)
     if cfg.remat:
         body = jax.checkpoint(body)
     if with_cache:
@@ -217,7 +235,9 @@ def _run_blocks(params: PyTree, cfg: ModelConfig, x: jax.Array, *,
             c = caches["tail"][i] if with_cache else None
             x, nc, a = _apply_block(cfg, kind, params["tail_blocks"][i], x,
                                     pos_offset=pos_offset, cache=c,
-                                    shared=None)
+                                    shared=None, block_table=block_table,
+                                    pos_advance=pos_advance,
+                                    seq_lens=seq_lens)
             aux += a
             tail_caches.append(nc)
         if with_cache:
@@ -315,14 +335,22 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype=None
 
 
 def _serve(params: PyTree, cfg: ModelConfig, batch: Dict, caches: PyTree,
-           pos_offset) -> Tuple[jax.Array, PyTree]:
+           pos_offset, block_table=None, pos_advance=None, seq_lens=None,
+           last_index=None) -> Tuple[jax.Array, PyTree]:
     x = _embed_inputs(params, cfg, batch)
     x, new_caches, _ = _run_blocks(params, cfg, x, pos_offset=pos_offset,
-                                   caches=caches)
+                                   caches=caches, block_table=block_table,
+                                   pos_advance=pos_advance,
+                                   seq_lens=seq_lens)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     head = (params["embed"]["table"] if cfg.tie_embeddings
             else params["lm_head"])
-    logits = head_apply(head, x[:, -1:], cfg.final_logit_softcap)
+    if last_index is not None:   # ragged: logits of each row's last REAL token
+        idx = jnp.asarray(last_index, jnp.int32)
+        x = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+        logits = head_apply(head, x, cfg.final_logit_softcap)
+    else:
+        logits = head_apply(head, x[:, -1:], cfg.final_logit_softcap)
     return logits[:, 0], new_caches
 
 
@@ -342,28 +370,33 @@ def prefill_ragged(params: PyTree, cfg: ModelConfig, batch: Dict,
     The pad tail writes garbage KV past each prompt; the serving layer
     masks it with a per-slot validity bound (cache pos = true length) and
     decode overwrites it in place — so prompts of different lengths share
-    one jitted bucket without perturbing logits.
+    one jitted bucket without perturbing logits.  Recurrent (SSM) state
+    is protected by the masked-update scan: pads get dt == 0, so the
+    carried state is exactly the post-last-real-token state (hybrid archs
+    no longer need the right-aligned fallback).
     """
-    x = _embed_inputs(params, cfg, batch)
-    x, new_caches, _ = _run_blocks(params, cfg, x, pos_offset=0,
-                                   caches=caches)
-    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    head = (params["embed"]["table"] if cfg.tie_embeddings
-            else params["lm_head"])
     idx = jnp.asarray(last_index, jnp.int32)
-    xl = jnp.take_along_axis(x, idx[:, None, None], axis=1)   # (B, 1, D)
-    logits = head_apply(head, xl, cfg.final_logit_softcap)
-    return logits[:, 0], new_caches
+    return _serve(params, cfg, batch, caches, pos_offset=0,
+                  seq_lens=idx + 1, last_index=idx)
 
 
 def decode_step(params: PyTree, cfg: ModelConfig, tokens: jax.Array,
-                caches: PyTree, pos: jax.Array
-                ) -> Tuple[jax.Array, PyTree]:
+                caches: PyTree, pos: jax.Array, block_table=None,
+                pos_advance=None) -> Tuple[jax.Array, PyTree]:
     """One autoregressive step.  tokens (B, 1); pos int32 — scalar for a
     uniform wave (the seed engine's max-pos convention) or (B,) for
     per-slot ragged positions (continuous batching; caches must then carry
-    per-slot pos leaves, see ``expand_cache_pos``)."""
-    return _serve(params, cfg, {"tokens": tokens}, caches, pos_offset=pos)
+    per-slot pos leaves, see ``expand_cache_pos``).  ``block_table``
+    (B, nbs) switches attention caches to the block-paged pool layout
+    (``serving.kv_pool``) — writes/reads go through the table and decode
+    routes into the paged-attention kernel.  ``pos_advance`` (B,) lets the
+    paged engine advance only the slots that actually decoded this step
+    (rows mid-chunked-prefill or empty pass 0 and keep their cursor).
+    ``pos_advance`` doubles as the per-row validity mask: SSM state uses
+    the masked-update scan so a 0-row's recurrent state is untouched."""
+    return _serve(params, cfg, {"tokens": tokens}, caches, pos_offset=pos,
+                  block_table=block_table, pos_advance=pos_advance,
+                  seq_lens=pos_advance)
 
 
 # ---------------------------------------------------------------------------
@@ -409,3 +442,193 @@ def insert_slot_caches(caches: PyTree, slot_caches: PyTree, slot: jax.Array,
                                             tuple(starts))
 
     return jax.tree_util.tree_map_with_path(fn, caches, slot_caches)
+
+
+# ---------------------------------------------------------------------------
+# Block-paged serving (serving.kv_pool layout)
+# ---------------------------------------------------------------------------
+#
+# Leaf taxonomy of a paged cache tree (how the utilities below tell them
+# apart by path key):
+#   k/v/c_kv/k_pe — POOL leaves (num_blocks, block_size, ...), shared by all
+#                   slots, indexed through the block table; group-scanned
+#                   copies carry a leading (G,) stack dim.
+#   conv/ssm      — per-slot recurrent state, batch axis 0 (1 under groups).
+#   pos           — per-slot write cursors, batch axis LAST (expand_cache_pos).
+
+_POOL_KEYS = ("k", "v", "c_kv", "k_pe")
+_SLOT_STATE_KEYS = ("conv", "ssm")
+
+
+def init_paged_caches(cfg: ModelConfig, slots: int, num_blocks: int,
+                      block_size: int, dtype=None) -> PyTree:
+    """Cache tree for block-paged serving: attention leaves become shared
+    pools (no slot dim), SSM state stays per-slot (it is O(1) per slot —
+    nothing to page).  Callers must still ``expand_cache_pos(tree, slots)``
+    so each slot advances its own cursor."""
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+
+    def blk(kind: BlockKind):
+        if kind is BlockKind.MAMBA2:
+            return S.make_ssm_state(cfg, slots, dtype)
+        return A.make_paged_kv_cache(cfg, num_blocks, block_size, dtype)
+
+    caches: Dict[str, Any] = {}
+    if cfg.first_layer_dense_ff:
+        caches["first"] = blk(BlockKind.ATTN)
+
+    def stack(mk):
+        return jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[mk() for _ in range(cfg.n_groups_scan)]) if (
+            cfg.n_groups_scan > 1) else jax.tree.map(
+            lambda x: x[None], mk())
+
+    caches["groups"] = stack(lambda: tuple(blk(k) for k in cfg.pattern))
+    if cfg.tail:
+        caches["tail"] = tuple(blk(k) for k in cfg.tail)
+    return caches
+
+
+def _slot_state_axis(names: Tuple) -> int:
+    return 1 if names and names[0] == "groups" else 0
+
+
+def gather_slot_view(caches: PyTree, slot_ids: jax.Array) -> PyTree:
+    """Extract a B-row view of a paged cache tree for the admission rows
+    ``slot_ids`` (B,): per-slot leaves are gathered at those slots, pool
+    leaves pass through whole (they are shared — writes go through the
+    block table)."""
+    ids = jnp.asarray(slot_ids, jnp.int32)
+
+    def fn(path, leaf):
+        names = _path_keys(path)
+        if "pos" in names:
+            return jnp.take(leaf, ids, axis=-1)
+        if any(k in names for k in _SLOT_STATE_KEYS):
+            return jnp.take(leaf, ids, axis=_slot_state_axis(names))
+        return leaf
+    return jax.tree_util.tree_map_with_path(fn, caches)
+
+
+def scatter_slot_view(caches: PyTree, view: PyTree, slot_ids: jax.Array
+                      ) -> PyTree:
+    """Merge an updated slot view back: per-slot leaves scatter at
+    ``slot_ids`` (which must be DISTINCT — the batched-admission caller
+    pads with unused slots, never duplicates), pool leaves are taken from
+    the view verbatim (the paged writes already updated them in place)."""
+    ids = jnp.asarray(slot_ids, jnp.int32)
+
+    def fn(path, big, small):
+        names = _path_keys(path)
+        if "pos" in names:
+            return big.at[..., ids].set(small.astype(big.dtype))
+        if any(k in names for k in _SLOT_STATE_KEYS):
+            ax = _slot_state_axis(names)
+            moved = jnp.moveaxis(big, ax, 0)
+            upd = moved.at[ids].set(
+                jnp.moveaxis(small, ax, 0).astype(big.dtype))
+            return jnp.moveaxis(upd, 0, ax)
+        return small
+    return jax.tree_util.tree_map_with_path(fn, caches, view)
+
+
+def prefill_paged_chunk(params: PyTree, cfg: ModelConfig, tokens: jax.Array,
+                        caches: PyTree, slot_ids: jax.Array,
+                        block_rows: jax.Array, seq_lens: jax.Array,
+                        last_index: jax.Array
+                        ) -> Tuple[jax.Array, PyTree]:
+    """One decode-interleaved CHUNK of ragged prefill for B admission rows.
+
+    tokens (B, L): right-padded chunk tokens (L fixed per engine, so one
+    jitted program serves every chunk); seq_lens (B,) the REAL token count
+    per row (0 = masked no-op row — batched admission pads with idle
+    slots); block_rows (B, nbs) each row's block-table row; last_index
+    (B,) gather index for the returned logits (seq_lens - 1, clamped).
+
+    Positions: each row's chunk starts at its slot's cache cursor (the
+    previous chunks' total real length — or the shared-prefix length on
+    the first chunk); attention attends over ALL resident KV of the slot
+    through the block table, so chunk k sees chunks 0..k-1 and the shared
+    prefix exactly as a one-shot prefill would.  Cache cursors advance by
+    ``seq_lens`` (REAL tokens only): the pad tail's garbage KV stays
+    beyond the validity bound and is overwritten by the next chunk or by
+    decode.  SSM state is carried per slot across chunks (gathered /
+    scattered around the block run), with the masked-update scan keeping
+    it exact under the pad tail."""
+    lens = jnp.asarray(seq_lens, jnp.int32)
+    view = gather_slot_view(caches, slot_ids)
+    pos0 = _first_pos_leaf(view)
+    logits, new_view = _serve(params, cfg, {"tokens": tokens}, view,
+                              pos_offset=pos0, block_table=block_rows,
+                              pos_advance=lens, seq_lens=lens,
+                              last_index=last_index)
+    return logits, scatter_slot_view(caches, new_view, slot_ids)
+
+
+def _first_pos_leaf(view: PyTree) -> jax.Array:
+    """The per-row position vector of a slot view: every layer's pos leaf
+    advances in lockstep, so any one of them is THE cursor.  Group-stacked
+    leaves carry (G, B) — take group 0."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(view)
+    for path, leaf in flat:
+        if "pos" in _path_keys(path):
+            return jnp.asarray(leaf[0] if leaf.ndim == 2 else leaf,
+                               jnp.int32)
+    raise ValueError("no pos leaf in cache view")
+
+
+def reset_slot_state(caches: PyTree, slot: jax.Array, pos_value: jax.Array
+                     ) -> PyTree:
+    """Fresh-request reset for one slot of a PAGED cache tree: recurrent
+    (SSM/conv) state zeroes, the slot's pos cursors become ``pos_value``
+    (the shared-prefix length — its KV is already resident in the pool).
+    Pool leaves are untouched: stale block contents are overwritten by
+    prefill/decode before the validity bound ever reaches them."""
+    slot = jnp.asarray(slot, jnp.int32)
+    pos_value = jnp.asarray(pos_value, jnp.int32)
+
+    def fn(path, leaf):
+        names = _path_keys(path)
+        if "pos" in names:
+            return leaf.at[..., slot].set(pos_value.astype(leaf.dtype))
+        if any(k in names for k in _SLOT_STATE_KEYS):
+            ax = _slot_state_axis(names)
+            moved = jnp.moveaxis(leaf, ax, 0)
+            return jnp.moveaxis(moved.at[slot].set(0), 0, ax)
+        return leaf
+    return jax.tree_util.tree_map_with_path(fn, caches)
+
+
+def copy_paged_blocks(caches: PyTree, src: jax.Array, dst: jax.Array
+                      ) -> PyTree:
+    """Copy pool blocks ``src[i] -> dst[i]`` in every paged KV leaf
+    (copy-on-write forks, ``kv_pool.ensure_writable``).  Per-slot leaves
+    are untouched."""
+    s = jnp.asarray(src, jnp.int32)
+    d = jnp.asarray(dst, jnp.int32)
+
+    def fn(path, leaf):
+        names = _path_keys(path)
+        if not any(k in names for k in _POOL_KEYS) or "pos" in names:
+            return leaf
+        ax = 1 if names and names[0] == "groups" else 0
+        moved = jnp.moveaxis(leaf, ax, 0)
+        return jnp.moveaxis(moved.at[d].set(moved[s]), 0, ax)
+    return jax.tree_util.tree_map_with_path(fn, caches)
+
+
+def kv_cache_bytes(caches: PyTree) -> int:
+    """Total bytes of the attention KV leaves (pool or dense stripes) —
+    the benchmark's allocated-memory metric.  SSM state and cursors are
+    excluded (identical between the paged and dense engines)."""
+    total = 0
+
+    def fn(path, leaf):
+        nonlocal total
+        names = _path_keys(path)
+        if any(k in names for k in _POOL_KEYS) and "pos" not in names:
+            total += leaf.size * leaf.dtype.itemsize
+        return leaf
+    jax.tree_util.tree_map_with_path(fn, caches)
+    return total

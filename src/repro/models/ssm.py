@@ -58,10 +58,17 @@ def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
 
 
 def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
-                 state: Optional[jax.Array] = None
+                 state: Optional[jax.Array] = None,
+                 seq_len: Optional[jax.Array] = None
                  ) -> Tuple[jax.Array, jax.Array]:
     """Depthwise causal conv1d.  x (B,S,C); w (K,C); returns (y, new_state)
-    where state carries the trailing K-1 inputs for decode."""
+    where state carries the trailing K-1 inputs for decode.
+
+    ``seq_len`` (B,) marks the number of REAL tokens per row (ragged
+    prefill, trailing pad): the carried state is then gathered at each
+    row's true tail — ``ctx[b, len : len + K-1]`` — so pad inputs never
+    leak into decode.  ``seq_len == 0`` rows keep their incoming state
+    verbatim (masked no-op, used by the batched chunked-prefill path)."""
     K = w.shape[0]
     if state is None:
         ctx = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
@@ -70,7 +77,17 @@ def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
     y = sum(ctx[:, i:i + x.shape[1], :] * w[i][None, None, :]
             for i in range(K))
     y = jax.nn.silu(y + b[None, None, :])
-    new_state = ctx[:, -(K - 1):, :] if K > 1 else ctx[:, :0, :]
+    if K <= 1:
+        return y, ctx[:, :0, :]
+    if seq_len is None:
+        new_state = ctx[:, -(K - 1):, :]
+    else:
+        # ctx index of the row's last real input is (K-1) + len - 1, so the
+        # K-1 trailing REAL inputs live at ctx[len : len + K-1] (row 0..len
+        # of ctx is the carried state / left pad).
+        idx = (jnp.asarray(seq_len, jnp.int32)[:, None]
+               + jnp.arange(K - 1, dtype=jnp.int32)[None, :])
+        new_state = jnp.take_along_axis(ctx, idx[:, :, None], axis=1)
     return y, new_state
 
 
@@ -87,10 +104,22 @@ def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
     h0 (B, H, P, N)   — initial state (decode/restart), or None.
 
     Returns (y (B,S,H,P), h_final (B,H,P,N)).
+
+    ``S`` need not be a chunk multiple: the tail is zero-padded
+    internally and dt == 0 on the pad makes those steps exact no-ops
+    (decay exp(0) = 1, zero input contribution) — the same identity the
+    masked-update ragged-prefill path relies on — so ``h_final`` is
+    exactly the post-token-S state and the pad rows of y are dropped.
     """
+    Bb, S_in, H, P = x.shape
+    if S_in % chunk:
+        pad = chunk - S_in % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
     Bb, S, H, P = x.shape
     G, N = Bm.shape[2], Bm.shape[3]
-    assert S % chunk == 0, (S, chunk)
     nc = S // chunk
     rep = H // G
 
@@ -143,7 +172,7 @@ def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
     y_inter = y_inter * decay_from_start[..., None]
 
     y = (y_intra + y_inter).reshape(Bb, S, H, P)
-    return y, h_fin
+    return y[:, :S_in], h_fin
 
 
 def ssd_step(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
@@ -164,10 +193,20 @@ def ssd_step(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
 
 
 def mamba2_block(p: Dict, x: jax.Array, cfg: ModelConfig, *,
-                 state: Optional[Dict] = None
+                 state: Optional[Dict] = None,
+                 seq_len: Optional[jax.Array] = None
                  ) -> Tuple[jax.Array, Optional[Dict]]:
     """Full Mamba2 block.  state (decode): {"conv": (B,K-1,conv_dim),
-    "ssm": (B,H,P,N)}; None for training/prefill-from-scratch."""
+    "ssm": (B,H,P,N)}; None for training/prefill-from-scratch.
+
+    ``seq_len`` (B,) enables the masked-update scan for ragged prefill
+    (real tokens first, trailing pad): pad positions get dt == 0, which
+    makes the SSD recurrence a per-step no-op there — decay exp(dt*A) = 1
+    and the dt-weighted input contribution vanishes — so the carried
+    recurrent state is EXACTLY the state after the last real token, and
+    the conv state is gathered at the row's true tail.  This is what lets
+    hybrid (mamba2/zamba2) archs share the bucketed ragged-prefill path
+    instead of falling back to right-aligned prompts."""
     s: SSMConfig = cfg.ssm
     d_inner, n_heads, d_state, n_groups, conv_dim = _dims(cfg)
     B, S, _ = x.shape
@@ -179,7 +218,7 @@ def mamba2_block(p: Dict, x: jax.Array, cfg: ModelConfig, *,
     conv_in = jnp.concatenate([xi, Bc, Cc], axis=-1)
     conv_state = state["conv"] if state is not None else None
     conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], p["conv_b"],
-                                      conv_state)
+                                      conv_state, seq_len=seq_len)
     xi = conv_out[..., :d_inner]
     Bc = conv_out[..., d_inner:d_inner + n_groups * d_state]
     Cc = conv_out[..., d_inner + n_groups * d_state:]
@@ -187,6 +226,11 @@ def mamba2_block(p: Dict, x: jax.Array, cfg: ModelConfig, *,
     A = -jnp.exp(p["A_log"].astype(jnp.float32))
     dtv = jax.nn.softplus(dt.astype(jnp.float32)
                           + p["dt_bias"].astype(jnp.float32))
+    if seq_len is not None:
+        # masked update: zero step size on pad rows/positions => identity
+        valid = (jnp.arange(S, dtype=jnp.int32)[None, :]
+                 < jnp.asarray(seq_len, jnp.int32)[:, None])
+        dtv = dtv * valid[..., None].astype(dtv.dtype)
 
     xh = xi.reshape(B, S, n_heads, P)
     Bm = Bc.reshape(B, S, n_groups, d_state)

@@ -1,10 +1,14 @@
-"""Serving: slot-level continuous batching + the wave baseline.
+"""Serving: paged continuous batching + dense and wave baselines.
 
-``Engine`` is the continuous engine; ``WaveEngine`` keeps the seed
-wave-drain behavior for benchmarks.  ``ScheduleCache`` (re-exported from
-``core.scheduler``) is the shape -> (dataflow, arrangement, k_fold) memo
-both the engine hot path and ``kernels.ops.matmul`` consult.
+``Engine`` is the continuous engine (block-paged KV by default:
+``kv_pool.KVPool`` allocator + chunked prefill + batched admission +
+prefix sharing; ``paged=False`` restores the dense stripes);
+``WaveEngine`` keeps the seed wave-drain behavior for benchmarks.
+``ScheduleCache`` (re-exported from ``core.scheduler``) is the shape ->
+(dataflow, arrangement, k_fold) memo the engine hot path — including the
+paged-decode gather GEMMs — and ``kernels.ops.matmul`` consult.
 """
 from repro.core.scheduler import ScheduleCache  # noqa
 from repro.serving.engine import (ContinuousEngine, Engine, Request,  # noqa
                                   Result, WaveEngine)
+from repro.serving.kv_pool import AdmitPlan, KVPool, blocks_for  # noqa

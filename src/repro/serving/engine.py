@@ -1,4 +1,4 @@
-"""Serving engines: slot-level continuous batching (v2) + the wave baseline.
+"""Serving engines: paged continuous batching (v3) + dense + wave baselines.
 
 ``ContinuousEngine`` (the default ``Engine``) admits requests per SLOT:
 the moment a slot finishes its request, the next queued request is
@@ -9,14 +9,31 @@ barrier.  The design:
     (``network.expand_cache_pos``); attention masks each slot at its own
     bound and decode writes each slot at its own depth, so slots at
     different sequence depths batch into one jitted decode step.
-  * **Bucketed ragged prefill.**  A new prompt is right-padded to the next
-    bucket length and prefilled alone (batch=1) through a per-bucket jit
-    cache (``network.prefill_ragged`` gathers the logits of the last REAL
-    token), then spliced into its slot with ``network.insert_slot_caches``
-    with pos = the true prompt length — pad garbage beyond it is masked by
-    the validity bound and progressively overwritten by decode.  SSM /
-    hybrid archs (recurrent state is order-sensitive) fall back to the
-    seed's right-ALIGNED alignment with pos = bucket length.
+  * **Block-paged KV cache (default, ``paged=True``).**  Attention KV
+    lives in a shared block pool (``serving.kv_pool`` — free-list
+    allocator, ref-counted blocks, per-slot block tables) instead of a
+    dense ``slots x max_len`` stripe: the memory ceiling becomes "blocks
+    actually used", identical prompt prefixes are stored ONCE (full
+    prompt blocks are content-addressed and their prefill is skipped on a
+    hit), and decode attention gathers K/V through the table — the
+    Pallas paged-decode kernel on TPU, a pure-JAX gather elsewhere
+    (``kernels.paged_attention``).  When the pool cannot host a new
+    request it stays queued (clean admission backoff, never a crash).
+  * **Chunked prefill + batched admission (paged path).**  Prompts are
+    prefilled in fixed-size decode-interleaved chunks: every engine step
+    runs at most ONE chunk batch (all admitting slots advance together in
+    a single jitted call — batched admission) and then one decode step,
+    so resident slots never stall longer than one chunk.  Cache cursors
+    advance by each row's REAL token count; the SSM masked-update scan
+    keeps hybrid recurrent state exact under the chunk's pad tail.
+  * **Bucketed ragged prefill (dense fallback, ``paged=False``).**  A new
+    prompt is right-padded to the next bucket length and prefilled alone
+    (batch=1) through a per-bucket jit cache (``network.prefill_ragged``
+    gathers the logits of the last REAL token), then spliced into its
+    slot with ``network.insert_slot_caches`` with pos = the true prompt
+    length.  Since the masked-update scan (models/ssm.py) landed, hybrid
+    archs take this exact ragged path too — the right-aligned fallback is
+    gone.
   * **Async queue API.**  ``submit`` enqueues from any thread;
     ``serve_forever``/``start`` pump admission+decode on a background
     thread; results arrive on a thread-safe queue (``get_result``).
@@ -52,8 +69,10 @@ import numpy as np
 
 from repro.core.precision import precision_for_dtype
 from repro.core.scheduler import ScheduleCache
+from repro.kernels import paged_attention as PA
 from repro.models import network as N
 from repro.models.config import BlockKind, ModelConfig
+from repro.serving.kv_pool import KVPool, blocks_for
 
 PyTree = Any
 
@@ -100,17 +119,26 @@ def _engine_fns(cfg: ModelConfig, max_len: int) -> Dict[str, Any]:
         tok, key = _sample_traced(key, logits, temp[None])
         return tok[0], caches, key
 
-    def admit_aligned(params, toks, caches, slot, pos0, key, temp):
-        small = N.init_caches(cfg, 1, max_len, dt)
-        logits, small = N.prefill(params, cfg, {"tokens": toks}, small)
-        caches = N.insert_slot_caches(caches, small, slot, pos0)
-        tok, key = _sample_traced(key, logits, temp[None])
-        return tok[0], caches, key
+    def decode_sample_paged(params, toks, caches, pos, bt, adv, key, temps):
+        logits, caches = N.decode_step(params, cfg, toks, caches, pos,
+                                       block_table=bt, pos_advance=adv)
+        tok, key = _sample_traced(key, logits, temps)
+        return tok, caches, key
+
+    def prefill_chunk(params, toks, caches, slot_ids, bt, lens, last_idx,
+                      key, temps):
+        logits, caches = N.prefill_paged_chunk(params, cfg, toks, caches,
+                                               slot_ids, bt, lens, last_idx)
+        tok, key = _sample_traced(key, logits, temps)
+        return tok, caches, key
 
     fns = {
         "decode_sample": jax.jit(decode_sample),
         "admit_ragged": jax.jit(admit_ragged),
-        "admit_aligned": jax.jit(admit_aligned),
+        "decode_sample_paged": jax.jit(decode_sample_paged),
+        "prefill_chunk": jax.jit(prefill_chunk),
+        "reset_slot": jax.jit(N.reset_slot_state),
+        "copy_blocks": jax.jit(N.copy_paged_blocks),
         "prefill": jax.jit(lambda p, b, c: N.prefill(p, cfg, b, c)),
         "decode": jax.jit(
             lambda p, t, c, pos: N.decode_step(p, cfg, t, c, pos)),
@@ -158,6 +186,10 @@ class _Slot:
     t_admit: float
     t_prefill_done: float
     t_first: float
+    #: paged path: "prefill" while chunks remain, then "decode"
+    phase: str = "decode"
+    #: pending chunk token arrays (paged chunked prefill), consumed in order
+    chunks: List[np.ndarray] = dataclasses.field(default_factory=list)
 
 
 class ContinuousEngine:
@@ -166,7 +198,11 @@ class ContinuousEngine:
     def __init__(self, cfg: ModelConfig, params: PyTree, *, slots: int = 8,
                  max_len: int = 2048, seed: int = 0,
                  prefill_buckets: Optional[Sequence[int]] = None,
-                 schedule_cache: Optional[ScheduleCache] = None):
+                 schedule_cache: Optional[ScheduleCache] = None,
+                 paged: bool = True, block_size: int = 16,
+                 kv_blocks: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None,
+                 share_prefixes: bool = True):
         if cfg.is_encoder_only:
             raise ValueError(f"{cfg.name} is encoder-only: no decode serving")
         self.cfg = cfg
@@ -175,13 +211,9 @@ class ContinuousEngine:
         self.max_len = max_len
         self.key = jax.random.PRNGKey(seed)
         self.schedule = schedule_cache or ScheduleCache()
-
-        # recurrent (SSM) state is order-sensitive: trailing pad tokens
-        # would corrupt it, so hybrid archs keep the seed's right-aligned
-        # (leading-pad) prefill; pure-attention archs run exact ragged
-        # prefill with the validity bound masking the pad tail.
-        kinds = tuple(cfg.pattern) + tuple(cfg.tail)
-        self._ragged = BlockKind.MAMBA2 not in kinds
+        self.paged = paged
+        self._prec = precision_for_dtype(cfg.compute_dtype,
+                                         default="FP32").name
 
         if prefill_buckets is None:
             prefill_buckets, b = [], 16
@@ -195,8 +227,42 @@ class ContinuousEngine:
 
         self._fns = _engine_fns(cfg, max_len)
 
-        self.caches = N.expand_cache_pos(
-            N.init_caches(cfg, slots, max_len), slots)
+        if paged:
+            # chunk length: one jitted chunk program serves every prefill.
+            # Any length is valid for every arch — ssd_chunked pads its
+            # scan tail internally (dt=0 no-ops), so no ssm.chunk
+            # quantization is needed here.
+            self.prefill_chunk = min(prefill_chunk or 32, max_len)
+            per_slot = blocks_for(max_len, block_size)
+            if kv_blocks is None:
+                # ~3/4 of the dense ceiling: real savings while every test
+                # trace still fits (the pool backs off, never deadlocks,
+                # as long as ONE request fits when the pool drains).
+                kv_blocks = max(per_slot + 1,
+                                1 + (3 * slots * per_slot + 3) // 4)
+            if kv_blocks < per_slot + 1:
+                raise ValueError(
+                    f"kv_blocks {kv_blocks} cannot host one full-window "
+                    f"request ({per_slot} blocks of {block_size})")
+            # prefix sharing reuses KV *blocks*; hybrid (SSM) archs also
+            # carry recurrent state the pool cannot reconstruct from
+            # blocks, so sharing (= skipping the shared prefill) would
+            # silently drop the prefix from the SSM recurrence.  Disable.
+            kinds = tuple(cfg.pattern) + tuple(cfg.tail)
+            share_prefixes = (share_prefixes
+                              and BlockKind.MAMBA2 not in kinds)
+            self.pool: Optional[KVPool] = KVPool(
+                kv_blocks, block_size, slots=slots, max_len=max_len,
+                share_prefixes=share_prefixes)
+            self.caches = N.expand_cache_pos(
+                N.init_paged_caches(cfg, slots, kv_blocks, block_size),
+                slots)
+            self._bt = jnp.asarray(self.pool.tables)
+            self._slot_ids = jnp.arange(slots, dtype=jnp.int32)
+        else:
+            self.pool = None
+            self.caches = N.expand_cache_pos(
+                N.init_caches(cfg, slots, max_len), slots)
         self._slots: List[Optional[_Slot]] = [None] * slots
         self._pos = np.zeros(slots, np.int32)   # mirror of cache pos leaves
 
@@ -209,6 +275,21 @@ class ContinuousEngine:
         self._loop_error: Optional[BaseException] = None
         self.steps = 0          # decode steps executed (benchmark metric)
         self.prefills = 0
+        self.chunk_steps = 0    # prefill-chunk batches executed (paged)
+        #: deterministic interleave bound: max chunk batches run between
+        #: two decode steps while some slot was decoding.  The chunked-
+        #: prefill construction guarantees <= 1 (one chunk batch per
+        #: engine step, decode follows); serve_bench gates on it.
+        self.max_chunk_gap = 0
+        self._chunks_since_decode = 0
+        #: perf_counter stamps of decode-step completions — serve_bench
+        #: derives the max decode gap from these to verify chunked prefill
+        #: bounds the admission stall; chunk_durations are the wall times
+        #: of the chunk batches (the bound itself).
+        self.decode_times: "collections.deque[float]" = (
+            collections.deque(maxlen=65536))
+        self.chunk_durations: "collections.deque[float]" = (
+            collections.deque(maxlen=65536))
 
     # -- async request/result API -------------------------------------------
 
@@ -284,7 +365,7 @@ class ContinuousEngine:
         the LM head (1 for a single-request prefill, ``slots`` for a
         decode step — the head sees one row per batched sequence)."""
         cfg = self.cfg
-        prec = precision_for_dtype(cfg.compute_dtype, default="FP32").name
+        prec = self._prec
         d = cfg.d_model
         shapes = [(m_tokens, cfg.n_heads * cfg.hd, d),
                   (m_tokens, cfg.n_kv_heads * cfg.hd, d),
@@ -299,6 +380,20 @@ class ContinuousEngine:
         for M, Nn, K in shapes:
             self.schedule.resolve(M, Nn, K, prec)
 
+    # -- memory accounting ----------------------------------------------------
+
+    def kv_bytes(self) -> Dict[str, int]:
+        """Attention-KV memory: ``allocated`` = bytes of the KV leaves
+        (pool or dense stripes); ``peak`` = high-watermark of bytes holding
+        live data (paged: peak used blocks x per-block bytes across all
+        layers; dense: the whole stripe, it is committed up front)."""
+        alloc = N.kv_cache_bytes(self.caches)
+        if not self.paged:
+            return {"allocated": alloc, "peak": alloc}
+        per_block = alloc // self.pool.num_blocks
+        return {"allocated": alloc,
+                "peak": per_block * self.pool.peak_used}
+
     # -- admission -----------------------------------------------------------
 
     def _free_slot(self) -> Optional[int]:
@@ -308,42 +403,22 @@ class ContinuousEngine:
         return None
 
     def _admit_one(self, slot: int, req: Request, t_submit: float) -> None:
+        """Dense path: one-shot bucketed ragged prefill (batch=1).  The
+        masked-update SSM scan makes this exact for hybrid archs too, so
+        the old right-aligned fallback is gone."""
         plen = len(req.prompt)
-        if plen > self.max_len:
-            raise ValueError(f"prompt {plen} exceeds max_len {self.max_len}")
         bucket = _bucket_for(plen, self.buckets)
         t0 = time.perf_counter()
         self._register_gemms(bucket, 1)
 
         toks = np.zeros((1, bucket), np.int32)
-        temp = jnp.asarray(req.temperature, jnp.float32)
-        slot_j = jnp.asarray(slot, jnp.int32)
-        if self._ragged:
-            toks[0, :plen] = req.prompt
-            pos0 = plen
-            tok, self.caches, self.key = self._fns["admit_ragged"](
-                self.params, jnp.asarray(toks), self.caches, slot_j,
-                jnp.asarray(pos0, jnp.int32),
-                jnp.asarray([plen - 1], jnp.int32), self.key, temp)
-        else:
-            # aligned mode consumes the whole bucket as KV positions, so a
-            # terminal (== max_len) bucket would leave zero decode headroom
-            # and silently truncate to 1 token; re-pad such prompts to the
-            # smallest valid length instead (SSM prefill requires S to be
-            # a multiple of the scan chunk, else 8).  Prompts within one
-            # quantum of max_len still truncate — a window, not a bug.
-            if bucket >= self.max_len and plen < self.max_len:
-                q = (self.cfg.ssm.chunk if self.cfg.ssm is not None else 8)
-                # any S <= chunk is a valid prefill length; beyond that S
-                # must be a chunk multiple (ssm.ssd_chunked contract)
-                bucket = plen if plen <= q else -(-plen // q) * q
-                bucket = min(self.max_len, bucket)
-                toks = np.zeros((1, bucket), np.int32)
-            toks[0, bucket - plen:] = req.prompt   # right-align (seed rule)
-            pos0 = bucket
-            tok, self.caches, self.key = self._fns["admit_aligned"](
-                self.params, jnp.asarray(toks), self.caches, slot_j,
-                jnp.asarray(pos0, jnp.int32), self.key, temp)
+        toks[0, :plen] = req.prompt
+        pos0 = plen
+        tok, self.caches, self.key = self._fns["admit_ragged"](
+            self.params, jnp.asarray(toks), self.caches,
+            jnp.asarray(slot, jnp.int32), jnp.asarray(pos0, jnp.int32),
+            jnp.asarray([plen - 1], jnp.int32), self.key,
+            jnp.asarray(req.temperature, jnp.float32))
         self._pos[slot] = pos0
         self.prefills += 1
 
@@ -353,13 +428,36 @@ class ContinuousEngine:
                    t_submit=t_submit, t_admit=t0, t_prefill_done=t1,
                    t_first=t1)
         self._slots[slot] = st
-        # pos0 == max_len means zero decode headroom (aligned mode can pad
-        # a prompt up to the full window): the next write would clamp onto
-        # the last real token, so finish with the prefill token instead.
+        # pos0 == max_len means zero decode headroom: the next write would
+        # clamp onto the last real token, so finish with the prefill token.
         if (st.cur_tok == req.eos
                 or len(st.produced) >= req.max_new_tokens
                 or pos0 >= self.max_len):
             self._finish(slot)
+
+    def _admit_one_paged(self, slot: int, req: Request, t_submit: float
+                         ) -> bool:
+        """Paged path: reserve blocks (shared prefix mapped in, its
+        prefill SKIPPED), queue the remaining prompt as chunks.  Returns
+        False on pool exhaustion — the request goes back to the queue."""
+        plan = self.pool.admit(slot, [int(t) for t in req.prompt],
+                               req.max_new_tokens)
+        if plan is None:
+            return False
+        t0 = time.perf_counter()
+        self._bt = jnp.asarray(self.pool.tables)
+        # fresh recurrent state + cursor at the resident prefix length
+        self.caches = self._fns["reset_slot"](
+            self.caches, jnp.asarray(slot, jnp.int32),
+            jnp.asarray(plan.shared_tokens, jnp.int32))
+        self._pos[slot] = plan.shared_tokens
+        rest = np.asarray(req.prompt[plan.shared_tokens:], np.int32)
+        L = self.prefill_chunk
+        chunks = [rest[j:j + L] for j in range(0, len(rest), L)]
+        self._slots[slot] = _Slot(
+            req=req, produced=[], cur_tok=-1, t_submit=t_submit, t_admit=t0,
+            t_prefill_done=0.0, t_first=0.0, phase="prefill", chunks=chunks)
+        return True
 
     def _admit(self) -> None:
         while True:
@@ -370,7 +468,13 @@ class ContinuousEngine:
                 if not self._pending:
                     return
                 req, t_submit = self._pending.popleft()
-            self._admit_one(slot, req, t_submit)
+            if self.paged:
+                if not self._admit_one_paged(slot, req, t_submit):
+                    with self._cv:          # backoff: retry next step
+                        self._pending.appendleft((req, t_submit))
+                    return
+            else:
+                self._admit_one(slot, req, t_submit)
 
     def _finish(self, slot: int) -> None:
         st = self._slots[slot]
@@ -383,32 +487,133 @@ class ContinuousEngine:
             latency_s=now - st.t_submit,
             ttft_s=st.t_first - st.t_submit))
         self._slots[slot] = None
+        if self.paged:
+            # release refs; full prompt blocks stay content-addressed in
+            # the prefix cache until evicted, so an identical prompt later
+            # skips their prefill entirely.
+            self.pool.release_slot(slot, prompt=[int(t)
+                                                 for t in st.req.prompt])
+            self._bt = jnp.asarray(self.pool.tables)
 
     # -- the decode step ------------------------------------------------------
 
+    def _apply_cow(self) -> None:
+        """Execute any pending copy-on-write forks on the device pool and
+        refresh the device block-table mirror."""
+        copies = self.pool.take_copies()
+        if copies:
+            src = jnp.asarray([c[0] for c in copies], jnp.int32)
+            dst = jnp.asarray([c[1] for c in copies], jnp.int32)
+            self.caches = self._fns["copy_blocks"](self.caches, src, dst)
+            self._bt = jnp.asarray(self.pool.tables)
+
+    def _prefill_chunk_step(self, pre: List[int]) -> None:
+        """One decode-interleaved chunk for EVERY admitting slot (batched
+        admission): a single jitted call advances them all; rows not mid-
+        prefill ride along masked (len 0 — recurrent state untouched,
+        stray writes land beyond their validity bound or in the trash
+        block)."""
+        L = self.prefill_chunk
+        toks = np.zeros((self.slots, L), np.int32)
+        lens = np.zeros(self.slots, np.int32)
+        temps = np.zeros(self.slots, np.float32)
+        for i in pre:
+            st = self._slots[i]
+            chunk = st.chunks.pop(0)
+            toks[i, :len(chunk)] = chunk
+            lens[i] = len(chunk)
+            temps[i] = st.req.temperature
+            self.pool.ensure_writable(i, int(self._pos[i]),
+                                      int(self._pos[i]) + L - 1)
+        self._apply_cow()
+        self._register_gemms(self.slots * L, self.slots)
+
+        t0 = time.perf_counter()
+        tok, self.caches, self.key = self._fns["prefill_chunk"](
+            self.params, jnp.asarray(toks), self.caches, self._slot_ids,
+            self._bt, jnp.asarray(lens),
+            jnp.asarray(np.maximum(lens - 1, 0)), self.key,
+            jnp.asarray(temps))
+        self.chunk_steps += 1
+        if any(s is not None and s.phase == "decode" for s in self._slots):
+            self._chunks_since_decode += 1
+            self.max_chunk_gap = max(self.max_chunk_gap,
+                                     self._chunks_since_decode)
+        tok_np = np.asarray(tok)
+        now = time.perf_counter()
+        self.chunk_durations.append(now - t0)
+        for i in pre:
+            st = self._slots[i]
+            self._pos[i] += int(lens[i])
+            if st.chunks:
+                continue                       # more chunks next step
+            self.prefills += 1
+            st.phase = "decode"
+            st.t_prefill_done = st.t_first = now
+            # prompt KV is now fully resident: content-address its full
+            # blocks so even a CONCURRENT identical prompt shares them
+            # (release re-registers, which is a no-op).
+            n = int(self.pool.n_slot_blocks[i])
+            self.pool.register_prefix(
+                [int(t) for t in st.req.prompt],
+                [int(b) for b in self.pool.tables[i, :n]])
+            tok0 = int(tok_np[i])
+            st.produced.append(tok0)
+            st.cur_tok = tok0
+            if (tok0 == st.req.eos
+                    or len(st.produced) >= st.req.max_new_tokens
+                    or self._pos[i] >= self.max_len):
+                self._finish(i)
+
     def step(self) -> int:
-        """Admit what fits, run ONE batched decode step over the active
-        slots, finish/refill.  Returns the number of active slots after
-        the step (0 = idle)."""
+        """Admit what fits, run at most one prefill-chunk batch (paged)
+        and ONE batched decode step over the decoding slots, then
+        finish/refill.  Returns the number of active slots after the step
+        (0 = idle)."""
         self._admit()
-        active = [i for i, s in enumerate(self._slots) if s is not None]
+        if self.paged:
+            pre = [i for i, s in enumerate(self._slots)
+                   if s is not None and s.phase == "prefill"]
+            if pre:
+                self._prefill_chunk_step(pre)
+        active = [i for i, s in enumerate(self._slots)
+                  if s is not None and s.phase == "decode"]
         if not active:
-            return 0
+            return sum(s is not None for s in self._slots)
 
         self._register_gemms(self.slots, self.slots)
         toks = np.zeros((self.slots, 1), np.int32)
         temps = np.zeros(self.slots, np.float32)
+        adv = np.zeros(self.slots, np.int32)
         for i in active:
             toks[i, 0] = self._slots[i].cur_tok
             temps[i] = self._slots[i].req.temperature
+            adv[i] = 1
 
-        tok, self.caches, self.key = self._fns["decode_sample"](
-            self.params, jnp.asarray(toks), self.caches,
-            jnp.asarray(self._pos), self.key, jnp.asarray(temps))
-        # every slot's cache pos advanced by 1 (inactive slots write masked
-        # garbage in place); mirror it so the next step agrees.
-        self._pos += 1
+        if self.paged:
+            for i in active:
+                self.pool.ensure_writable(i, int(self._pos[i]),
+                                          int(self._pos[i]))
+            self._apply_cow()
+            tok, self.caches, self.key = self._fns["decode_sample_paged"](
+                self.params, jnp.asarray(toks), self.caches,
+                jnp.asarray(self._pos), self._bt, jnp.asarray(adv),
+                self.key, jnp.asarray(temps))
+            # the dispatch above IS the application of the gather GEMMs;
+            # record it now so the applied log mirrors real decode steps.
+            PA.note_gather_applied(self.schedule, self.cfg,
+                                   self.pool.block_size, self._prec)
+            self._pos += adv        # only decoding slots advanced
+            self._chunks_since_decode = 0
+        else:
+            tok, self.caches, self.key = self._fns["decode_sample"](
+                self.params, jnp.asarray(toks), self.caches,
+                jnp.asarray(self._pos), self.key, jnp.asarray(temps))
+            # every slot's cache pos advanced by 1 (inactive slots write
+            # masked garbage in place); mirror it so the next step agrees.
+            self._pos += 1
         self.steps += 1
+        self.decode_times.append(time.perf_counter())
 
         tok_np = np.asarray(tok)
         for i in active:

@@ -1,0 +1,362 @@
+"""Block-paged KV pool: allocator, block tables, prefix sharing, COW.
+
+This module is the HOST side of the paged KV-cache subsystem.  Device
+storage (owned by the engine's cache pytree, built by
+``network.init_paged_caches``) keeps every attention layer's K/V as a
+single pool array
+
+    (num_blocks, block_size, n_kv_heads, head_dim)
+
+instead of the dense per-slot stripe ``(slots, max_len, ...)``.  A slot's
+logical KV sequence is scattered across pool blocks; the mapping is the
+slot's row of the **block table**
+
+    tables : int32 (slots, blocks_per_slot),   blocks_per_slot = ceil(max_len / block_size)
+
+where ``tables[s, j]`` is the pool block holding the slot's tokens at
+logical positions ``[j*block_size, (j+1)*block_size)``.  The same table is
+shared by every layer — each layer indexes its own pool array with the
+same block ids.  Token position ``p`` of slot ``s`` therefore lives at
+flat pool index ``tables[s, p // block_size] * block_size + p % block_size``,
+which is exactly the gather the paged-decode kernel
+(``kernels.paged_attention``) performs through scalar-prefetched tables.
+
+Allocator invariants:
+
+  * **Block 0 is the null/trash block.**  It is never handed out; table
+    entries default to 0, and out-of-range writes (inactive slots whose
+    ``pos`` keeps advancing in the batched decode step) land there.  Reads
+    are always masked by the per-slot validity length, so trash contents
+    are never observed.
+  * **Ref counts.**  ``ref[b]`` counts the slots currently mapping block
+    ``b`` plus one if the block is registered in the prefix cache.  A block
+    returns to the free list only at ref == 0.
+  * **Prefix sharing.**  Full prompt blocks are content-addressed by a
+    chained hash (block tokens + parent hash, so a block's identity
+    encodes its whole prefix).  Admission walks the prompt's full blocks
+    through ``match_prefix``; every hit is mapped into the new slot's
+    table (ref++) and its prefill is SKIPPED — the K/V bytes are already
+    in the pool and RoPE is absolute-positional, so they are bit-identical
+    to what a fresh prefill would write.
+  * **Copy-on-write.**  Writes may only touch blocks with ref == 1.
+    ``ensure_writable`` forks a shared block: a fresh block is allocated,
+    the table entry is swapped, and the (src, dst) pair is appended to
+    ``pending_copies`` for the engine to execute on-device.  (With
+    full-block-only sharing the engine never appends into a shared block
+    — shared prefixes are block-aligned and writes start at the prompt
+    tail — but the pool enforces the invariant regardless, so any future
+    partial-block sharing policy inherits a safe write path.)
+  * **Eviction.**  Finished slots release their refs but registered
+    prefix blocks stay cached (the map's ref pins them).  When a
+    reservation cannot be met, least-recently-used cached blocks with no
+    other users are evicted until it can; if that still falls short the
+    reservation returns None and the engine backs off (the request stays
+    queued — never a crash).
+
+**Dense fallback switch.**  ``ContinuousEngine(paged=False)`` bypasses
+this module entirely and serves from the PR-1 dense stripes; the paged
+engine is the default.  The two paths produce token-identical greedy
+output (tested), differing only in storage layout and admission
+scheduling — which is what makes the paged path a drop-in replacement.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+#: the reserved null/trash block id (see module docstring)
+NULL_BLOCK = 0
+
+
+def blocks_for(n_tokens: int, block_size: int) -> int:
+    """Number of blocks covering ``n_tokens`` positions."""
+    return -(-max(0, int(n_tokens)) // block_size)
+
+
+@dataclasses.dataclass
+class AdmitPlan:
+    """Result of a successful admission reservation."""
+
+    slot: int
+    shared_tokens: int          # prefix length already resident (block-aligned)
+    shared_blocks: Tuple[int, ...]
+    new_blocks: Tuple[int, ...]
+
+    @property
+    def blocks(self) -> Tuple[int, ...]:
+        return self.shared_blocks + self.new_blocks
+
+
+class KVPool:
+    """Host-side bookkeeping for the paged KV cache (see module docstring).
+
+    The pool never touches device memory; it hands the engine block ids,
+    table rows and pending (src, dst) copy pairs, and the engine mirrors
+    them into the device cache tree.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int, *, slots: int,
+                 max_len: int, share_prefixes: bool = True):
+        if num_blocks < 2:
+            raise ValueError("need >= 2 blocks (block 0 is reserved)")
+        if block_size < 1:
+            raise ValueError("block_size must be positive")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self.slots = slots
+        self.max_len = max_len
+        self.blocks_per_slot = blocks_for(max_len, block_size)
+        self.share_prefixes = share_prefixes
+
+        # block 0 reserved: never allocated, never freed.
+        self._free: "collections.deque[int]" = collections.deque(
+            range(1, num_blocks))
+        self.ref = np.zeros(num_blocks, np.int32)
+        self.ref[NULL_BLOCK] = 1                       # pinned forever
+
+        #: per-slot block tables (NULL_BLOCK-padded) + valid-entry counts
+        self.tables = np.full((slots, self.blocks_per_slot), NULL_BLOCK,
+                              np.int32)
+        self.n_slot_blocks = np.zeros(slots, np.int32)
+
+        # prefix cache: chained hash -> block id, LRU-ordered for eviction
+        self._prefix: "collections.OrderedDict[Tuple, int]" = (
+            collections.OrderedDict())
+        self._hash_of: Dict[int, Tuple] = {}           # reverse map
+
+        #: (src, dst) copies the engine must apply on-device (COW forks)
+        self.pending_copies: List[Tuple[int, int]] = []
+
+        # telemetry
+        self.peak_used = 0
+        self.shared_token_hits = 0
+        self.cow_forks = 0
+        self.evictions = 0
+        self.backoffs = 0
+
+    # -- accounting ----------------------------------------------------------
+
+    @property
+    def used_blocks(self) -> int:
+        """Blocks currently out of the free list (excluding the null block)."""
+        return self.num_blocks - 1 - len(self._free)
+
+    def _note_usage(self) -> None:
+        self.peak_used = max(self.peak_used, self.used_blocks)
+
+    # -- raw allocation ------------------------------------------------------
+
+    def _alloc_one(self) -> Optional[int]:
+        if not self._free:
+            return None
+        bid = self._free.popleft()
+        assert self.ref[bid] == 0, (bid, self.ref[bid])
+        self.ref[bid] = 1
+        self._note_usage()
+        return bid
+
+    def _release_one(self, bid: int) -> None:
+        if bid == NULL_BLOCK:
+            return
+        assert self.ref[bid] > 0, bid
+        self.ref[bid] -= 1
+        if self.ref[bid] == 0:
+            # a block can only hit zero if the prefix map no longer pins it
+            assert bid not in self._hash_of, bid
+            self._free.append(bid)
+
+    def _evict_cached(self, need: int) -> None:
+        """Unregister LRU prefix blocks nobody else maps until ``need``
+        free blocks are available (or the cache is exhausted)."""
+        if need <= len(self._free):
+            return
+        for h in list(self._prefix):
+            bid = self._prefix[h]
+            if self.ref[bid] == 1:          # only the map holds it
+                del self._prefix[h]
+                del self._hash_of[bid]
+                self._release_one(bid)
+                self.evictions += 1
+                if len(self._free) >= need:
+                    return
+
+    def reserve(self, n: int) -> Optional[List[int]]:
+        """Allocate ``n`` blocks atomically (evicting cached prefix blocks
+        if needed); None (and a recorded backoff) when the pool cannot
+        satisfy the reservation — the caller must retry later."""
+        self._evict_cached(n)
+        if len(self._free) < n:
+            self.backoffs += 1
+            return None
+        out = []
+        for _ in range(n):
+            out.append(self._alloc_one())
+        return out
+
+    # -- prefix sharing ------------------------------------------------------
+
+    @staticmethod
+    def _chain_hashes(tokens: Sequence[int], block_size: int,
+                      n_blocks: int) -> List[Tuple]:
+        """Chained content keys, one per full block: block j's key is
+        (parent key, block-j tokens) — the FULL chain, not a collapsed
+        hash(), so two different prefixes can never alias a block (a
+        64-bit hash collision here would silently serve another prompt's
+        KV).  Dict lookups still hash the tuple internally; equality
+        checks make collisions harmless."""
+        hs: List[Tuple] = []
+        h: Tuple = ()
+        toks = [int(t) for t in tokens[:n_blocks * block_size]]
+        for j in range(n_blocks):
+            h = (h, tuple(toks[j * block_size:(j + 1) * block_size]))
+            hs.append(h)
+        return hs
+
+    def match_prefix(self, prompt: Sequence[int]) -> List[int]:
+        """Longest run of cached full prompt blocks; each returned block
+        gets a ref for the caller.  Sharing only ever covers FULL blocks,
+        so the shared length is always block-aligned and strictly shorter
+        than the prompt (the last token is never shared: its logits seed
+        decode, so at least the tail must be prefilled)."""
+        if not self.share_prefixes:
+            return []
+        nfull = (len(prompt) - 1) // self.block_size   # keep >= 1 tail token
+        out: List[int] = []
+        for h in self._chain_hashes(prompt, self.block_size, nfull):
+            bid = self._prefix.get(h)
+            if bid is None:
+                break
+            self._prefix.move_to_end(h)                # LRU touch
+            self.ref[bid] += 1
+            out.append(bid)
+        return out
+
+    def register_prefix(self, prompt: Sequence[int],
+                        blocks: Sequence[int]) -> None:
+        """Content-address the prompt's full blocks so future admissions
+        can reuse them.  Registering an already-cached hash is a no-op;
+        a newly registered block gains the map's pinning ref."""
+        if not self.share_prefixes:
+            return
+        nfull = min((len(prompt) - 1) // self.block_size, len(blocks))
+        for j, h in enumerate(self._chain_hashes(prompt, self.block_size,
+                                                 nfull)):
+            bid = int(blocks[j])
+            if h in self._prefix or bid in self._hash_of:
+                continue
+            self._prefix[h] = bid
+            self._hash_of[bid] = h
+            self.ref[bid] += 1
+
+    # -- admission / release -------------------------------------------------
+
+    def admit(self, slot: int, prompt: Sequence[int],
+              max_new_tokens: int) -> Optional[AdmitPlan]:
+        """Reserve everything request ``(prompt, max_new_tokens)`` can ever
+        touch in slot ``slot``: shared prefix blocks are mapped in, the
+        rest is allocated up front so decode can never fail mid-flight.
+        Returns None (clean backoff) if the pool is too full right now."""
+        assert self.n_slot_blocks[slot] == 0, f"slot {slot} not released"
+        plen = len(prompt)
+        total = min(blocks_for(plen + max_new_tokens, self.block_size),
+                    self.blocks_per_slot)
+        shared = self.match_prefix(prompt)
+        if len(shared) > total:     # degenerate: tiny decode budget
+            for bid in shared[total:]:
+                self._release_one(bid)
+            shared = shared[:total]
+        fresh = self.reserve(total - len(shared))
+        if fresh is None:
+            for bid in shared:
+                self._release_one(bid)
+            return None
+        row = list(shared) + fresh
+        self.tables[slot, :len(row)] = row
+        self.tables[slot, len(row):] = NULL_BLOCK
+        self.n_slot_blocks[slot] = len(row)
+        # count reuse only for admissions that actually land: a backoff
+        # releases the matched refs and retries, and must not double-count
+        self.shared_token_hits += len(shared) * self.block_size
+        self._note_usage()
+        return AdmitPlan(slot=slot,
+                         shared_tokens=len(shared) * self.block_size,
+                         shared_blocks=tuple(shared),
+                         new_blocks=tuple(fresh))
+
+    def release_slot(self, slot: int, *, prompt: Optional[Sequence[int]]
+                     = None) -> None:
+        """Drop the slot's refs.  With ``prompt`` given, its full blocks are
+        first registered in the prefix cache (so they survive the release
+        and a later identical prompt re-admits them — free/re-admit
+        cycles keep ref counts exact, tested)."""
+        n = int(self.n_slot_blocks[slot])
+        row = [int(b) for b in self.tables[slot, :n]]
+        if prompt is not None:
+            self.register_prefix(prompt, row)
+        for bid in row:
+            self._release_one(bid)
+        self.tables[slot, :] = NULL_BLOCK
+        self.n_slot_blocks[slot] = 0
+
+    # -- copy-on-write -------------------------------------------------------
+
+    def ensure_writable(self, slot: int, first_pos: int, last_pos: int
+                        ) -> None:
+        """Fork any shared block the write span [first_pos, last_pos]
+        touches (COW).  Device copies are queued on ``pending_copies`` for
+        the engine to apply BEFORE the write executes."""
+        j0 = first_pos // self.block_size
+        j1 = min(last_pos // self.block_size, self.blocks_per_slot - 1)
+        for j in range(j0, j1 + 1):
+            bid = int(self.tables[slot, j])
+            if bid == NULL_BLOCK or self.ref[bid] <= 1:
+                continue
+            fresh = self._alloc_one()
+            if fresh is None:
+                # admission reserved the slot's whole span, so a fork can
+                # only fail if sharing outran the reservation — evict and
+                # retry once; a genuine exhaustion here is a bug upstream.
+                self._evict_cached(1)
+                fresh = self._alloc_one()
+                if fresh is None:
+                    raise MemoryError("KV pool exhausted during COW fork")
+            self.pending_copies.append((bid, fresh))
+            self.cow_forks += 1
+            self._release_one(bid)
+            self.tables[slot, j] = fresh
+
+    def take_copies(self) -> List[Tuple[int, int]]:
+        out, self.pending_copies = self.pending_copies, []
+        return out
+
+    # -- introspection -------------------------------------------------------
+
+    def stats(self) -> Dict[str, int]:
+        return {"num_blocks": self.num_blocks - 1,
+                "block_size": self.block_size,
+                "used": self.used_blocks,
+                "peak_used": self.peak_used,
+                "cached_prefix_blocks": len(self._prefix),
+                "shared_token_hits": self.shared_token_hits,
+                "cow_forks": self.cow_forks,
+                "evictions": self.evictions,
+                "backoffs": self.backoffs}
+
+    def check(self) -> None:
+        """Internal-consistency audit (tests): every ref accounted for."""
+        counts = np.zeros(self.num_blocks, np.int64)
+        counts[NULL_BLOCK] += 1
+        for s in range(self.slots):
+            for b in self.tables[s, :self.n_slot_blocks[s]]:
+                counts[int(b)] += 1
+        for bid in self._hash_of:
+            counts[bid] += 1
+        free = set(self._free)
+        for bid in range(self.num_blocks):
+            assert counts[bid] == self.ref[bid], (
+                f"block {bid}: counted {counts[bid]} != ref {self.ref[bid]}")
+            assert (self.ref[bid] == 0) == (bid in free), bid

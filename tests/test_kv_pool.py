@@ -1,0 +1,175 @@
+"""KVPool host-allocator contracts: exhaustion backoff, ref-count
+integrity across free/re-admit cycles, prefix sharing, copy-on-write,
+LRU eviction.  Pure host logic — no jax compilation, runs in ms."""
+
+import numpy as np
+import pytest
+
+from repro.serving.kv_pool import NULL_BLOCK, AdmitPlan, KVPool, blocks_for
+
+
+def _pool(num_blocks=9, block_size=4, slots=2, max_len=32, share=True):
+    return KVPool(num_blocks, block_size, slots=slots, max_len=max_len,
+                  share_prefixes=share)
+
+
+def _prompt(n, seed=0):
+    return list(np.random.default_rng(seed).integers(3, 100, n))
+
+
+def test_blocks_for():
+    assert blocks_for(0, 4) == 0
+    assert blocks_for(1, 4) == 1
+    assert blocks_for(4, 4) == 1
+    assert blocks_for(5, 4) == 2
+
+
+def test_admit_reserves_whole_request_span():
+    pool = _pool()
+    plan = pool.admit(0, _prompt(6), max_new_tokens=5)
+    assert isinstance(plan, AdmitPlan)
+    # 6 prompt + 5 decode tokens = 11 positions -> 3 blocks of 4
+    assert len(plan.blocks) == 3 and plan.shared_tokens == 0
+    assert NULL_BLOCK not in plan.blocks
+    assert pool.used_blocks == 3
+    pool.check()
+
+
+def test_exhaustion_is_clean_backoff_not_crash():
+    pool = _pool(num_blocks=7)          # 6 usable blocks
+    p0 = pool.admit(0, _prompt(10, 0), max_new_tokens=6)   # 4 blocks
+    assert p0 is not None
+    # needs 3 blocks, only 2 free -> clean None, nothing leaked
+    assert pool.admit(1, _prompt(9, 1), max_new_tokens=3) is None
+    assert pool.stats()["backoffs"] == 1
+    pool.check()                         # failed admission left no refs
+    pool.release_slot(0)
+    assert pool.admit(1, _prompt(9, 1), max_new_tokens=3) is not None
+    pool.check()
+
+
+def test_refcounts_survive_free_readmit_cycles():
+    pool = _pool(num_blocks=16, slots=2)
+    prompt = _prompt(11, seed=3)        # 2 full blocks + 3-token tail
+    hits = 0
+    for cycle in range(3):
+        plan0 = pool.admit(0, prompt, max_new_tokens=2)
+        if cycle == 0:
+            assert plan0.shared_tokens == 0          # nothing cached yet
+            # prefill completes -> engine content-addresses the blocks
+            pool.register_prefix(prompt, list(pool.tables[0, :2]))
+        else:
+            assert plan0.shared_tokens == 8          # both full blocks hit
+            hits += 8
+        plan1 = pool.admit(1, prompt, max_new_tokens=2)
+        assert plan1.shared_tokens == 8              # shares slot 0's blocks
+        hits += 8
+        assert plan1.shared_blocks == tuple(
+            pool.tables[0, :2])                      # same physical blocks
+        for b in plan1.shared_blocks:
+            assert pool.ref[b] >= 2
+        pool.check()
+        pool.release_slot(0, prompt=prompt)
+        pool.check()                                 # slot 1 + cache refs live
+        pool.release_slot(1, prompt=prompt)
+        pool.check()
+        # cached blocks persist with exactly the map's pinning ref
+        assert pool.stats()["cached_prefix_blocks"] == 2
+    assert pool.stats()["shared_token_hits"] == hits
+
+
+def test_prefix_match_stops_at_divergence():
+    pool = _pool(num_blocks=16)
+    a = _prompt(12, seed=4)
+    pool.admit(0, a, max_new_tokens=1)
+    pool.release_slot(0, prompt=a)
+    b = list(a)
+    b[5] = (b[5] + 1) % 97 + 3          # diverge inside block 1
+    plan = pool.admit(1, b, max_new_tokens=1)
+    assert plan.shared_tokens == 4      # only block 0 survives the chain hash
+    pool.check()
+
+
+def test_never_shares_the_last_token():
+    """The final prompt token's logits seed decode, so at least the tail
+    must be prefilled: a block-aligned prompt shares all but its last
+    block."""
+    pool = _pool(num_blocks=16)
+    prompt = _prompt(8, seed=5)         # exactly 2 blocks
+    pool.admit(0, prompt, max_new_tokens=2)
+    pool.release_slot(0, prompt=prompt)
+    plan = pool.admit(1, prompt, max_new_tokens=2)
+    assert plan.shared_tokens == 4      # block 1 (holding token 8) re-prefills
+    pool.check()
+
+
+def test_cow_fork_never_mutates_shared_block():
+    pool = _pool(num_blocks=16, slots=2)
+    prompt = _prompt(11, seed=6)
+    pool.admit(0, prompt, max_new_tokens=2)
+    pool.release_slot(0, prompt=prompt)
+    plan = pool.admit(1, prompt, max_new_tokens=2)
+    shared = plan.shared_blocks[0]
+    assert pool.ref[shared] >= 2        # slot 1 + prefix cache
+    pool.ensure_writable(1, 0, 3)       # span covering the shared block
+    assert pool.cow_forks == 1
+    copies = pool.take_copies()
+    assert len(copies) == 1 and copies[0][0] == shared
+    fresh = copies[0][1]
+    assert pool.tables[1, 0] == fresh != shared
+    assert pool.ref[shared] == 1        # cache still pins the original
+    assert pool.ref[fresh] == 1
+    pool.check()
+    # exclusively-owned blocks are left alone
+    pool.ensure_writable(1, 0, 3)
+    assert pool.cow_forks == 1 and not pool.pending_copies
+
+
+def test_lru_eviction_frees_cached_blocks_under_pressure():
+    pool = _pool(num_blocks=9, slots=2)          # 8 usable
+    a, b = _prompt(8, seed=7), _prompt(8, seed=8)
+    pool.admit(0, a, max_new_tokens=1)
+    pool.release_slot(0, prompt=a)               # caches a's first block
+    pool.admit(0, b, max_new_tokens=1)
+    pool.release_slot(0, prompt=b)               # caches b's first block
+    assert pool.stats()["cached_prefix_blocks"] == 2
+    # a reservation needing almost everything evicts the LRU entries
+    plan = pool.admit(1, _prompt(25, seed=9), max_new_tokens=6)
+    assert plan is not None
+    assert pool.stats()["evictions"] >= 1
+    pool.check()
+
+
+def test_sharing_disabled_pool_never_matches():
+    pool = _pool(share=False)
+    prompt = _prompt(10, seed=10)
+    pool.admit(0, prompt, max_new_tokens=1)
+    pool.release_slot(0, prompt=prompt)
+    plan = pool.admit(1, prompt, max_new_tokens=1)
+    assert plan.shared_tokens == 0
+    assert pool.stats()["cached_prefix_blocks"] == 0
+
+
+def test_reserve_rejects_oversize_and_recovers():
+    pool = _pool(num_blocks=5)          # 4 usable
+    assert pool.reserve(5) is None
+    got = pool.reserve(4)
+    assert got is not None and len(got) == 4
+    for b in got:
+        pool._release_one(b)
+    pool.check()
+
+
+def test_null_block_is_pinned():
+    pool = _pool()
+    with pytest.raises(ValueError):
+        KVPool(1, 4, slots=1, max_len=8)
+    assert pool.ref[NULL_BLOCK] == 1
+    seen = set()
+    while True:                         # drain: NULL is never handed out
+        bid = pool._alloc_one()
+        if bid is None:
+            break
+        assert bid != NULL_BLOCK
+        seen.add(bid)
+    assert len(seen) == pool.num_blocks - 1

@@ -174,3 +174,106 @@ def test_live_cells_count():
     assert ("qwen1_5_4b", "long_500k") not in cells
     assert ("hubert_xlarge", "decode_32k") not in cells
     assert ("hubert_xlarge", "prefill_32k") in cells
+
+
+@pytest.mark.parametrize("arch", ["mamba2_2_7b", "zamba2_7b"])
+def test_ragged_prefill_exact_for_hybrids(arch):
+    """The masked-update scan: right-padded (ragged) prefill must leave
+    recurrent + conv state EXACTLY as an unpadded prefill would — same
+    last-real-token logits and identical decode continuation."""
+    cfg = CONFIGS.get(arch).scaled_down()
+    params = N.init(cfg, jax.random.PRNGKey(3))
+    rng = np.random.default_rng(3)
+    lens = [12, 7]
+    S = 16
+    toks = np.zeros((2, S), np.int32)
+    rows = [rng.integers(3, cfg.vocab, n).astype(np.int32) for n in lens]
+    for b, row in enumerate(rows):
+        toks[b, :lens[b]] = row
+
+    def set_pos(c, vals):
+        """Engine contract: after ragged prefill the slot cursors are the
+        TRUE lengths (insert_slot_caches does this per slot)."""
+        def fn(path, leaf):
+            if "pos" in tuple(getattr(p, "key", None) for p in path):
+                return jnp.broadcast_to(
+                    jnp.asarray(vals, leaf.dtype), leaf.shape)
+            return leaf
+        return jax.tree_util.tree_map_with_path(fn, c)
+
+    caches = N.init_caches(cfg, 2, 32, jnp.float32)
+    caches = N.expand_cache_pos(caches, 2)
+    last = jnp.asarray([n - 1 for n in lens], jnp.int32)
+    lg, caches = N.prefill_ragged(params, cfg, {"tokens": jnp.asarray(toks)},
+                                  caches, last)
+    caches = set_pos(caches, lens)
+
+    # per-row unpadded reference: prefill alone, then 3 teacher-forced
+    # decode steps must match the ragged batch step-for-step.
+    steps = 3
+    cont = [rng.integers(3, cfg.vocab, steps).astype(np.int32)
+            for _ in lens]
+    ragged_logits = [np.asarray(lg)]
+    pos = np.asarray(lens, np.int32)
+    for t in range(steps):
+        step_toks = jnp.asarray(np.stack([c[t] for c in cont])[:, None])
+        lg, caches = N.decode_step(params, cfg, step_toks, caches,
+                                   jnp.asarray(pos))
+        pos += 1
+        ragged_logits.append(np.asarray(lg))
+
+    for b, row in enumerate(rows):
+        ref_caches = N.init_caches(cfg, 1, 32, jnp.float32)
+        ref_caches = N.expand_cache_pos(ref_caches, 1)
+        rlg, ref_caches = N.prefill_ragged(
+            params, cfg, {"tokens": jnp.asarray(row)[None]}, ref_caches,
+            jnp.asarray([len(row) - 1], jnp.int32))
+        ref_caches = set_pos(ref_caches, [len(row)])
+        np.testing.assert_allclose(ragged_logits[0][b], np.asarray(rlg)[0],
+                                   rtol=1e-4, atol=1e-4)
+        rpos = np.asarray([len(row)], np.int32)
+        for t in range(steps):
+            rlg, ref_caches = N.decode_step(
+                params, cfg, jnp.asarray([[cont[b][t]]]), ref_caches,
+                jnp.asarray(rpos))
+            rpos += 1
+            np.testing.assert_allclose(ragged_logits[t + 1][b],
+                                       np.asarray(rlg)[0],
+                                       rtol=1e-4, atol=1e-4)
+
+
+def test_causal_conv_seq_len_state_matches_unpadded(rng):
+    """Length-aware conv state: ragged rows carry the K-1 inputs ending at
+    their true last token, not at the pad tail."""
+    K, C = 4, 6
+    w = jnp.asarray(rng.standard_normal((K, C)), jnp.float32)
+    b = jnp.zeros((C,), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((2, 10, C)), jnp.float32)
+    lens = jnp.asarray([10, 6], jnp.int32)
+    _, st = SSM._causal_conv(x, w, b, seq_len=lens)
+    # row 1 reference: unpadded prefix only
+    _, ref1 = SSM._causal_conv(x[1:, :6], w, b)
+    _, full = SSM._causal_conv(x, w, b)
+    np.testing.assert_allclose(np.asarray(st[0]), np.asarray(full[0]))
+    np.testing.assert_allclose(np.asarray(st[1]), np.asarray(ref1[0]))
+
+
+def test_ssd_chunked_accepts_non_multiple_lengths(rng):
+    """ssd_chunked pads its scan tail internally (dt=0 no-ops), so any S
+    works and the final state equals the truncated-exact computation —
+    the contract the always-ragged serving prefill relies on for hybrid
+    archs (terminal buckets need not be chunk multiples)."""
+    B, S, H, P, G, Nst, chunk = 2, 50, 4, 8, 1, 16, 16   # 50 % 16 != 0
+    x = jnp.asarray(rng.standard_normal((B, S, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (B, S, H)), jnp.float32)
+    A = -jnp.asarray(rng.uniform(0.5, 2.0, (H,)), jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((B, S, G, Nst)), jnp.float32)
+    Cm = jnp.asarray(rng.standard_normal((B, S, G, Nst)), jnp.float32)
+    y, h = SSM.ssd_chunked(x, dt, A, Bm, Cm, chunk)
+    assert y.shape == (B, S, H, P)
+    # reference: chunk == S divides trivially (single chunk)
+    y_ref, h_ref = SSM.ssd_chunked(x, dt, A, Bm, Cm, S)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                               rtol=1e-4, atol=1e-4)

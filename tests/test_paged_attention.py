@@ -1,0 +1,150 @@
+"""Paged-attention contracts: the Pallas paged-decode kernel against its
+gather-fallback oracle, paged write/gather against the dense cache layout,
+COW block copies, and the gather-GEMM schedule registration."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.scheduler import ScheduleCache
+from repro.kernels import paged_attention as PA
+from repro.models import attention as A
+
+RNG = np.random.default_rng(0)
+
+
+def _rand(*shape):
+    return jnp.asarray(RNG.standard_normal(shape), jnp.float32)
+
+
+def _pool_setup(B=3, KV=2, G=4, hd=32, nb=12, bs=8, nbs=6,
+                lens=(5, 23, 48)):
+    q = _rand(B, KV, G, hd)
+    k = _rand(nb, bs, KV, hd)
+    v = _rand(nb, bs, KV, hd)
+    bt = jnp.asarray(RNG.integers(1, nb, (B, nbs)), jnp.int32)
+    return q, k, v, bt, jnp.asarray(lens, jnp.int32)
+
+
+@pytest.mark.parametrize("window,cap", [(None, None), (7, None),
+                                        (None, 30.0), (9, 50.0)])
+def test_kernel_matches_gather_fallback(window, cap):
+    q, k, v, bt, lens = _pool_setup()
+    ref = PA.gather_fallback(q, k, v, bt, lens, scale=0.17,
+                             window=window, logit_cap=cap)
+    ker = PA.paged_decode_kernel(q, k, v, bt, lens, scale=0.17,
+                                 window=window, logit_cap=cap,
+                                 interpret=True)
+    np.testing.assert_allclose(np.asarray(ker), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_decode_attention_dispatch_off_tpu_is_fallback():
+    q, k, v, bt, lens = _pool_setup()
+    out = PA.decode_attention(q, k, v, bt, lens, scale=0.17)
+    ref = PA.gather_fallback(q, k, v, bt, lens, scale=0.17)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_paged_matches_dense_attention_over_valid_prefix():
+    """Scattering a sequence through a shuffled block table and attending
+    via the paged path must equal dense contiguous attention."""
+    B, T, KV, G, hd, bs = 2, 24, 2, 3, 16, 4
+    nbs = T // bs
+    kseq = _rand(B, T, KV, hd)
+    vseq = _rand(B, T, KV, hd)
+    q = _rand(B, KV, G, hd)
+    lens = jnp.asarray([T, T - 7], jnp.int32)
+
+    # build the pool by writing each row's sequence through its table
+    nb = 1 + B * nbs
+    perm = RNG.permutation(np.arange(1, nb)).reshape(B, nbs)
+    bt = jnp.asarray(perm, jnp.int32)
+    k_pool = jnp.zeros((nb, bs, KV, hd), jnp.float32)
+    v_pool = jnp.zeros((nb, bs, KV, hd), jnp.float32)
+    k_pool = A._paged_write(k_pool, kseq, jnp.zeros(B, jnp.int32), bt)
+    v_pool = A._paged_write(v_pool, vseq, jnp.zeros(B, jnp.int32), bt)
+
+    # gather roundtrip reproduces the contiguous layout
+    np.testing.assert_array_equal(
+        np.asarray(A._paged_gather(k_pool, bt)), np.asarray(kseq))
+
+    out = PA.gather_fallback(q, k_pool, v_pool, bt, lens, scale=hd**-0.5)
+    # dense reference: masked softmax over the contiguous sequence
+    s = jnp.einsum("bkgd,btkd->bkgt", q * hd**-0.5, kseq)
+    mask = jnp.arange(T)[None, None, None, :] < lens[:, None, None, None]
+    s = jnp.where(mask, s, -1e30)
+    ref = jnp.einsum("bkgt,btkd->bkgd", jax.nn.softmax(s, axis=-1), vseq)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+    ker = PA.paged_decode_kernel(q, k_pool, v_pool, bt, lens,
+                                 scale=hd**-0.5, interpret=True)
+    np.testing.assert_allclose(np.asarray(ker), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_paged_write_beyond_table_lands_in_trash_block():
+    """Positions past the table width clamp onto the NULL block — no
+    neighbouring block is ever corrupted (the engine's inactive-slot
+    writes rely on this)."""
+    bs, nbs = 4, 2
+    pool = jnp.zeros((4, bs, 1, 2), jnp.float32)
+    bt = jnp.asarray([[2, 3]], jnp.int32)
+    upd = jnp.ones((1, 1, 1, 2), jnp.float32)
+    out = A._paged_write(pool, upd, jnp.asarray([bs * nbs + 5]), bt)
+    assert float(jnp.sum(out[2])) == 0 and float(jnp.sum(out[3])) == 0
+    assert float(jnp.sum(out[0])) != 0       # trash block absorbed it
+
+
+def test_copy_paged_blocks_preserves_source():
+    from repro.models import network as N
+    from repro import configs as CONFIGS
+    cfg = CONFIGS.get("qwen2_0_5b").scaled_down()
+    NB = 6
+    caches = N.init_paged_caches(cfg, slots=2, num_blocks=NB, block_size=4)
+
+    def block_axis(leaf):
+        # pool leaves: (NB, bs, ...) or group-stacked (G, NB, bs, ...)
+        return 0 if leaf.shape[0] == NB else 1
+
+    # mark block 2 in every pool leaf, then fork it to block 5
+    def paint(path, leaf):
+        if leaf.ndim < 3:       # pos cursors
+            return leaf
+        ax = block_axis(leaf)
+        return jnp.moveaxis(
+            jnp.moveaxis(leaf, ax, 0).at[2].set(7.0), 0, ax)
+    caches = jax.tree_util.tree_map_with_path(paint, caches)
+    out = N.copy_paged_blocks(caches, jnp.asarray([2]), jnp.asarray([5]))
+
+    def check(path, leaf):
+        if leaf.ndim >= 3:
+            moved = np.moveaxis(np.asarray(leaf), block_axis(leaf), 0)
+            np.testing.assert_array_equal(moved[5], moved[2])  # copied
+            assert (moved[2] == 7.0).all()                     # src intact
+        return leaf
+    jax.tree_util.tree_map_with_path(check, out)
+
+
+def test_gather_gemm_resolution_and_application_split():
+    """resolve explores/memoizes WITHOUT touching the applied log; only
+    note_gather_applied (called by the engine after a real paged-decode
+    dispatch) records applications — the log is a record of dispatches,
+    not registrations."""
+    from repro import configs as CONFIGS
+    cfg = CONFIGS.get("qwen2_0_5b").scaled_down()
+    sc = ScheduleCache()
+    shapes = PA.gather_gemm_shapes(cfg, 16)
+    choices = PA.resolve_gather_gemms(sc, cfg, 16, "FP32")
+    assert len(choices) == len(shapes)
+    assert sc.stats()["misses"] == len(shapes)
+    assert sc.stats()["applied"] == 0               # resolution != application
+    PA.note_gather_applied(sc, cfg, 16, "FP32")
+    st = sc.stats()
+    assert st["applied"] == len(shapes)
+    assert st["misses"] == len(shapes)              # second pass all hits
+    applied = {k[:3] for k, _ in sc.applied}
+    assert all(tuple(s) in applied for s in shapes)

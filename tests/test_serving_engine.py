@@ -1,10 +1,12 @@
-"""Continuous-batching engine v2 + ScheduleCache contracts.
+"""Continuous-batching engine (paged v3 + dense v2) + ScheduleCache.
 
-Covers the PR's acceptance points: slot-level admission (a short request
+Covers the acceptance points: slot-level admission (a short request
 admitted mid-flight finishes before an earlier long one), schedule-cache
 hit/miss semantics, the cached choice demonstrably reaching the kernel
-dispatch, and engine-vs-reference logit/token equivalence on a tiny
-config."""
+dispatch, engine-vs-reference logit/token equivalence on a tiny config,
+and the paged KV pool (paged == dense token-for-token on shared-prefix
+traces, chunked prefill, clean exhaustion backoff, gather-GEMM shapes in
+the schedule application log)."""
 
 import dataclasses
 
@@ -248,3 +250,138 @@ def test_wave_engine_still_serves(tiny):
     results = eng.run([_req(i, 8, 3, cfg.vocab) for i in range(4)])
     assert sorted(r.rid for r in results) == [0, 1, 2, 3]
     assert all(len(r.tokens) == 3 for r in results)
+
+
+# ---------------------------------------------------------------------------
+# paged KV pool serving
+# ---------------------------------------------------------------------------
+
+def _shared_prefix_reqs(vocab, n=4, prefix_len=40, seed=99):
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(3, vocab, prefix_len).astype(np.int32)
+    reqs = []
+    for i in range(n):
+        tail = rng.integers(3, vocab, 4 + 3 * i).astype(np.int32)
+        reqs.append(Request(rid=i, prompt=np.concatenate([prefix, tail]),
+                            max_new_tokens=3 + i, eos=-1))
+    return reqs
+
+
+def test_paged_matches_dense_token_for_token(tiny):
+    """The acceptance gate: on a mixed-length trace with shared prefixes
+    (so prefix blocks are reused and their prefill skipped), the paged
+    engine's greedy output equals the dense engine's, with lower peak KV
+    and an internally-consistent pool."""
+    cfg, params = tiny
+    reqs = _shared_prefix_reqs(cfg.vocab)
+    dense = ContinuousEngine(cfg, params, slots=2, max_len=96, paged=False)
+    got_d = {r.rid: list(map(int, r.tokens)) for r in dense.run(reqs)}
+    paged = ContinuousEngine(cfg, params, slots=2, max_len=96, paged=True)
+    got_p = {r.rid: list(map(int, r.tokens)) for r in paged.run(reqs)}
+    assert got_p == got_d
+    assert paged.pool.stats()["shared_token_hits"] > 0   # blocks reused
+    assert paged.kv_bytes()["peak"] < dense.kv_bytes()["peak"]
+    paged.pool.check()
+
+
+def test_paged_chunked_prefill_interleaves_decode(tiny):
+    """A long prompt admitted while another request decodes must be split
+    into multiple chunk batches (decode-interleaved), and still match the
+    full-recompute reference."""
+    cfg, params = tiny
+    eng = ContinuousEngine(cfg, params, slots=2, max_len=160,
+                           prefill_chunk=32)
+    rng = np.random.default_rng(5)
+    short = Request(rid=0, prompt=rng.integers(3, cfg.vocab, 6
+                                               ).astype(np.int32),
+                    max_new_tokens=12, eos=-1)
+    long = Request(rid=1, prompt=rng.integers(3, cfg.vocab, 90
+                                              ).astype(np.int32),
+                   max_new_tokens=4, eos=-1)
+    results = {r.rid: r for r in eng.run([short, long])}
+    assert eng.chunk_steps >= 3          # 90 tokens / 32-chunk = 3 batches
+    for r in (short, long):
+        seq = list(np.asarray(r.prompt))
+        want = []
+        for _ in range(r.max_new_tokens):
+            logits, _ = N.forward(params, cfg,
+                                  {"tokens": jnp.asarray(seq)[None]})
+            nxt = int(jnp.argmax(logits[0, -1]))
+            want.append(nxt)
+            seq.append(nxt)
+        assert list(map(int, results[r.rid].tokens)) == want, r.rid
+
+
+def test_paged_pool_exhaustion_backs_off_cleanly(tiny):
+    """A pool sized for ONE full-window request serializes admissions via
+    backoff (requests stay queued, nothing crashes, everything serves)."""
+    cfg, params = tiny
+    per_slot = -(-96 // 16)
+    eng = ContinuousEngine(cfg, params, slots=2, max_len=96,
+                           kv_blocks=per_slot + 1, share_prefixes=False)
+    reqs = [_req(i, 70, 4, cfg.vocab) for i in range(3)]   # 5 blocks each
+    results = eng.run(reqs)
+    assert sorted(r.rid for r in results) == [0, 1, 2]
+    assert all(len(r.tokens) == 4 for r in results)
+    assert eng.pool.stats()["backoffs"] > 0
+    eng.pool.check()
+
+
+def test_paged_engine_rejects_unservable_pool():
+    cfg = CONFIGS.get("qwen2_0_5b").scaled_down()
+    with pytest.raises(ValueError, match="kv_blocks"):
+        ContinuousEngine(cfg, N.init(cfg, KEY), slots=1, max_len=96,
+                         kv_blocks=3)
+
+
+def test_paged_gather_gemms_reach_schedule_log(tiny):
+    cfg, params = tiny
+    from repro.kernels import paged_attention as PA
+    eng = ContinuousEngine(cfg, params, slots=2, max_len=96)
+    eng.run([_req(0, 8, 3, cfg.vocab)])
+    applied = {k[:3] for k, _ in eng.schedule.applied}
+    for shape in PA.gather_gemm_shapes(cfg, eng.pool.block_size):
+        assert tuple(shape) in applied, shape
+
+
+def test_paged_matches_dense_hybrid_arch():
+    """Hybrid (SSM) archs take a distinct paged path: per-slot conv/ssm
+    leaves gathered/scattered around each chunk batch, decode masking the
+    recurrent update of non-decoding rows (seq_len == 0), chunk tails
+    handled by ssd_chunked's internal dt=0 padding, prefix sharing
+    force-disabled.  Paged must still equal dense token-for-token."""
+    cfg = CONFIGS.get("zamba2_7b").scaled_down()
+    params = N.init(cfg, KEY)
+    reqs = _shared_prefix_reqs(cfg.vocab, n=3, prefix_len=40)
+    dense = ContinuousEngine(cfg, params, slots=2, max_len=96, paged=False)
+    got_d = {r.rid: list(map(int, r.tokens)) for r in dense.run(reqs)}
+    paged = ContinuousEngine(cfg, params, slots=2, max_len=96, paged=True)
+    got_p = {r.rid: list(map(int, r.tokens)) for r in paged.run(reqs)}
+    assert got_p == got_d
+    assert paged.pool.share_prefixes is False      # SSM state not shareable
+    assert paged.chunk_steps >= 2                  # chunked admission ran
+    paged.pool.check()
+
+
+def test_dense_hybrid_terminal_bucket_not_chunk_multiple():
+    """Regression: the dense (paged=False) always-ragged path must serve a
+    hybrid prompt whose terminal bucket is NOT a multiple of ssm.chunk
+    (the deleted right-aligned fallback used to re-quantize these;
+    ssd_chunked now pads its scan tail internally instead)."""
+    cfg = CONFIGS.get("mamba2_2_7b").scaled_down()   # ssm.chunk == 32
+    params = N.init(cfg, KEY)
+    eng = ContinuousEngine(cfg, params, slots=1, max_len=40, paged=False)
+    res = eng.run([_req(0, 36, 3, cfg.vocab, seed=11)])   # bucket 40 % 32
+    assert len(res) == 1 and len(res[0].tokens) == 3
+
+
+def test_paged_full_window_prompt(tiny):
+    """Full-window prompt on the paged path: exactly the prefill token,
+    like the dense engine (zero decode headroom)."""
+    cfg, params = tiny
+    eng = ContinuousEngine(cfg, params, slots=2, max_len=32)
+    r = _req(0, 32, 8, cfg.vocab, seed=7)
+    res = eng.run([r])[0]
+    assert len(res.tokens) == 1
+    ref, _ = N.forward(params, cfg, {"tokens": jnp.asarray(r.prompt)[None]})
+    assert int(res.tokens[0]) == int(jnp.argmax(ref[0, -1]))
