@@ -1,14 +1,20 @@
 #!/usr/bin/env bash
-# Fast pre-merge smoke: the tier-1 suite minus slow markers, the serving
-# benchmark in --dry mode (asserts dense-continuous beats wave, paged ==
-# dense token-for-token, paged peak KV below dense, decode gap bounded by
-# one chunk), then a paged-engine smoke: tiny config, 4 requests sharing a
-# prompt prefix — asserts block reuse actually happened.
+# Fast pre-merge smoke: the tier-1 suite minus slow markers, the kernel
+# sweep in --smoke mode (fused vs spill vs XLA at tiny shapes; gates "no
+# partial-plane allocation" + the fused traffic win and writes
+# experiments/bench/kernels_bench_smoke.json — the committed full-sweep
+# artifact is never clobbered), the serving benchmark in --dry
+# mode (asserts dense-continuous beats wave, paged == dense
+# token-for-token, scheduled-backend == XLA-backend token-for-token with a
+# 100% schedule-cache hit rate, paged peak KV below dense, decode gap
+# bounded by one chunk), then a paged-engine smoke: tiny config, 4
+# requests sharing a prompt prefix — asserts block reuse actually happened.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -x -q -m "not slow"
+python -m benchmarks.kernels_bench --smoke
 python -m benchmarks.serve_bench --dry
 
 python - << 'EOF'

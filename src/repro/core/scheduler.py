@@ -29,6 +29,7 @@ from repro.core.dataflow import (ArrayShape, CostReport, Dataflow, Direction,
                                  candidate_costs)
 from repro.core.pgemm import PGEMM
 from repro.core.precision import BY_NAME, Precision
+from repro.core.tiling import MXU_DIM
 
 MPRA_DIM = 8  # each lane carries one 8x8 MPRA (paper §4.1)
 
@@ -178,6 +179,21 @@ class ScheduleCache:
         name = precision if isinstance(precision, str) else precision.name
         return (int(M), int(N), int(K), name)
 
+    def realizable_k_folds(self, K: int) -> List[int]:
+        """The fold candidates the kernel can actually execute for this
+        contraction: fold bands must tile the K grid evenly, and the finest
+        TPU block granularity is ``tiling.MXU_DIM`` — so only divisors of
+        ``gk = ceil(K / MXU_DIM)`` survive (``kernels.mpgemm
+        .effective_fold`` degrades anything else).  ``kernels.ops.matmul``
+        falls back to a bk of the SAME granularity whenever the block
+        search would defeat a scheduled fold, so filtering here keeps
+        ``resolve`` from memoizing schedules whose fold silently
+        downgrades at dispatch."""
+        gk = max(1, -(-int(K) // MXU_DIM))
+        cands = self.k_folds or [1, 2, 4, 8]
+        folds = [f for f in cands if f <= gk and gk % f == 0]
+        return folds or [1]
+
     def resolve(self, M: int, N: int, K: int,
                 precision: "Precision | str") -> CachedChoice:
         key = self.key_of(M, N, K, precision)
@@ -190,7 +206,7 @@ class ScheduleCache:
         # duplicate exploration just recomputes the same deterministic entry.
         prec = BY_NAME[key[3]]
         op = PGEMM("serve", M=key[0], N=key[1], K=key[2], precision=prec)
-        choice = explore(op, self.config, self.k_folds)
+        choice = explore(op, self.config, self.realizable_k_folds(K))
         sched = choice.best.schedule
         entry = CachedChoice(dataflow=sched.dataflow, array=sched.array,
                              k_fold=sched.k_fold, direction=sched.direction,
@@ -209,7 +225,20 @@ class ScheduleCache:
 
     def note_applied(self, M: int, N: int, K: int,
                      precision: "Precision | str",
-                     choice: CachedChoice) -> None:
+                     choice: CachedChoice, *,
+                     effective_k_fold: Optional[int] = None,
+                     effective_dataflow: Optional[Dataflow] = None) -> None:
+        """Record one kernel application of ``choice``.  The applied log
+        stores what EXECUTED, not what was requested: callers pass
+        ``effective_k_fold`` when the kernel degraded the fold to fit the
+        K grid (``kernels.mpgemm.effective_fold``) and
+        ``effective_dataflow`` when the dispatch mapped the choice onto a
+        different pipeline (e.g. SIMD -> the MXU OS pipeline on TPU)."""
+        if effective_k_fold is not None and effective_k_fold != choice.k_fold:
+            choice = dataclasses.replace(choice, k_fold=effective_k_fold)
+        if (effective_dataflow is not None
+                and effective_dataflow is not choice.dataflow):
+            choice = dataclasses.replace(choice, dataflow=effective_dataflow)
         with self._lock:
             self.applied.append((self.key_of(M, N, K, precision), choice))
             self.applied_total += 1

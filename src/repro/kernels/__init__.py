@@ -9,9 +9,40 @@
                  (scalar-prefetched block tables, online softmax; pure-JAX
                  gather fallback off-TPU; gather-GEMM shapes registered
                  with the paper-§5 ScheduleCache)
-  ops          — public padded/jit'd wrappers; block shapes chosen by the
-                 GTA scheduling bridge (core.tiling)
+  ops          — public padded/jit'd wrappers + the GEMM execution layer;
+                 block shapes chosen by the GTA scheduling bridge
+                 (core.tiling)
   ref          — pure-jnp/numpy oracles for all of the above
+
+GEMM execution layer
+--------------------
+The §5 scheduling space (dataflow x precision x array resize) only pays off
+if the chosen schedule is what actually executes.  Two pieces make the
+scheduled path the fast path end to end:
+
+  * **Fused reduction** (``mpgemm``): WS/IS and the OS k-fold variants used
+    to materialize a ``(gk, M, N)`` fp32 partial-plane tensor in HBM and
+    reduce it with a separate ``jnp.sum``.  The default epilogue now
+    accumulates IN-KERNEL — revisit-safe output blocks (zero-init on first
+    visit, ``+=`` on revisit, ``arbitrary`` semantics on revisited grid
+    dims) for WS/IS, a VMEM-resident accumulator across fold bands for OS —
+    so no intermediate tensor exists and the only per-instance state is one
+    ``(bm, bn)`` fp32 block.  ``k_fold`` is a real fold-banded grid on all
+    three dataflows; unrealizable folds degrade via ``effective_fold`` and
+    the EFFECTIVE value is what ``ScheduleCache.note_applied`` logs.  The
+    legacy spill path survives as ``epilogue="spill"`` for benchmarking
+    (``benchmarks/kernels_bench`` gates fused on "no partial plane" and
+    compares traffic).
+
+  * **GemmBackend** (``ops``): the dispatcher that routes
+    ``models.layers.dense`` (float and QuantTensor) through the scheduled
+    kernels when ``ModelConfig.gemm_backend == "scheduled"``.  One backend
+    (and one ScheduleCache) per config; stacked ``(B, S, K)`` activations
+    collapse to a single GEMM; block configs memoize per static shape; the
+    serving engine pre-resolves its decode shapes so the steady-state hot
+    path is a pure cache-hit dispatch.  The default ``"xla"`` keeps
+    projections on XLA's native fusions (the right call off-TPU, where
+    Pallas runs in interpret mode).
 
 Kernels target TPU (BlockSpec VMEM tiling, MXU-aligned blocks) and are
 validated on CPU with interpret=True.

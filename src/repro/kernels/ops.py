@@ -1,15 +1,42 @@
-"""Public jit'd kernel API.
+"""Public jit'd kernel API + the GEMM execution layer.
 
 Pads arbitrary shapes to block multiples, picks block configs with the GTA
 scheduler bridge (core.tiling — the paper's Σ-squares priority over TPU
 block candidates), dispatches to the Pallas kernels, and runs interpret mode
 automatically off-TPU.  Everything the model/serving stack calls lives here.
+
+GEMM execution layer
+--------------------
+:class:`GemmBackend` is the dispatcher that routes MODEL projections
+(``models.layers.dense``, float and QuantTensor paths) through the
+scheduled Pallas kernels:
+
+  * one :class:`repro.core.scheduler.ScheduleCache` per backend — the first
+    sight of a (M, N, K, precision) GEMM runs the paper-§5 exploration, every
+    later dispatch (and every re-trace) is a dict hit;
+  * batched/stacked LHS support: a ``(B, S, K)`` activation collapses to one
+    ``(B*S, K)`` GEMM, so projections share one dispatch instead of
+    re-padding per row;
+  * block configs are memoized per static shape
+    (:func:`cached_block_config`), so the Σ-squares search runs once per
+    shape per process, not once per dispatch;
+  * the *effective* fold (``mpgemm.effective_fold`` — the kernel degrades
+    unrealizable fold requests) is what lands in the applied-schedule log;
+  * all dispatches use the FUSED reduction epilogue — no partial-plane
+    HBM tensor exists on any dataflow (``kernels.mpgemm``).
+
+``backend_for(cfg)`` memoizes one backend per model config so every engine,
+trace, and benchmark over the same config shares one schedule store
+(``ModelConfig.gemm_backend == "scheduled"`` opts a model in; the default
+``"xla"`` keeps projections on XLA's native fusions — the right call
+off-TPU, where Pallas runs in interpret mode).
 """
 
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -18,7 +45,7 @@ from repro.core.dataflow import Dataflow
 from repro.core.precision import (Precision, precision as precision_by_name,
                                   precision_for_dtype)
 from repro.core.scheduler import ScheduleCache
-from repro.core.tiling import BlockConfig, choose_block_config
+from repro.core.tiling import MXU_DIM, BlockConfig, choose_block_config
 from repro.kernels import accumulator
 from repro.kernels import limb_gemm as _lg
 from repro.kernels import mpgemm as _mp
@@ -39,11 +66,24 @@ def _pad2(x: jax.Array, m0: int, m1: int) -> jax.Array:
     return jnp.pad(x, pad)
 
 
+@functools.lru_cache(maxsize=4096)
+def cached_block_config(M: int, N: int, K: int, abytes: int, bbytes: int,
+                        obytes: int, limb_factor: int,
+                        allowed: Optional[Tuple[Dataflow, ...]]
+                        ) -> BlockConfig:
+    """Memoized :func:`repro.core.tiling.choose_block_config` on the static
+    (M, N, K, operand bytes, allowed-dataflow) key: hot-path ``matmul`` /
+    ``quant_matmul`` dispatches stop re-running the Σ-squares search in
+    Python per call — a shape's search runs once per process."""
+    return choose_block_config(M, N, K, abytes=abytes, bbytes=bbytes,
+                               obytes=obytes, limb_factor=limb_factor,
+                               allowed=allowed)
+
+
 def _auto_blocks(M: int, N: int, K: int, abytes: int, bbytes: int,
                  limb_factor: int = 1) -> BlockConfig:
-    return choose_block_config(M, N, K, abytes=abytes, bbytes=bbytes,
-                               obytes=4, limb_factor=limb_factor,
-                               allowed=(Dataflow.OS,))
+    return cached_block_config(M, N, K, abytes, bbytes, 4, limb_factor,
+                               (Dataflow.OS,))
 
 
 # ---------------------------------------------------------------------------
@@ -96,9 +136,12 @@ def limb_matmul_i32(a: jax.Array, b: jax.Array, **kw) -> jax.Array:
 def matmul(a: jax.Array, b: jax.Array, *, dataflow: Dataflow = Dataflow.OS,
            out_dtype=jnp.float32,
            blocks: Optional[Tuple[int, int, int]] = None,
+           k_fold: Optional[int] = None,
            schedule: Optional[ScheduleCache] = None,
+           epilogue: str = "fused",
            interpret: Optional[bool] = None) -> jax.Array:
-    """GEMM through the mpgemm kernel (pads to block multiples).
+    """GEMM through the mpgemm kernel (pads to block multiples; already
+    block-aligned shapes skip the pad/slice round-trip entirely).
 
     With ``schedule`` (a :class:`repro.core.scheduler.ScheduleCache`) the
     paper's §5 exploration picks the kernel schedule: the first call with a
@@ -106,13 +149,20 @@ def matmul(a: jax.Array, b: jax.Array, *, dataflow: Dataflow = Dataflow.OS,
     cache hit.  The cached dataflow overrides ``dataflow``, the cached
     ``k_fold`` reaches the Pallas dispatch, and the TPU block search is
     narrowed to the chosen stationarity.  Each application is recorded via
-    ``schedule.note_applied`` so callers can verify the choice landed.
+    ``schedule.note_applied`` with the EFFECTIVE fold/dataflow that
+    executed (fold requests degrade to divisors of the K grid; SIMD maps
+    onto the MXU OS pipeline), so callers can verify the choice landed.
+
+    ``k_fold`` forces a fold explicitly (overrides the cached choice);
+    ``epilogue`` selects the fused reduction (default) or the legacy
+    partial-plane spill baseline (benchmarks only).
     """
     interp = _interpret() if interpret is None else interpret
     M, K = a.shape
     _, N = b.shape
 
-    k_fold = 1
+    fold_req = k_fold
+    choice = None
     if schedule is not None:
         prec = precision_for_dtype(a.dtype)
         choice = schedule.resolve(M, N, K, prec)
@@ -120,21 +170,39 @@ def matmul(a: jax.Array, b: jax.Array, *, dataflow: Dataflow = Dataflow.OS,
         # pipeline (there is no separate vector GEMM unit to fall back to).
         dataflow = (Dataflow.OS if choice.dataflow is Dataflow.SIMD
                     else choice.dataflow)
-        k_fold = choice.k_fold
-        schedule.note_applied(M, N, K, prec, choice)
+        if fold_req is None:
+            fold_req = choice.k_fold
+    fold_req = 1 if fold_req is None else fold_req
 
     if blocks is None:
         eb = jnp.dtype(a.dtype).itemsize
         allowed = (dataflow,) if schedule is not None else None
-        cfg = choose_block_config(M, N, K, abytes=eb, bbytes=eb, obytes=4,
-                                  allowed=allowed)
+        cfg = cached_block_config(M, N, K, eb, eb, 4, 1, allowed)
         bm, bn, bk = cfg.bm, cfg.bn, cfg.bk
+        if fold_req > 1 and _mp.effective_fold(K, bk, fold_req) != fold_req:
+            # the block search favored a coarse bk whose K grid cannot
+            # host the scheduled fold; drop to the MXU granularity the
+            # scheduler's realizability filter assumed (the same MXU_DIM
+            # both sites share) so the memoized fold executes as modeled
+            # instead of silently degrading.
+            bk = MXU_DIM
     else:
         bm, bn, bk = blocks
+
     ap = _pad2(a, bm, bk)
     bp = _pad2(b, bk, bn)
+    ef = _mp.effective_fold(ap.shape[-1], bk, fold_req)
     out = _mp.mpgemm(ap, bp, dataflow=dataflow, bm=bm, bn=bn, bk=bk,
-                     k_fold=k_fold, out_dtype=out_dtype, interpret=interp)
+                     k_fold=ef, out_dtype=out_dtype, epilogue=epilogue,
+                     interpret=interp)
+    if schedule is not None:
+        # logged AFTER the dispatch so the applied log records only GEMMs
+        # that really executed (a raising dispatch must not leave a
+        # phantom application behind)
+        schedule.note_applied(M, N, K, prec, choice, effective_k_fold=ef,
+                              effective_dataflow=dataflow)
+    if out.shape == (M, N):        # aligned fast path: nothing to slice off
+        return out
     return out[:M, :N]
 
 
@@ -154,20 +222,101 @@ def quantize_weights(w: jax.Array) -> Tuple[jax.Array, jax.Array]:
 def quant_matmul(x: jax.Array, w_q: jax.Array, scale: jax.Array, *,
                  out_dtype=jnp.float32,
                  blocks: Optional[Tuple[int, int, int]] = None,
+                 schedule: Optional[ScheduleCache] = None,
                  interpret: Optional[bool] = None) -> jax.Array:
-    """x (M, K) @ dequant(w_q (K, N), scale (N,)) -> (M, N)."""
+    """x (M, K) @ dequant(w_q (K, N), scale (N,)) -> (M, N).
+
+    With ``schedule`` the shape is resolved through the paper-§5
+    exploration under INT8 (GTA's native PE width) and the application is
+    logged with the EFFECTIVE execution (the int8 kernel is an OS pipeline
+    with the per-channel dequant fused into the accumulator flush, so the
+    applied dataflow is OS and the fold is 1 regardless of the modeled
+    winner — the honest record of what ran)."""
     interp = _interpret() if interpret is None else interpret
     M, K = x.shape
     _, N = w_q.shape
+    if schedule is not None:
+        choice = schedule.resolve(M, N, K, "INT8")
+        schedule.note_applied(M, N, K, "INT8", choice, effective_k_fold=1,
+                              effective_dataflow=Dataflow.OS)
     if blocks is None:
         eb = jnp.dtype(x.dtype).itemsize
-        cfg = choose_block_config(M, N, K, abytes=eb, bbytes=1, obytes=4)
+        cfg = cached_block_config(M, N, K, eb, 1, 4, 1, None)
         bm, bn, bk = cfg.bm, cfg.bn, cfg.bk
     else:
         bm, bn, bk = blocks
     xp = _pad2(x, bm, bk)
     wp = _pad2(w_q, bk, bn)
-    sp = jnp.pad(scale, (0, (-N) % bn))
+    sp = scale if N % bn == 0 else jnp.pad(scale, (0, (-N) % bn))
     out = _qm.quant_matmul(xp, wp, sp, bm=bm, bn=bn, bk=bk,
                            out_dtype=out_dtype, interpret=interp)
+    if out.shape == (M, N):
+        return out
     return out[:M, :N]
+
+
+# ---------------------------------------------------------------------------
+# GemmBackend: the model-projection dispatcher (ScheduleCache -> kernels)
+# ---------------------------------------------------------------------------
+
+class GemmBackend:
+    """Routes model projections through the scheduled fused-reduction
+    kernels (see module docstring).  Stateless apart from its
+    :class:`ScheduleCache`; safe to close over in jitted functions — all
+    scheduling work happens at trace time against static shapes, so a
+    compiled serving step contains only the chosen Pallas dispatches."""
+
+    def __init__(self, schedule: Optional[ScheduleCache] = None,
+                 interpret: Optional[bool] = None):
+        self.schedule = schedule or ScheduleCache()
+        self.interpret = interpret
+
+    def matmul(self, x2: jax.Array, w: jax.Array,
+               out_dtype=jnp.float32) -> jax.Array:
+        """(M, K) @ (K, N) through the scheduled fused kernel."""
+        return matmul(x2, w, out_dtype=out_dtype, schedule=self.schedule,
+                      interpret=self.interpret)
+
+    def dense(self, x: jax.Array, w: Any,
+              b: Optional[jax.Array] = None) -> jax.Array:
+        """The scheduled analogue of ``models.layers.dense``: x (..., K)
+        against a float weight (K, N) or a QuantTensor.  Leading dims
+        collapse to ONE (B*S, K) GEMM (batched/stacked LHS — no per-row
+        re-padding); bias/dequant happen in the epilogue and the result
+        returns in x.dtype.
+
+        Numerics mirror the XLA path: the kernel accumulates fp32 and the
+        float path EMITS in the compute dtype (one rounding, same as
+        ``preferred_element_type=x.dtype`` — §Perf H1's bf16 collective
+        payload is preserved), the quant path emits fp32 pre-scale.  On
+        fp32 configs (the gated serving setup) both backends round
+        identically; bf16 block-accumulation order may still differ from
+        XLA's dot at the last bit, which is why serve_bench gates token
+        identity on the fp32 config."""
+        lead, K = x.shape[:-1], x.shape[-1]
+        x2 = x.reshape(-1, K)
+        if hasattr(w, "q") and hasattr(w, "scale"):     # QuantTensor
+            out2 = quant_matmul(x2, w.q, w.scale, out_dtype=jnp.float32,
+                                schedule=self.schedule,
+                                interpret=self.interpret)
+        else:
+            out2 = self.matmul(x2, w.astype(x.dtype), out_dtype=x.dtype)
+        if b is not None:
+            out2 = out2 + b.astype(jnp.float32)
+        return out2.astype(x.dtype).reshape(lead + (out2.shape[-1],))
+
+
+@functools.lru_cache(maxsize=64)
+def _backend_for_key(key: Any) -> GemmBackend:
+    return GemmBackend()
+
+
+def backend_for(cfg) -> Optional[GemmBackend]:
+    """The process-wide backend for a model config, or None when the config
+    keeps projections on XLA (``gemm_backend != "scheduled"``).  Memoized
+    by config equality so every engine/trace/benchmark over the same model
+    shares one ScheduleCache — offline exploration, online serving, and
+    reporting see a single schedule store."""
+    if getattr(cfg, "gemm_backend", "xla") != "scheduled":
+        return None
+    return _backend_for_key(cfg)

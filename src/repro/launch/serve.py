@@ -53,12 +53,22 @@ def main(argv=None):
                          "0 = offered all at once")
     ap.add_argument("--quant", action="store_true",
                     help="int8 GTA serving path (QuantTensor weights)")
+    ap.add_argument("--gemm-backend", choices=("xla", "scheduled"),
+                    default="xla",
+                    help="scheduled = route model projections through the "
+                         "fused-reduction scheduled Pallas GEMMs (the "
+                         "paper-§5 schedule cache picks dataflow/fold per "
+                         "shape); xla = native XLA dot fusions (default)")
     ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args(argv)
 
     cfg = CONFIGS.get(args.arch)
     if args.scaled_down:
         cfg = cfg.scaled_down()
+    if args.gemm_backend != "xla":
+        import dataclasses
+        cfg = dataclasses.replace(
+            cfg, gemm_backend=args.gemm_backend).validate()
     if cfg.is_encoder_only:
         raise SystemExit(f"{args.arch} is encoder-only: no decode serving")
 

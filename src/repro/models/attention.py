@@ -318,6 +318,7 @@ def gqa_attention(p: Dict, x: jax.Array, cfg: ModelConfig, *,
                   cache: Optional[Dict] = None,
                   block_table: Optional[jax.Array] = None,
                   pos_advance: Optional[jax.Array] = None,
+                  backend=None,
                   ) -> Tuple[jax.Array, Optional[Dict]]:
     """Full-sequence (cache=None) or cached (prefill/decode) GQA attention.
 
@@ -336,9 +337,9 @@ def gqa_attention(p: Dict, x: jax.Array, cfg: ModelConfig, *,
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     G = H // KV
 
-    q = _split_heads(dense(x, p["wq"], p.get("bq")), H, hd)
-    k = _split_heads(dense(x, p["wk"], p.get("bk")), KV, hd)
-    v = _split_heads(dense(x, p["wv"], p.get("bv")), KV, hd)
+    q = _split_heads(dense(x, p["wq"], p.get("bq"), backend=backend), H, hd)
+    k = _split_heads(dense(x, p["wk"], p.get("bk"), backend=backend), KV, hd)
+    v = _split_heads(dense(x, p["wv"], p.get("bv"), backend=backend), KV, hd)
 
     if cfg.rope_mode is not RopeMode.NONE:
         frac = 0.5 if cfg.rope_mode is RopeMode.HALF else 1.0
@@ -364,7 +365,7 @@ def gqa_attention(p: Dict, x: jax.Array, cfg: ModelConfig, *,
                 jnp.atleast_1d(kv_valid), scale=scale, window=window,
                 logit_cap=cfg.attn_logit_softcap)
             out = out.reshape(B, 1, H * hd)
-            return dense(out, p["wo"]), new_cache
+            return dense(out, p["wo"], backend=backend), new_cache
         k_att = _paged_gather(ck, block_table)
         v_att = _paged_gather(cv, block_table)
     elif cache is not None:
@@ -382,7 +383,7 @@ def gqa_attention(p: Dict, x: jax.Array, cfg: ModelConfig, *,
                  window=window, q_offset=pos_offset, kv_valid=kv_valid,
                  logit_cap=cfg.attn_logit_softcap, block=cfg.attn_block_kv)
     out = out.reshape(B, S, H * hd)
-    return dense(out, p["wo"]), new_cache
+    return dense(out, p["wo"], backend=backend), new_cache
 
 
 # ---------------------------------------------------------------------------
@@ -394,6 +395,7 @@ def mla_attention(p: Dict, x: jax.Array, cfg: ModelConfig, *,
                   cache: Optional[Dict] = None,
                   block_table: Optional[jax.Array] = None,
                   pos_advance: Optional[jax.Array] = None,
+                  backend=None,
                   ) -> Tuple[jax.Array, Optional[Dict]]:
     """Multi-head latent attention.  Cache stores only (c_kv, k_pe):
     kv_lora_rank + rope_head_dim floats per token (the paper-relevant
@@ -410,12 +412,13 @@ def mla_attention(p: Dict, x: jax.Array, cfg: ModelConfig, *,
     qk, rp, vd = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
 
     # --- queries (low-rank) ---
-    q_lat = rms_norm(dense(x, p["wq_a"]), p["q_norm"], cfg.norm_eps)
-    q = dense(q_lat, p["wq_b"]).reshape(B, S, H, qk + rp)
+    q_lat = rms_norm(dense(x, p["wq_a"], backend=backend), p["q_norm"],
+                     cfg.norm_eps)
+    q = dense(q_lat, p["wq_b"], backend=backend).reshape(B, S, H, qk + rp)
     q_nope, q_pe = q[..., :qk], q[..., qk:]
 
     # --- compressed kv ---
-    kv_a = dense(x, p["wkv_a"])                       # (B,S,rank+rp)
+    kv_a = dense(x, p["wkv_a"], backend=backend)      # (B,S,rank+rp)
     c_kv = rms_norm(kv_a[..., :m.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
     k_pe = kv_a[..., m.kv_lora_rank:]                 # (B,S,rp), shared head
 
@@ -470,12 +473,12 @@ def mla_attention(p: Dict, x: jax.Array, cfg: ModelConfig, *,
         out = jnp.einsum("bshr,rhv->bshv",
                          out_lat.reshape(B, 1, H, r), wv_b)
         out = out.reshape(B, 1, H * vd)
-        return dense(out, p["wo"]), new_cache
+        return dense(out, p["wo"], backend=backend), new_cache
 
     # decompress k, v per head from the latent (training/prefill: full seq)
     T = c_att.shape[1]
-    k_nope = dense(c_att, p["wk_b"]).reshape(B, T, H, qk)
-    vv = dense(c_att, p["wv_b"]).reshape(B, T, H, vd)
+    k_nope = dense(c_att, p["wk_b"], backend=backend).reshape(B, T, H, qk)
+    vv = dense(c_att, p["wv_b"], backend=backend).reshape(B, T, H, vd)
 
     # fold the shared k_pe in as extra head dims so one flash call suffices:
     # k_eff = [k_nope ; k_pe broadcast], q_eff = [q_nope ; q_pe]
@@ -491,7 +494,7 @@ def mla_attention(p: Dict, x: jax.Array, cfg: ModelConfig, *,
                  q_offset=pos_offset, kv_valid=kv_valid,
                  logit_cap=cfg.attn_logit_softcap, block=cfg.attn_block_kv)
     out = out.reshape(B, S, H * vd)
-    return dense(out, p["wo"]), new_cache
+    return dense(out, p["wo"], backend=backend), new_cache
 
 
 def make_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype

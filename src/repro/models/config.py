@@ -109,6 +109,13 @@ class ModelConfig:
     remat: bool = True                     # checkpoint each scanned group
     use_pallas: bool = False               # swap ops.* kernels in (TPU runs)
     quant_serving: bool = False            # int8 weights on the serve path
+    #: "xla" (default): projections lower to XLA's native dot fusions —
+    #: the right call off-TPU, where Pallas runs in interpret mode.
+    #: "scheduled": route every ``layers.dense`` (float + QuantTensor)
+    #: through the fused-reduction scheduled Pallas GEMMs
+    #: (``kernels.ops.GemmBackend``) — the paper-§5 schedule cache picks
+    #: dataflow/fold per projection shape.
+    gemm_backend: str = "xla"
 
     # --- derived -------------------------------------------------------------
     @property

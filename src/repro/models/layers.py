@@ -176,14 +176,23 @@ def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array,
     return jnp.concatenate([rot, xp], axis=-1) if rd < d else rot
 
 
-def dense(x: jax.Array, w, b: Optional[jax.Array] = None) -> jax.Array:
+def dense(x: jax.Array, w, b: Optional[jax.Array] = None, *,
+          backend=None) -> jax.Array:
     """x (..., K) @ w (K, N) in the compute dtype with fp32 accumulation.
 
     ``w`` may be a ``repro.quant.policy.QuantTensor`` (int8 + per-channel
     scale) — the GTA INT8 serving path — in which case the matmul runs on
     the int8 operand and dequantizes in the epilogue (exactly what
     kernels/quant_matmul does on TPU; here expressed in XLA so it lowers
-    everywhere)."""
+    everywhere).
+
+    ``backend`` (a ``repro.kernels.ops.GemmBackend``, threaded down from
+    ``ModelConfig.gemm_backend == "scheduled"``) reroutes the projection —
+    float and QuantTensor alike — through the fused-reduction scheduled
+    Pallas GEMMs: leading dims collapse to one (B*S, K) dispatch and the
+    paper-§5 schedule cache picks dataflow/fold per shape."""
+    if backend is not None:
+        return backend.dense(x, w, b)
     if hasattr(w, "q") and hasattr(w, "scale"):     # QuantTensor
         acc = jax.lax.dot_general(
             x, w.q.astype(x.dtype), (((x.ndim - 1,), (0,)), ((), ())),
@@ -223,10 +232,10 @@ def mlp_defs(d_model: int, d_ff: int, scale: float = 0.02) -> Dict:
     }
 
 
-def mlp_apply(p: Dict, x: jax.Array, act: str) -> jax.Array:
-    g = activation(dense(x, p["wi_gate"]), act)
-    u = dense(x, p["wi_up"])
-    return dense(g * u, p["wo"])
+def mlp_apply(p: Dict, x: jax.Array, act: str, *, backend=None) -> jax.Array:
+    g = activation(dense(x, p["wi_gate"], backend=backend), act)
+    u = dense(x, p["wi_up"], backend=backend)
+    return dense(g * u, p["wo"], backend=backend)
 
 
 # ---------------------------------------------------------------------------

@@ -49,7 +49,8 @@ def _capacity(n_tokens: int, m: MoEConfig) -> int:
 
 
 def _moe_compute(p: Dict, x: jax.Array, cfg: ModelConfig, *,
-                 constrain: bool = True) -> Tuple[jax.Array, jax.Array]:
+                 constrain: bool = True,
+                 backend=None) -> Tuple[jax.Array, jax.Array]:
     """Dispatch + expert GEMMs + combine on whatever token set ``x``
     carries (global under GSPMD, shard-local under shard_map)."""
     m: MoEConfig = cfg.moe
@@ -64,8 +65,8 @@ def _moe_compute(p: Dict, x: jax.Array, cfg: ModelConfig, *,
     xf = sa(x.reshape(T, D), "b.")
 
     # --- routing -------------------------------------------------------------
-    logits = dense(xf, p["router"]).astype(jnp.float32)     # (T, E)
-    probs = jax.nn.softmax(logits, axis=-1)
+    logits = dense(xf, p["router"], backend=backend).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                  # logits: (T, E)
     gate_vals, expert_ids = jax.lax.top_k(probs, K)          # (T, K)
     gate_vals = gate_vals / jnp.maximum(
         jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
@@ -116,15 +117,15 @@ def _moe_compute(p: Dict, x: jax.Array, cfg: ModelConfig, *,
     # --- shared experts --------------------------------------------------------
     if "shared" in p:
         sp = p["shared"]
-        sg = activation(dense(xf, sp["wi_gate"]), cfg.act)
-        su = dense(xf, sp["wi_up"])
-        out = out + dense(sg * su, sp["wo"])
+        sg = activation(dense(xf, sp["wi_gate"], backend=backend), cfg.act)
+        su = dense(xf, sp["wi_up"], backend=backend)
+        out = out + dense(sg * su, sp["wo"], backend=backend)
 
     return out.reshape(B, S, D).astype(x.dtype), aux
 
 
-def moe_apply(p: Dict, x: jax.Array, cfg: ModelConfig,
-              ) -> Tuple[jax.Array, jax.Array]:
+def moe_apply(p: Dict, x: jax.Array, cfg: ModelConfig, *,
+              backend=None) -> Tuple[jax.Array, jax.Array]:
     """x (B, S, D) -> (out (B, S, D), aux_loss scalar fp32).
 
     §Perf H3: under a distributed activation policy the whole MoE layer runs
@@ -147,8 +148,11 @@ def moe_apply(p: Dict, x: jax.Array, cfg: ModelConfig,
         mp = sizes["model"]
         if (dp_total > 1 and B % dp_total == 0
                 and cfg.moe.n_experts % mp == 0):
+            # the manual-collective path stays on XLA dots: Pallas
+            # dispatches inside shard_map would shard the GEMM grid, which
+            # the scheduled backend does not model yet (see ROADMAP).
             return _moe_shardmap(p, x, cfg, mesh, dp, mp)
-    return _moe_compute(p, x, cfg)
+    return _moe_compute(p, x, cfg, backend=backend)
 
 
 def _moe_shardmap(p: Dict, x: jax.Array, cfg: ModelConfig, mesh, dp,

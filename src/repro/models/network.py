@@ -24,6 +24,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops as OPS
 from repro.models import attention as A
 from repro.models import moe as M
 from repro.models import ssm as S
@@ -98,6 +99,16 @@ def init(cfg: ModelConfig, key: jax.Array) -> PyTree:
     return init_params(param_defs(cfg), key, jnp.dtype(cfg.param_dtype))
 
 
+def gemm_backend(cfg: ModelConfig):
+    """The projection backend for this config: a shared
+    ``kernels.ops.GemmBackend`` when ``cfg.gemm_backend == "scheduled"``
+    (every dense in the interior then dispatches through the fused
+    scheduled Pallas GEMMs and one paper-§5 ScheduleCache), else None
+    (XLA's native dot fusions).  Resolved at trace time — compiled
+    programs embed the chosen kernels, not the lookup."""
+    return OPS.backend_for(cfg)
+
+
 def param_logical_axes(cfg: ModelConfig) -> PyTree:
     return logical_axes(param_defs(cfg))
 
@@ -109,7 +120,7 @@ def param_logical_axes(cfg: ModelConfig) -> PyTree:
 def _apply_block(cfg: ModelConfig, kind: BlockKind, p: Dict, x: jax.Array, *,
                  pos_offset, cache: Optional[Dict], shared: Optional[Dict],
                  dense_ff: bool = False, block_table=None, pos_advance=None,
-                 seq_lens=None
+                 seq_lens=None, backend=None
                  ) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
     """Returns (x, new_cache, aux_loss).
 
@@ -123,7 +134,7 @@ def _apply_block(cfg: ModelConfig, kind: BlockKind, p: Dict, x: jax.Array, *,
     if kind is BlockKind.MAMBA2:
         h = rms_norm(x, p["ln1"], eps)
         out, new_cache = S.mamba2_block(p["mamba"], h, cfg, state=cache,
-                                        seq_len=seq_lens)
+                                        seq_len=seq_lens, backend=backend)
         return x + out, new_cache, aux
 
     if kind is BlockKind.SHARED_ATTN:
@@ -132,7 +143,8 @@ def _apply_block(cfg: ModelConfig, kind: BlockKind, p: Dict, x: jax.Array, *,
                                          kind=BlockKind.ATTN,
                                          pos_offset=pos_offset, cache=cache,
                                          block_table=block_table,
-                                         pos_advance=pos_advance)
+                                         pos_advance=pos_advance,
+                                         backend=backend)
         return x + out, new_cache, aux
 
     # ATTN / ATTN_LOCAL
@@ -141,28 +153,31 @@ def _apply_block(cfg: ModelConfig, kind: BlockKind, p: Dict, x: jax.Array, *,
         out, new_cache = A.mla_attention(p["attn"], h, cfg,
                                          pos_offset=pos_offset, cache=cache,
                                          block_table=block_table,
-                                         pos_advance=pos_advance)
+                                         pos_advance=pos_advance,
+                                         backend=backend)
     else:
         out, new_cache = A.gqa_attention(p["attn"], h, cfg, kind=kind,
                                          pos_offset=pos_offset, cache=cache,
                                          block_table=block_table,
-                                         pos_advance=pos_advance)
+                                         pos_advance=pos_advance,
+                                         backend=backend)
     if cfg.post_norms:
         out = rms_norm(out, p["post_ln1"], eps)
     x = x + out
 
     h = rms_norm(x, p["ln2"], eps)
     if "moe" in p and not dense_ff:
-        out, aux = M.moe_apply(p["moe"], h, cfg)
+        out, aux = M.moe_apply(p["moe"], h, cfg, backend=backend)
     else:
-        out = mlp_apply(p["mlp"], h, cfg.act)
+        out = mlp_apply(p["mlp"], h, cfg.act, backend=backend)
     if cfg.post_norms:
         out = rms_norm(out, p["post_ln2"], eps)
     return x + out, new_cache, aux
 
 
 def _group_fn(cfg: ModelConfig, shared_stack, pos_offset, block_table,
-              pos_advance, seq_lens, carry, scanned, *, with_cache: bool):
+              pos_advance, seq_lens, backend, carry, scanned, *,
+              with_cache: bool):
     """One scanned repeat of the pattern.  carry = (x, aux).
     ``shared_stack`` (zamba2's alternating shared-attention weight sets),
     ``pos_offset`` and the paged-serving operands (``block_table``,
@@ -185,7 +200,8 @@ def _group_fn(cfg: ModelConfig, shared_stack, pos_offset, block_table,
         x, nc, a = _apply_block(cfg, kind, gparams[i], x,
                                 pos_offset=pos_offset, cache=gcache[i],
                                 shared=shared_set, block_table=block_table,
-                                pos_advance=pos_advance, seq_lens=seq_lens)
+                                pos_advance=pos_advance, seq_lens=seq_lens,
+                                backend=backend)
         x = shard_act(x, "b..")
         aux = aux + a
         if with_cache:
@@ -203,13 +219,15 @@ def _run_blocks(params: PyTree, cfg: ModelConfig, x: jax.Array, *,
     aux = jnp.zeros((), jnp.float32)
     with_cache = caches is not None
     new_caches: Dict[str, Any] = {}
+    backend = gemm_backend(cfg)
 
     if "first_block" in params:
         c = caches["first"] if with_cache else None
         x, nc, a = _apply_block(cfg, BlockKind.ATTN, params["first_block"], x,
                                 pos_offset=pos_offset, cache=c, shared=None,
                                 dense_ff=True, block_table=block_table,
-                                pos_advance=pos_advance, seq_lens=seq_lens)
+                                pos_advance=pos_advance, seq_lens=seq_lens,
+                                backend=backend)
         aux += a
         if with_cache:
             new_caches["first"] = nc
@@ -218,7 +236,7 @@ def _run_blocks(params: PyTree, cfg: ModelConfig, x: jax.Array, *,
     gidx = jnp.arange(n_groups, dtype=jnp.int32)
     body = functools.partial(_group_fn, cfg, params.get("shared_attn"),
                              pos_offset, block_table, pos_advance, seq_lens,
-                             with_cache=with_cache)
+                             backend, with_cache=with_cache)
     if cfg.remat:
         body = jax.checkpoint(body)
     if with_cache:
@@ -237,7 +255,7 @@ def _run_blocks(params: PyTree, cfg: ModelConfig, x: jax.Array, *,
                                     pos_offset=pos_offset, cache=c,
                                     shared=None, block_table=block_table,
                                     pos_advance=pos_advance,
-                                    seq_lens=seq_lens)
+                                    seq_lens=seq_lens, backend=backend)
             aux += a
             tail_caches.append(nc)
         if with_cache:
@@ -253,9 +271,11 @@ def _run_blocks(params: PyTree, cfg: ModelConfig, x: jax.Array, *,
 def _embed_inputs(params: PyTree, cfg: ModelConfig, batch: Dict
                   ) -> jax.Array:
     dt = jnp.dtype(cfg.compute_dtype)
+    backend = gemm_backend(cfg)
     if cfg.frontend == "frames":
         x = batch["frames"].astype(dt)
-        return dense(x, params["frame_proj"]["w"], params["frame_proj"]["b"])
+        return dense(x, params["frame_proj"]["w"], params["frame_proj"]["b"],
+                     backend=backend)
     tok = jnp.take(params["embed"]["table"].astype(dt), batch["tokens"],
                    axis=0)
     if cfg.scale_embeddings:
@@ -264,7 +284,7 @@ def _embed_inputs(params: PyTree, cfg: ModelConfig, batch: Dict
         # prefill/train: prefix the (stub) patch embeddings; decode steps
         # carry tokens only — the image already lives in the KV cache.
         pe = dense(batch["patches"].astype(dt), params["vision_proj"]["w"],
-                   params["vision_proj"]["b"])
+                   params["vision_proj"]["b"], backend=backend)
         tok = jnp.concatenate([pe, tok], axis=1)
     return shard_act(tok, "b..")
 

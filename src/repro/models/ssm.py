@@ -194,7 +194,8 @@ def ssd_step(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
 
 def mamba2_block(p: Dict, x: jax.Array, cfg: ModelConfig, *,
                  state: Optional[Dict] = None,
-                 seq_len: Optional[jax.Array] = None
+                 seq_len: Optional[jax.Array] = None,
+                 backend=None
                  ) -> Tuple[jax.Array, Optional[Dict]]:
     """Full Mamba2 block.  state (decode): {"conv": (B,K-1,conv_dim),
     "ssm": (B,H,P,N)}; None for training/prefill-from-scratch.
@@ -212,7 +213,7 @@ def mamba2_block(p: Dict, x: jax.Array, cfg: ModelConfig, *,
     B, S, _ = x.shape
     P = s.head_dim
 
-    zxbcdt = dense(x, p["in_proj"])
+    zxbcdt = dense(x, p["in_proj"], backend=backend)
     z, xi, Bc, Cc, dt = _split_proj(cfg, zxbcdt)
 
     conv_in = jnp.concatenate([xi, Bc, Cc], axis=-1)
@@ -254,7 +255,7 @@ def mamba2_block(p: Dict, x: jax.Array, cfg: ModelConfig, *,
     y = y.reshape(B, S, d_inner).astype(x.dtype)
 
     y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
-    out = dense(y, p["out_proj"])
+    out = dense(y, p["out_proj"], backend=backend)
     new_state = None
     if state is not None:
         new_state = {"conv": new_conv.astype(state["conv"].dtype),

@@ -49,6 +49,13 @@ path is a dict hit.  The same cache object plugs into
 ``kernels.ops.matmul(..., schedule=...)``, which applies the memoized
 choice to the Pallas dispatch, so offline exploration and online serving
 share one schedule store (``engine.schedule.stats()`` reports hit rates).
+Steady-state shapes (decode at M = slots, the chunk batch, the paged
+gather GEMMs) are pre-resolved at engine construction.  With
+``cfg.gemm_backend == "scheduled"`` the engine adopts the per-config
+``GemmBackend``'s cache, so the model-interior projections that dispatch
+through the fused scheduled Pallas kernels and the engine's own
+registrations share one store — serve_bench gates a 100% hit rate after
+warmup on that path.
 
 ``WaveEngine`` keeps the seed behavior (whole wave prefilled together,
 drained together) as the benchmark baseline.
@@ -210,7 +217,24 @@ class ContinuousEngine:
         self.slots = slots
         self.max_len = max_len
         self.key = jax.random.PRNGKey(seed)
-        self.schedule = schedule_cache or ScheduleCache()
+        # scheduled-backend configs: the engine and the model interior
+        # share ONE schedule store (the per-config GemmBackend's cache), so
+        # the stats/applied log cover the projections that actually
+        # dispatch through the scheduled kernels — and a restarted engine
+        # over the same config inherits a warm cache.
+        backend = N.gemm_backend(cfg)
+        if backend is not None:
+            if schedule_cache is not None and \
+                    schedule_cache is not backend.schedule:
+                raise ValueError(
+                    "gemm_backend='scheduled' configs dispatch the model "
+                    "interior through the per-config GemmBackend's "
+                    "ScheduleCache; passing a different schedule_cache "
+                    "would split the store (engine stats would not cover "
+                    "the projections that actually execute)")
+            self.schedule = backend.schedule
+        else:
+            self.schedule = schedule_cache or ScheduleCache()
         self.paged = paged
         self._prec = precision_for_dtype(cfg.compute_dtype,
                                          default="FP32").name
@@ -290,6 +314,17 @@ class ContinuousEngine:
             collections.deque(maxlen=65536))
         self.chunk_durations: "collections.deque[float]" = (
             collections.deque(maxlen=65536))
+
+        # Pre-resolve the steady-state serving shapes (decode step with
+        # M = active slots, the prefill-chunk batch, and the paged-decode
+        # gather GEMMs) so the hot path never explores: every per-step
+        # ``resolve`` — and every trace of the scheduled backend at these
+        # shapes — is a pure cache-hit dispatch from the first request on.
+        self._register_gemms(self.slots, self.slots)
+        if self.paged:
+            self._register_gemms(self.slots * self.prefill_chunk, self.slots)
+            for M, Nn, K in PA.gather_gemm_shapes(cfg, block_size):
+                self.schedule.resolve(M, Nn, K, self._prec)
 
     # -- async request/result API -------------------------------------------
 
