@@ -14,9 +14,24 @@ through three engines with identical params/sampling:
               Pallas GEMMs (kernels.ops.GemmBackend), sharing ONE
               paper-§5 ScheduleCache with the engine
 
+A second OVERLOAD trace exercises the scheduling-policy subsystem
+(``serving.policy``): two long-decode hogs seize the slots, an oversized
+reservation blocks the queue head, and short TTFT-SLO chat turns pile up
+behind it, all against a deliberately tight block pool.  Three paged
+engines serve it with ``audit=True`` (``pool.check()`` after EVERY step):
+
+  policy_fifo         arrival order — head-of-line blocking on display
+  policy_best_fit     block-aware admission (prefix-credited best fit,
+                      age-capped starvation bound)
+  policy_slo_preempt  SLO-aware admission + preempt-by-eviction (victims
+                      re-queued with produced tokens, resumed via
+                      prefix-cache skip-prefill)
+
 Reported per engine: tokens/sec, decode steps, request-latency p50/p99,
 TTFT p50/p95, peak KV bytes.  Paged adds the pool telemetry (blocks,
-shared-prefix token hits, peak block usage) and the decode-gap bound.
+shared-prefix token hits, peak block usage) and the decode-gap bound;
+policy rows add mean pool utilization, p95 TTFT in engine dispatches
+(the deterministic TTFT proxy), and preemption counts.
 
 Acceptance gates (exit nonzero on violation):
   * continuous (dense) needs FEWER decode steps than wave for the same
@@ -36,7 +51,15 @@ Acceptance gates (exit nonzero on violation):
     not change what the model says);
   * paged_sched's schedule cache-hit rate over the timed run is 100%:
     steady-state shapes are pre-resolved at engine construction and the
-    warmup run traces everything, so the measured run never explores.
+    warmup run traces everything, so the measured run never explores;
+  * policy gates (overload trace): best_fit's mean pool utilization
+    beats fifo's; slo_preempt's p95 TTFT (in dispatches) beats fifo's
+    with at least one preemption actually exercised; BOTH policies
+    produce token-identical greedy output to fifo (admission order and
+    preempt/resume must never change what the model says — the fifo row
+    doubles as the never-preempted reference); fifo records backoffs
+    (the trace genuinely overloads the pool); pool.check() holds after
+    every step on all three engines (audit mode).
 
     PYTHONPATH=src python -m benchmarks.serve_bench          # full trace
     PYTHONPATH=src python -m benchmarks.serve_bench --dry    # CI smoke
@@ -89,6 +112,42 @@ def _trace(n_requests: int, slots: int, vocab: int, seed: int = 0):
 
 def _pct(xs, q):
     return round(float(np.percentile(xs, q)) * 1e3, 1)
+
+
+#: overload-trace pool size: tight enough that one oversized reservation
+#: cannot fit behind the hogs (head-of-line pressure), roomy enough that
+#: every request is individually servable (max_len 160 / block 16 -> 10
+#: blocks per slot, +1 for the reserved null block, +... = 20 total).
+OVERLOAD_KV_BLOCKS = 20
+
+
+def _overload_trace(n_requests: int, vocab: int, seed: int = 1):
+    """Head-of-line overload: two long-decode hogs seize the slots, one
+    oversized reservation (100-token prompt) blocks the FIFO head
+    against the tight pool, and short chat turns with (effectively
+    immediate) TTFT SLOs queue behind it, plus a few mediums so best-fit
+    has real packing choices.  eos=-1 decodes every budget fully, so all
+    engines do identical token work."""
+    from repro.serving.engine import Request
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n_requests):
+        if i < 2:                       # hogs: long decode, no SLO
+            plen = int(rng.integers(56, 72))
+            mnew, slo = int(rng.integers(40, 48)), None
+        elif i == 2:                    # oversized head-of-line blocker
+            plen, mnew, slo = 100, 30, None
+        elif i % 3 == 0:                # mediums
+            plen = int(rng.integers(24, 40))
+            mnew, slo = int(rng.integers(6, 10)), 1e-4
+        else:                           # short SLO'd chat turns
+            plen = int(rng.integers(4, 12))
+            mnew, slo = int(rng.integers(2, 6)), 1e-4
+        reqs.append(Request(rid=i,
+                            prompt=rng.integers(3, vocab, plen
+                                                ).astype(np.int32),
+                            max_new_tokens=mnew, eos=-1, ttft_slo=slo))
+    return reqs
 
 
 def _summarize(name: str, results, wall: float, eng) -> Dict:
@@ -227,6 +286,82 @@ def run_bench(n_requests: int, slots: int, max_len: int,
         failures.append(f"gather GEMM shapes missing from schedule "
                         f"application log: {missing}")
     by["paged"]["gather_gemms_in_applied_log"] = not missing
+
+    prows, pfail = run_policy_bench(cfg, params, slots, n_requests=12)
+    return rows + prows, failures + pfail
+
+
+#: the overload trace's sizes (100-token blocker, hog decode budgets) and
+#: OVERLOAD_KV_BLOCKS are calibrated against THIS window — the policy
+#: rows always run at it, independent of the CLI --max-len, so the
+#: head-of-line pressure the gates rely on cannot be configured away.
+POLICY_MAX_LEN = 160
+
+
+def run_policy_bench(cfg, params, slots: int, n_requests: int):
+    """Overload trace through the three scheduling policies (module
+    docstring).  All engines run with ``audit=True`` — ``pool.check()``
+    after every step is part of the acceptance surface."""
+    import dataclasses
+
+    from repro.serving.engine import ContinuousEngine
+
+    reqs = _overload_trace(n_requests, cfg.vocab)
+
+    def make(policy):
+        return ContinuousEngine(cfg, params, slots=slots,
+                                max_len=POLICY_MAX_LEN,
+                                kv_blocks=OVERLOAD_KV_BLOCKS,
+                                policy=policy, audit=True)
+
+    # one warmup run covers all three policies: the jitted programs are
+    # cached per (cfg, max_len) and the policy-pool cache shapes differ
+    # from the main rows' default kv_blocks, so trace once here.
+    make("fifo").run([dataclasses.replace(r) for r in reqs])
+
+    rows, tokens, failures = [], {}, []
+    for pol in ("fifo", "best_fit", "slo_preempt"):
+        eng = make(pol)
+        t0 = time.perf_counter()
+        res = eng.run([dataclasses.replace(r) for r in reqs])
+        row = _summarize(f"policy_{pol}", res, time.perf_counter() - t0, eng)
+        tsteps = [r.ttft_steps for r in res]
+        row["pool"] = eng.pool.stats()
+        row["avg_pool_util"] = round(eng.avg_pool_util(), 4)
+        row["p95_ttft_steps"] = float(np.percentile(tsteps, 95))
+        row["preemptions"] = eng.preemptions
+        row["resumed_requests"] = sum(1 for r in res if r.preemptions > 0)
+        rows.append(row)
+        tokens[pol] = {r.rid: list(map(int, r.tokens)) for r in res}
+
+    by = {r["engine"]: r for r in rows}
+    if by["policy_fifo"]["pool"]["backoffs"] == 0:
+        failures.append("overload trace recorded no fifo backoffs — the "
+                        "pool is not actually under pressure, the policy "
+                        "comparison is vacuous")
+    if (by["policy_best_fit"]["avg_pool_util"]
+            <= by["policy_fifo"]["avg_pool_util"]):
+        failures.append(
+            f"best_fit pool utilization "
+            f"{by['policy_best_fit']['avg_pool_util']} not above fifo "
+            f"{by['policy_fifo']['avg_pool_util']} — block-aware "
+            f"admission failed to out-pack arrival order")
+    if (by["policy_slo_preempt"]["p95_ttft_steps"]
+            >= by["policy_fifo"]["p95_ttft_steps"]):
+        failures.append(
+            f"slo_preempt p95 TTFT {by['policy_slo_preempt']['p95_ttft_steps']}"
+            f" dispatches not below fifo "
+            f"{by['policy_fifo']['p95_ttft_steps']} — preempt-by-eviction "
+            f"failed to rescue the SLO'd requests")
+    if by["policy_slo_preempt"]["preemptions"] == 0:
+        failures.append("slo_preempt never preempted on the overload "
+                        "trace — the eviction path went unexercised")
+    if tokens["best_fit"] != tokens["fifo"]:
+        failures.append("best_fit output != fifo output (greedy) — "
+                        "admission order changed the tokens")
+    if tokens["slo_preempt"] != tokens["fifo"]:
+        failures.append("slo_preempt output != fifo output (greedy) — "
+                        "preempt/resume is not token-identical")
     return rows, failures
 
 
@@ -252,12 +387,12 @@ def main(argv=None) -> int:
     for r in rows:
         print(f"serve_{r['engine']},{r['wall_s']*1e6:.0f},"
               f"{r['tok_per_s']}tok/s")
-    hdr = (f"{'engine':<8}{'tok/s':>8}{'steps':>7}{'p50ms':>8}{'p99ms':>8}"
+    hdr = (f"{'engine':<19}{'tok/s':>8}{'steps':>7}{'p50ms':>8}{'p99ms':>8}"
            f"{'ttft50':>8}{'ttft95':>8}{'gapms':>7}{'peakKV':>9}")
     print(hdr)
     for r in rows:
         peak = r.get("kv_peak_bytes", 0)
-        print(f"{r['engine']:<8}{r['tok_per_s']:>8.1f}"
+        print(f"{r['engine']:<19}{r['tok_per_s']:>8.1f}"
               f"{r['decode_steps']:>7d}{r['p50_latency_ms']:>8.1f}"
               f"{r['p99_latency_ms']:>8.1f}{r['p50_ttft_ms']:>8.1f}"
               f"{r['p95_ttft_ms']:>8.1f}{r['max_decode_gap_ms']:>7.1f}"
@@ -282,6 +417,14 @@ def main(argv=None) -> int:
           f"run ({ss['schedule_hits_run']} hits / "
           f"{ss['schedule_misses_run']} misses), "
           f"{ss['schedule_cache']['applied']} applications logged")
+    pf, pb, ps = (by["policy_fifo"], by["policy_best_fit"],
+                  by["policy_slo_preempt"])
+    print(f"policy overload: pool util fifo {pf['avg_pool_util']:.2f} -> "
+          f"best_fit {pb['avg_pool_util']:.2f}; p95 TTFT fifo "
+          f"{pf['p95_ttft_steps']:.0f} -> slo_preempt "
+          f"{ps['p95_ttft_steps']:.0f} dispatches "
+          f"({ps['preemptions']} preemptions, "
+          f"{ps['resumed_requests']} requests resumed token-identically)")
     for msg in failures:
         print(f"FAIL: {msg}")
     return 1 if failures else 0

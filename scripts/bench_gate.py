@@ -1,0 +1,134 @@
+#!/usr/bin/env python
+"""Bench-regression gate: fresh smoke artifacts vs committed trajectory.
+
+CI runs ``scripts/smoke.sh``, which rewrites
+``experiments/bench/kernels_bench_smoke.json`` and
+``experiments/bench/serve_bench_smoke.json``; this script diffs those
+fresh files against the versions committed at HEAD and fails on any
+regression beyond a stated tolerance.  Only DETERMINISTIC metrics are
+gated (modeled traffic ratios, decode-step counts, block telemetry, the
+dispatch-count TTFT proxy) — wall-clock numbers are never compared, CI
+hosts are too noisy.
+
+A metric missing from the BASELINE is skipped with a note (first PR
+that introduces it has nothing to diff against); a metric missing from
+the FRESH output fails (a gated signal silently disappeared).
+
+    git show HEAD:experiments/bench/kernels_bench_smoke.json > /tmp/bk.json
+    git show HEAD:experiments/bench/serve_bench_smoke.json  > /tmp/bs.json
+    python scripts/bench_gate.py \
+        --baseline-kernels /tmp/bk.json \
+        --fresh-kernels experiments/bench/kernels_bench_smoke.json \
+        --baseline-serve /tmp/bs.json \
+        --fresh-serve experiments/bench/serve_bench_smoke.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+#: (file, dotted path, direction, relative tolerance).  Paths into the
+#: serve file address the row list as ``engine=<name>.<key>``.
+#: "higher" = higher is better: fresh >= baseline * (1 - tol).
+#: "lower"  = lower is better:  fresh <= baseline * (1 + tol).
+#: "true"   = boolean gate that must stay true.
+CHECKS = [
+    ("kernels", "summary.no_spill_gate", "true", 0.0),
+    ("kernels", "summary.geomean_traffic_ratio", "higher", 0.02),
+    ("kernels", "summary.min_out_traffic_ratio", "higher", 0.02),
+    ("serve", "engine=dense.decode_steps", "lower", 0.10),
+    ("serve", "engine=paged.decode_steps", "lower", 0.10),
+    ("serve", "engine=paged.kv_peak_bytes", "lower", 0.10),
+    ("serve", "engine=paged.pool.shared_token_hits", "higher", 0.10),
+    ("serve", "engine=policy_best_fit.avg_pool_util", "higher", 0.10),
+    ("serve", "engine=policy_slo_preempt.p95_ttft_steps", "lower", 0.15),
+]
+
+
+def lookup(doc, path):
+    """Walk ``a.b.c`` with ``engine=<name>`` row selection; KeyError on
+    a missing step."""
+    cur = doc
+    for part in path.split("."):
+        if part.startswith("engine="):
+            name = part.split("=", 1)[1]
+            rows = [r for r in cur if r.get("engine") == name]
+            if not rows:
+                raise KeyError(f"no row with engine={name}")
+            cur = rows[0]
+        else:
+            if not isinstance(cur, dict) or part not in cur:
+                raise KeyError(part)
+            cur = cur[part]
+    return cur
+
+
+def run_checks(docs):
+    failures, skipped = [], []
+    for which, path, direction, tol in CHECKS:
+        base_doc, fresh_doc = docs[which]
+        try:
+            fresh = lookup(fresh_doc, path)
+        except KeyError as e:
+            failures.append(f"{which}:{path}: missing from FRESH output "
+                            f"({e}) — a gated metric disappeared")
+            continue
+        try:
+            base = lookup(base_doc, path)
+        except KeyError:
+            skipped.append(f"{which}:{path}: not in committed baseline "
+                           f"yet, skipping (will be gated next PR)")
+            continue
+        if direction == "true":
+            if not (bool(base) and bool(fresh)):
+                failures.append(f"{which}:{path}: expected true, baseline="
+                                f"{base} fresh={fresh}")
+            continue
+        base, fresh = float(base), float(fresh)
+        if direction == "higher":
+            bound = base * (1.0 - tol)
+            ok = fresh >= bound
+            rel = "below" if not ok else ">="
+        else:
+            bound = base * (1.0 + tol)
+            ok = fresh <= bound
+            rel = "above" if not ok else "<="
+        if not ok:
+            failures.append(
+                f"{which}:{path}: fresh {fresh:g} {rel} tolerance bound "
+                f"{bound:g} (baseline {base:g}, tol {tol:.0%}) — "
+                f"{'modeled-traffic' if which == 'kernels' else 'serving'} "
+                f"regression")
+    return failures, skipped
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    for name in ("baseline-kernels", "fresh-kernels",
+                 "baseline-serve", "fresh-serve"):
+        ap.add_argument(f"--{name}", required=True)
+    args = ap.parse_args(argv)
+
+    def load(p):
+        with open(p) as f:
+            return json.load(f)
+
+    docs = {"kernels": (load(args.baseline_kernels),
+                        load(args.fresh_kernels)),
+            "serve": (load(args.baseline_serve), load(args.fresh_serve))}
+    failures, skipped = run_checks(docs)
+    for msg in skipped:
+        print(f"SKIP: {msg}")
+    for msg in failures:
+        print(f"FAIL: {msg}")
+    if not failures:
+        n = len(CHECKS) - len(skipped)
+        print(f"bench gate OK: {n} checks within tolerance "
+              f"({len(skipped)} skipped)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

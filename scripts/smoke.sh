@@ -7,8 +7,13 @@
 # mode (asserts dense-continuous beats wave, paged == dense
 # token-for-token, scheduled-backend == XLA-backend token-for-token with a
 # 100% schedule-cache hit rate, paged peak KV below dense, decode gap
-# bounded by one chunk), then a paged-engine smoke: tiny config, 4
-# requests sharing a prompt prefix — asserts block reuse actually happened.
+# bounded by one chunk, and the scheduling-policy gates on the overload
+# trace: best_fit pool-utilization and slo_preempt p95-TTFT wins over
+# fifo with token-identical output and a clean pool.check() every step),
+# then a paged-engine smoke: tiny config, 4 requests sharing a prompt
+# prefix — asserts block reuse actually happened.  CI diffs the smoke
+# JSON artifacts against the committed baselines afterwards
+# (scripts/bench_gate.py).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"

@@ -33,11 +33,9 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-import math
 from typing import Iterator, List, Optional
 
 from repro.core.pgemm import PGEMM
-from repro.core.precision import Precision
 
 
 class Dataflow(enum.Enum):

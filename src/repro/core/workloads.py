@@ -16,7 +16,7 @@ from typing import Dict, List, Sequence
 
 from repro.core.pgemm import (Operator, PGEMM, VectorOp, bignum_mult_as_pgemm,
                               conv2d_as_pgemm, linear_as_pgemm)
-from repro.core.precision import (BP16, FP16, FP32, FP64, INT8, INT16, INT32,
+from repro.core.precision import (BP16, FP32, FP64, INT8, INT16, INT32,
                                   INT64, Precision)
 
 

@@ -23,7 +23,6 @@ innermost ("arbitrary"); M, N parallel.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

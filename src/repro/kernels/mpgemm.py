@@ -51,7 +51,7 @@ is how the TPU adaptation keeps the paper's scheduling space meaningful.
 from __future__ import annotations
 
 import functools
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

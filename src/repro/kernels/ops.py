@@ -34,7 +34,6 @@ off-TPU, where Pallas runs in interpret mode).
 
 from __future__ import annotations
 
-import dataclasses
 import functools
 from typing import Any, Optional, Tuple
 
@@ -42,8 +41,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.dataflow import Dataflow
-from repro.core.precision import (Precision, precision as precision_by_name,
-                                  precision_for_dtype)
+from repro.core.precision import precision_for_dtype
 from repro.core.scheduler import ScheduleCache
 from repro.core.tiling import MXU_DIM, BlockConfig, choose_block_config
 from repro.kernels import accumulator

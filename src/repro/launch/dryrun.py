@@ -24,7 +24,6 @@ Results: experiments/dryrun/<arch>__<shape>__<mesh>.json
 import argparse
 import functools
 import json
-import re
 import subprocess
 import sys
 import time

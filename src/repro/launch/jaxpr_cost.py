@@ -20,11 +20,10 @@ records the convention.
 
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Tuple
+from typing import Callable, Dict
 
 import jax
 import numpy as np
-from jax import core as jcore
 
 _FUSABLE = {
     "add", "sub", "mul", "div", "max", "min", "exp", "log", "tanh",

@@ -12,7 +12,7 @@ exist) so examples/tests run the identical code path at toy scale.
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import numpy as np

@@ -7,6 +7,14 @@ arrival process (``--arrival-ms`` mean inter-arrival gap) so the
 continuous engine actually interleaves admissions with in-flight decode —
 the scenario the slot-level design exists for.
 
+Admission scheduling is pluggable (``--policy``): ``fifo`` keeps arrival
+order; ``best_fit`` admits the queued request whose block reservation
+(prefix-credited) best fits the pool's free list; ``slo_preempt`` adds
+TTFT deadlines (``--ttft-slo``, seconds) with preempt-by-eviction — an
+at-risk request may evict the decoding victim with the most reclaimable
+blocks, which resumes later via prefix-cache skip-prefill with its
+produced tokens intact.
+
 CLI (CPU demo sizes):
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
         --scaled-down --requests 8 --max-new 16 --quant
@@ -27,6 +35,7 @@ from repro.models import network as N
 from repro.quant.policy import quantize_params
 from repro.serving.engine import (ContinuousEngine, Request, Result,
                                   WaveEngine)
+from repro.serving.policy import POLICY_NAMES
 
 
 def _percentile(xs: List[float], q: float) -> float:
@@ -51,6 +60,17 @@ def main(argv=None):
     ap.add_argument("--arrival-ms", type=float, default=0.0,
                     help="mean inter-arrival gap (continuous engine only); "
                          "0 = offered all at once")
+    ap.add_argument("--policy", choices=POLICY_NAMES, default="fifo",
+                    help="admission scheduling policy (paged engine): "
+                         "fifo = arrival order; best_fit = admit the "
+                         "request whose block reservation best fits the "
+                         "free list (age-capped against starvation); "
+                         "slo_preempt = FIFO + TTFT-deadline jump-the-"
+                         "queue with preempt-by-eviction (victims resume "
+                         "via prefix-cache skip-prefill)")
+    ap.add_argument("--ttft-slo", type=float, default=0.0,
+                    help="per-request TTFT deadline in seconds (0 = no "
+                         "SLO); only the slo_preempt policy acts on it")
     ap.add_argument("--quant", action="store_true",
                     help="int8 GTA serving path (QuantTensor weights)")
     ap.add_argument("--gemm-backend", choices=("xla", "scheduled"),
@@ -92,7 +112,8 @@ def main(argv=None):
                             args.prompt_len + 1)))).astype(np.int32),
                     max_new_tokens=max(1, int(rng.integers(
                         args.max_new // 2, args.max_new + 1))),
-                    temperature=args.temperature)
+                    temperature=args.temperature,
+                    ttft_slo=args.ttft_slo or None)
             for i in range(args.requests)]
 
     t0 = time.perf_counter()
@@ -102,7 +123,8 @@ def main(argv=None):
     else:
         eng = ContinuousEngine(cfg, params, slots=args.slots,
                                max_len=args.max_len,
-                               paged=args.engine != "dense")
+                               paged=args.engine != "dense",
+                               policy=args.policy)
         eng.start()
         for r in reqs:
             if args.arrival_ms > 0:
@@ -129,6 +151,9 @@ def main(argv=None):
                   f"{ps['num_blocks']} blocks, "
                   f"{ps['shared_token_hits']} shared-prefix token hits, "
                   f"peak KV {kv['peak']} / allocated {kv['allocated']} B")
+            print(f"[serve] policy {eng.policy.name}: mean pool util "
+                  f"{eng.avg_pool_util():.2f}, {eng.preemptions} "
+                  f"preemptions, {ps['backoffs']} admission backoffs")
     for r in sorted(results, key=lambda r: r.rid)[:4]:
         print(f"  rid={r.rid} new_tokens={len(r.tokens)} "
               f"prefill={r.prefill_s*1e3:.0f}ms decode={r.decode_s*1e3:.0f}ms")

@@ -18,11 +18,10 @@ import argparse
 import dataclasses
 import functools
 import time
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import configs as CONFIGS
 from repro.checkpoint.manager import CheckpointManager

@@ -16,7 +16,6 @@ attention calls; decode then routes through the paged-decode kernel).
 
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax

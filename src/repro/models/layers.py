@@ -19,8 +19,7 @@ Logical axis vocabulary (mapped to mesh axes by launch.sharding):
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -13,7 +13,7 @@ utilization-vs-drop tradeoff and the aux loss keeps the router balanced.
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -160,7 +160,6 @@ def _moe_shardmap(p: Dict, x: jax.Array, cfg: ModelConfig, mesh, dp,
     from jax.sharding import PartitionSpec as P
     m: MoEConfig = cfg.moe
     dspec = dp if len(dp) > 1 else dp[0]
-    dax = dp if len(dp) > 1 else dp[0]
     E, K = m.n_experts, m.top_k
 
     def local_fn(p_l, x_l):

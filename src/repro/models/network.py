@@ -28,7 +28,7 @@ from repro.kernels import ops as OPS
 from repro.models import attention as A
 from repro.models import moe as M
 from repro.models import ssm as S
-from repro.models.config import BlockKind, ModelConfig, RopeMode
+from repro.models.config import BlockKind, ModelConfig
 from repro.models.layers import (ParamDef, dense, embed_defs, head_apply,
                                  init_params, logical_axes, mlp_apply,
                                  mlp_defs, rms_norm, shard_act,

@@ -11,7 +11,7 @@ Weight decay is masked off norms/biases/scalars (ndim < 2), the usual rule.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

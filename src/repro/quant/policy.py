@@ -16,7 +16,7 @@ scheduling of precision and dataflow" (Fig. 9) as a library call.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+from typing import Any, Optional, Sequence
 
 import jax
 import jax.numpy as jnp

@@ -16,7 +16,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import time
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 
 class HostState(enum.Enum):

@@ -4,11 +4,18 @@
 ``kv_pool.KVPool`` allocator + chunked prefill + batched admission +
 prefix sharing; ``paged=False`` restores the dense stripes);
 ``WaveEngine`` keeps the seed wave-drain behavior for benchmarks.
+Admission order and preempt-by-eviction are pluggable
+(``policy.SchedulerPolicy``: ``fifo`` / ``best_fit`` / ``slo_preempt``).
 ``ScheduleCache`` (re-exported from ``core.scheduler``) is the shape ->
 (dataflow, arrangement, k_fold) memo the engine hot path — including the
 paged-decode gather GEMMs — and ``kernels.ops.matmul`` consult.
 """
-from repro.core.scheduler import ScheduleCache  # noqa
-from repro.serving.engine import (ContinuousEngine, Engine, Request,  # noqa
-                                  Result, WaveEngine)
-from repro.serving.kv_pool import AdmitPlan, KVPool, blocks_for  # noqa
+from repro.core.scheduler import ScheduleCache  # noqa: F401
+from repro.serving.engine import (ContinuousEngine, Engine,  # noqa: F401
+                                  Request, Result, WaveEngine)
+from repro.serving.kv_pool import (AdmitPlan, KVPool,  # noqa: F401
+                                   ProbeReport, blocks_for)
+from repro.serving.policy import (BestFitPolicy, FifoPolicy,  # noqa: F401
+                                  PendingView, SchedulerPolicy,
+                                  SloPreemptPolicy, SlotView, make_policy,
+                                  register_policy)

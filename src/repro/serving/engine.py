@@ -39,6 +39,37 @@ barrier.  The design:
     thread; results arrive on a thread-safe queue (``get_result``).
     ``run(requests)`` is the synchronous convenience wrapper.
 
+**Scheduling policies (paged path).**  Admission order and preemption
+are delegated to a pluggable :class:`repro.serving.policy.SchedulerPolicy`
+(``policy="fifo" | "best_fit" | "slo_preempt"``, or any instance):
+
+  * Every step the engine snapshots the pending queue (with a
+    side-effect-free ``KVPool.probe`` reservation probe per request) and
+    asks the policy which request to admit into the next free slot —
+    ``fifo`` keeps arrival order, ``best_fit`` picks the reservation
+    that best fits the current free list (prefix-credited,
+    starvation-bounded by an age cap).
+  * ``slo_preempt`` adds **preempt-by-eviction**: when a queued request
+    with a ``Request.ttft_slo`` deadline is at risk and cannot be
+    admitted, the policy names a decoding victim (most reclaimable
+    blocks, least progress).  ``_preempt`` registers the victim's FULL
+    sequence (prompt + produced tokens) in the prefix cache before
+    releasing the slot, so its resident KV survives as evictable cached
+    blocks; the victim re-queues carrying its produced tokens
+    (restart-safe ``_Pending`` state) and re-admission skip-prefills the
+    cached blocks — preempted work is not recomputed, and greedy output
+    is token-identical to a never-preempted run (KV written by prefill
+    equals KV written by decode position-for-position).  Preemption
+    advances the engine's sample-key stream differently, so only
+    temperature-0 output is reproducible across policies.
+  * Policies are decision functions over immutable views; all state
+    mutation stays in the engine, and ``pool.check()`` holds after every
+    step (``audit=True`` asserts it).  Telemetry: ``engine.preemptions``,
+    ``engine.avg_pool_util()`` (mean fraction of usable blocks in use,
+    sampled once per step), and per-result ``ttft_steps`` (engine
+    dispatches before the first token — the deterministic TTFT proxy
+    serve_bench gates on).
+
 **ScheduleCache contract.**  The engine owns a
 :class:`repro.core.scheduler.ScheduleCache` and, on every admission and
 decode-shape change, resolves the step's dominant p-GEMMs
@@ -68,7 +99,7 @@ import dataclasses
 import queue as _queue
 import threading
 import time
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -80,6 +111,8 @@ from repro.kernels import paged_attention as PA
 from repro.models import network as N
 from repro.models.config import BlockKind, ModelConfig
 from repro.serving.kv_pool import KVPool, blocks_for
+from repro.serving.policy import (PendingView, SchedulerPolicy, SlotView,
+                                  make_policy)
 
 PyTree = Any
 
@@ -163,6 +196,13 @@ class Request:
     max_new_tokens: int = 32
     temperature: float = 0.0    # 0 => greedy
     eos: int = 2
+    #: TTFT deadline in seconds (None = best effort).  Only the
+    #: ``slo_preempt`` policy acts on it — a request at risk of missing
+    #: its deadline may evict a decoding victim to get admitted.
+    ttft_slo: Optional[float] = None
+    #: policy hint: higher-priority requests admit first under
+    #: ``best_fit`` and are never preempted for a lower-priority one.
+    priority: int = 0
 
 
 @dataclasses.dataclass
@@ -173,6 +213,10 @@ class Result:
     decode_s: float
     latency_s: float = 0.0      # submit -> finish (continuous engine)
     ttft_s: float = 0.0         # submit -> first token
+    #: engine dispatches (decode + chunk batches) before the first
+    #: token — the deterministic TTFT proxy (wall-clock ttft_s is noisy)
+    ttft_steps: int = 0
+    preemptions: int = 0        # times this request was evicted mid-flight
 
 
 def _bucket_for(n: int, buckets: Sequence[int]) -> int:
@@ -180,6 +224,29 @@ def _bucket_for(n: int, buckets: Sequence[int]) -> int:
         if n <= b:
             return b
     return buckets[-1]
+
+
+@dataclasses.dataclass
+class _Pending:
+    """Restart-safe queue entry: everything needed to (re-)admit a
+    request, including the produced tokens of a preempted one — the
+    entry, not the slot, is the durable unit of scheduling state."""
+
+    req: Request
+    t_submit: float
+    #: prompt plus any tokens produced before a preemption — the
+    #: sequence a (re-)admission actually prefills (the resume tail's KV
+    #: usually skip-prefills via the prefix cache).
+    full_prompt: np.ndarray = None  # type: ignore[assignment]
+    resume_tokens: List[int] = dataclasses.field(default_factory=list)
+    t_first: float = 0.0            # preserved across preemptions
+    ttft_steps: int = -1            # -1 = first token not yet produced
+    preemptions: int = 0
+    prefill_s: float = 0.0          # prefill wall time from prior admissions
+
+    def __post_init__(self):
+        if self.full_prompt is None:
+            self.full_prompt = np.asarray(self.req.prompt, np.int32)
 
 
 @dataclasses.dataclass
@@ -197,6 +264,18 @@ class _Slot:
     phase: str = "decode"
     #: pending chunk token arrays (paged chunked prefill), consumed in order
     chunks: List[np.ndarray] = dataclasses.field(default_factory=list)
+    #: the admission prompt (original prompt + resume tokens) — what
+    #: prefix registration must content-address
+    full_prompt: np.ndarray = None  # type: ignore[assignment]
+    #: len(resume tokens): produced[:resume_len] predate this admission
+    resume_len: int = 0
+    preemptions: int = 0
+    ttft_steps: int = -1
+    prefill_s_prev: float = 0.0
+
+    def __post_init__(self):
+        if self.full_prompt is None:
+            self.full_prompt = np.asarray(self.req.prompt, np.int32)
 
 
 class ContinuousEngine:
@@ -209,10 +288,20 @@ class ContinuousEngine:
                  paged: bool = True, block_size: int = 16,
                  kv_blocks: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
-                 share_prefixes: bool = True):
+                 share_prefixes: bool = True,
+                 policy: Union[str, SchedulerPolicy] = "fifo",
+                 audit: bool = False):
         if cfg.is_encoder_only:
             raise ValueError(f"{cfg.name} is encoder-only: no decode serving")
         self.cfg = cfg
+        self.policy = (make_policy(policy) if isinstance(policy, str)
+                       else policy)
+        if self.policy.requires_pool and not paged:
+            raise ValueError(
+                f"policy {self.policy.name!r} schedules over KV-pool block "
+                f"reservations; the dense (paged=False) engine has no pool "
+                f"— use policy='fifo'")
+        self._audit = audit
         self.params = params
         self.slots = slots
         self.max_len = max_len
@@ -290,8 +379,7 @@ class ContinuousEngine:
         self._slots: List[Optional[_Slot]] = [None] * slots
         self._pos = np.zeros(slots, np.int32)   # mirror of cache pos leaves
 
-        self._pending: "collections.deque[Tuple[Request, float]]" = (
-            collections.deque())
+        self._pending: "collections.deque[_Pending]" = collections.deque()
         self._results: "_queue.Queue[Result]" = _queue.Queue()
         self._cv = threading.Condition()
         self._stop = False
@@ -300,6 +388,11 @@ class ContinuousEngine:
         self.steps = 0          # decode steps executed (benchmark metric)
         self.prefills = 0
         self.chunk_steps = 0    # prefill-chunk batches executed (paged)
+        self.preemptions = 0    # victim evictions (slo_preempt policy)
+        #: per-step pool-utilization samples (used/usable blocks) — the
+        #: block-aware admission win serve_bench gates on
+        self._util_sum = 0.0
+        self._util_steps = 0
         #: deterministic interleave bound: max chunk batches run between
         #: two decode steps while some slot was decoding.  The chunked-
         #: prefill construction guarantees <= 1 (one chunk batch per
@@ -338,7 +431,8 @@ class ContinuousEngine:
         if len(req.prompt) == 0:
             raise ValueError("empty prompt")
         with self._cv:
-            self._pending.append((req, time.perf_counter()))
+            self._pending.append(_Pending(req=req,
+                                          t_submit=time.perf_counter()))
             self._cv.notify()
 
     def get_result(self, timeout: Optional[float] = None) -> Result:
@@ -415,6 +509,41 @@ class ContinuousEngine:
         for M, Nn, K in shapes:
             self.schedule.resolve(M, Nn, K, prec)
 
+    # -- policy views ---------------------------------------------------------
+
+    def _pending_view(self, index: int, ent: _Pending, now: float,
+                      evictable_hint: Optional[int] = None) -> PendingView:
+        remaining = ent.req.max_new_tokens - len(ent.resume_tokens)
+        probe = (self.pool.probe([int(t) for t in ent.full_prompt],
+                                 remaining, evictable_hint=evictable_hint)
+                 if self.paged and self.policy.needs_probes else None)
+        return PendingView(index=index, rid=ent.req.rid,
+                           prompt_len=len(ent.full_prompt),
+                           new_tokens=remaining,
+                           priority=ent.req.priority,
+                           ttft_slo=ent.req.ttft_slo,
+                           waited_s=now - ent.t_submit,
+                           resumed=bool(ent.resume_tokens),
+                           preemptions=ent.preemptions, probe=probe)
+
+    def _slot_view(self, index: int) -> Optional[SlotView]:
+        st = self._slots[index]
+        if st is None:
+            return None
+        return SlotView(index=index, rid=st.req.rid, phase=st.phase,
+                        priority=st.req.priority, produced=len(st.produced),
+                        remaining=st.req.max_new_tokens - len(st.produced),
+                        reclaimable_blocks=(
+                            self.pool.reclaimable_blocks(index)
+                            if self.paged else 0),
+                        preemptions=st.preemptions,
+                        has_slo=st.req.ttft_slo is not None)
+
+    def avg_pool_util(self) -> float:
+        """Mean fraction of usable pool blocks in use, one sample per
+        engine step (0.0 on the dense path / before the first step)."""
+        return self._util_sum / max(self._util_steps, 1)
+
     # -- memory accounting ----------------------------------------------------
 
     def kv_bytes(self) -> Dict[str, int]:
@@ -437,10 +566,12 @@ class ContinuousEngine:
                 return i
         return None
 
-    def _admit_one(self, slot: int, req: Request, t_submit: float) -> None:
+    def _admit_one(self, slot: int, ent: _Pending) -> None:
         """Dense path: one-shot bucketed ragged prefill (batch=1).  The
         masked-update SSM scan makes this exact for hybrid archs too, so
         the old right-aligned fallback is gone."""
+        req = ent.req
+        assert not ent.resume_tokens, "dense path never preempts"
         plen = len(req.prompt)
         bucket = _bucket_for(plen, self.buckets)
         t0 = time.perf_counter()
@@ -460,8 +591,8 @@ class ContinuousEngine:
         tok0 = int(np.asarray(tok))
         t1 = time.perf_counter()
         st = _Slot(req=req, produced=[tok0], cur_tok=tok0,
-                   t_submit=t_submit, t_admit=t0, t_prefill_done=t1,
-                   t_first=t1)
+                   t_submit=ent.t_submit, t_admit=t0, t_prefill_done=t1,
+                   t_first=t1, ttft_steps=self.steps + self.chunk_steps)
         self._slots[slot] = st
         # pos0 == max_len means zero decode headroom: the next write would
         # clamp onto the last real token, so finish with the prefill token.
@@ -470,13 +601,17 @@ class ContinuousEngine:
                 or pos0 >= self.max_len):
             self._finish(slot)
 
-    def _admit_one_paged(self, slot: int, req: Request, t_submit: float
-                         ) -> bool:
+    def _admit_one_paged(self, slot: int, ent: _Pending) -> bool:
         """Paged path: reserve blocks (shared prefix mapped in, its
-        prefill SKIPPED), queue the remaining prompt as chunks.  Returns
-        False on pool exhaustion — the request goes back to the queue."""
-        plan = self.pool.admit(slot, [int(t) for t in req.prompt],
-                               req.max_new_tokens)
+        prefill SKIPPED), queue the remaining prompt as chunks.  For a
+        preempted entry the admission prompt is prompt + produced tokens
+        — the resident part skip-prefills via the prefix cache, so
+        preempted work is not recomputed.  Returns False on pool
+        exhaustion — the request goes back to the queue."""
+        req = ent.req
+        remaining_new = req.max_new_tokens - len(ent.resume_tokens)
+        plan = self.pool.admit(slot, [int(t) for t in ent.full_prompt],
+                               remaining_new)
         if plan is None:
             return False
         t0 = time.perf_counter()
@@ -486,12 +621,17 @@ class ContinuousEngine:
             self.caches, jnp.asarray(slot, jnp.int32),
             jnp.asarray(plan.shared_tokens, jnp.int32))
         self._pos[slot] = plan.shared_tokens
-        rest = np.asarray(req.prompt[plan.shared_tokens:], np.int32)
+        rest = np.asarray(ent.full_prompt[plan.shared_tokens:], np.int32)
         L = self.prefill_chunk
         chunks = [rest[j:j + L] for j in range(0, len(rest), L)]
         self._slots[slot] = _Slot(
-            req=req, produced=[], cur_tok=-1, t_submit=t_submit, t_admit=t0,
-            t_prefill_done=0.0, t_first=0.0, phase="prefill", chunks=chunks)
+            req=req, produced=list(ent.resume_tokens), cur_tok=-1,
+            t_submit=ent.t_submit, t_admit=t0, t_prefill_done=0.0,
+            t_first=ent.t_first, phase="prefill", chunks=chunks,
+            full_prompt=ent.full_prompt,
+            resume_len=len(ent.resume_tokens),
+            preemptions=ent.preemptions, ttft_steps=ent.ttft_steps,
+            prefill_s_prev=ent.prefill_s)
         return True
 
     def _admit(self) -> None:
@@ -502,14 +642,79 @@ class ContinuousEngine:
             with self._cv:
                 if not self._pending:
                     return
-                req, t_submit = self._pending.popleft()
+                now = time.perf_counter()
+                hint = (self.pool.evictable_cached()
+                        if self.paged and self.policy.needs_probes else None)
+                views = [self._pending_view(i, e, now, hint)
+                         for i, e in enumerate(self._pending)]
+                idx = self.policy.select_admission(views, now)
+                if idx is None:
+                    return                  # policy holds the whole queue
+                ent = self._pending[idx]
+                del self._pending[idx]
             if self.paged:
-                if not self._admit_one_paged(slot, req, t_submit):
+                if not self._admit_one_paged(slot, ent):
                     with self._cv:          # backoff: retry next step
-                        self._pending.appendleft((req, t_submit))
+                        self._pending.insert(idx, ent)
                     return
             else:
-                self._admit_one(slot, req, t_submit)
+                self._admit_one(slot, ent)
+
+    # -- preempt-by-eviction --------------------------------------------------
+
+    def _maybe_preempt(self) -> None:
+        """Ask the policy for a victim (at most one per step) and evict
+        it; re-run admission so the freed slot/blocks serve the at-risk
+        request in the same step."""
+        if not self.policy.preempts:
+            return
+        with self._cv:
+            if not self._pending:
+                return
+            now = time.perf_counter()
+            hint = (self.pool.evictable_cached()
+                    if self.policy.needs_probes else None)
+            pviews = [self._pending_view(i, e, now, hint)
+                      for i, e in enumerate(self._pending)]
+        sviews = [self._slot_view(i) for i in range(self.slots)]
+        victim = self.policy.select_victim(pviews, sviews, now)
+        if victim is None:
+            return
+        self._preempt(victim)
+        self._admit()
+
+    def _preempt(self, slot: int) -> None:
+        """Evict a decoding slot: register its FULL sequence (prompt +
+        produced tokens) so the resident KV blocks survive in the prefix
+        cache (evictable under pressure, skip-prefilled on resume), drop
+        the slot's refs, and re-queue the request with its produced
+        tokens intact.  Greedy resume is token-identical: prefill writes
+        the same KV decode would have, and the resumed prompt's last
+        token is the victim's last produced token, whose logits seed the
+        next decode step exactly where it left off."""
+        st = self._slots[slot]
+        assert st is not None and st.phase == "decode", (slot, st and
+                                                         st.phase)
+        full_seq = [int(t) for t in st.req.prompt] + [int(t)
+                                                      for t in st.produced]
+        # registration covers only FULL blocks among the resident
+        # positions [0, pos) — the tail (incl. the not-yet-written last
+        # produced token) is re-prefilled on resume.
+        self.pool.release_slot(slot, prompt=full_seq)
+        self._bt = jnp.asarray(self.pool.tables)
+        self._slots[slot] = None
+        self.preemptions += 1
+        ent = _Pending(
+            req=st.req, t_submit=st.t_submit,
+            full_prompt=np.asarray(full_seq, np.int32),
+            resume_tokens=list(st.produced), t_first=st.t_first,
+            ttft_steps=st.ttft_steps, preemptions=st.preemptions + 1,
+            prefill_s=st.prefill_s_prev + (st.t_prefill_done - st.t_admit))
+        with self._cv:
+            # tail of the queue: the victim already holds its first
+            # token, so at-risk TTFT requests go first (anti-thrash:
+            # resumed entries never trigger further preemption).
+            self._pending.append(ent)
 
     def _finish(self, slot: int) -> None:
         st = self._slots[slot]
@@ -517,17 +722,20 @@ class ContinuousEngine:
         self._results.put(Result(
             rid=st.req.rid,
             tokens=np.asarray(st.produced, np.int32),
-            prefill_s=st.t_prefill_done - st.t_admit,
+            prefill_s=st.prefill_s_prev + (st.t_prefill_done - st.t_admit),
             decode_s=now - st.t_prefill_done,
             latency_s=now - st.t_submit,
-            ttft_s=st.t_first - st.t_submit))
+            ttft_s=st.t_first - st.t_submit,
+            ttft_steps=max(st.ttft_steps, 0),
+            preemptions=st.preemptions))
         self._slots[slot] = None
         if self.paged:
-            # release refs; full prompt blocks stay content-addressed in
-            # the prefix cache until evicted, so an identical prompt later
-            # skips their prefill entirely.
+            # release refs; full prompt blocks (of the ADMISSION prompt —
+            # original prompt + any resume tail) stay content-addressed
+            # in the prefix cache until evicted, so an identical prompt
+            # later skips their prefill entirely.
             self.pool.release_slot(slot, prompt=[int(t)
-                                                 for t in st.req.prompt])
+                                                 for t in st.full_prompt])
             self._bt = jnp.asarray(self.pool.tables)
 
     # -- the decode step ------------------------------------------------------
@@ -584,13 +792,17 @@ class ContinuousEngine:
                 continue                       # more chunks next step
             self.prefills += 1
             st.phase = "decode"
-            st.t_prefill_done = st.t_first = now
+            st.t_prefill_done = now
+            if st.t_first == 0.0:              # resumed slots keep theirs
+                st.t_first = now
+            if st.ttft_steps < 0:
+                st.ttft_steps = self.steps + self.chunk_steps
             # prompt KV is now fully resident: content-address its full
             # blocks so even a CONCURRENT identical prompt shares them
             # (release re-registers, which is a no-op).
             n = int(self.pool.n_slot_blocks[i])
             self.pool.register_prefix(
-                [int(t) for t in st.req.prompt],
+                [int(t) for t in st.full_prompt],
                 [int(b) for b in self.pool.tables[i, :n]])
             tok0 = int(tok_np[i])
             st.produced.append(tok0)
@@ -600,13 +812,25 @@ class ContinuousEngine:
                     or self._pos[i] >= self.max_len):
                 self._finish(i)
 
+    def _end_step(self) -> int:
+        """Common step epilogue: pool-utilization sample + optional
+        consistency audit; returns the active-slot count."""
+        if self.paged:
+            self._util_sum += self.pool.used_blocks / (self.pool.num_blocks
+                                                       - 1)
+            self._util_steps += 1
+            if self._audit:
+                self.pool.check()
+        return sum(s is not None for s in self._slots)
+
     def step(self) -> int:
-        """Admit what fits, run at most one prefill-chunk batch (paged)
-        and ONE batched decode step over the decoding slots, then
-        finish/refill.  Returns the number of active slots after the step
-        (0 = idle)."""
+        """Admit what the policy picks, preempt if it names a victim, run
+        at most one prefill-chunk batch (paged) and ONE batched decode
+        step over the decoding slots, then finish/refill.  Returns the
+        number of active slots after the step (0 = idle)."""
         self._admit()
         if self.paged:
+            self._maybe_preempt()
             pre = [i for i, s in enumerate(self._slots)
                    if s is not None and s.phase == "prefill"]
             if pre:
@@ -614,7 +838,7 @@ class ContinuousEngine:
         active = [i for i, s in enumerate(self._slots)
                   if s is not None and s.phase == "decode"]
         if not active:
-            return sum(s is not None for s in self._slots)
+            return self._end_step()
 
         self._register_gemms(self.slots, self.slots)
         toks = np.zeros((self.slots, 1), np.int32)
@@ -660,7 +884,7 @@ class ContinuousEngine:
                     or self._pos[i] >= self.max_len):
                 self._finish(i)
         self._admit()
-        return sum(s is not None for s in self._slots)
+        return self._end_step()
 
     # -- synchronous convenience ----------------------------------------------
 

@@ -91,6 +91,30 @@ class AdmitPlan:
         return self.shared_blocks + self.new_blocks
 
 
+@dataclasses.dataclass(frozen=True)
+class ProbeReport:
+    """Non-mutating answer to "would this reservation fit right now?".
+
+    Produced by :meth:`KVPool.probe` for the scheduling policies
+    (``serving.policy``): ``shared`` blocks come free via the prefix
+    cache, ``need_new`` must be allocated, and ``fits_now`` mirrors the
+    exact arithmetic ``admit`` would apply (free list plus the cached
+    blocks ``reserve`` may evict, EXCLUDING blocks the prefix match
+    itself would pin) — a True probe means an immediately following
+    ``admit`` succeeds, barring interleaved pool mutation.
+    """
+
+    total: int                  # blocks the full reservation spans
+    shared: int                 # covered by cached prefix blocks
+    need_new: int               # fresh blocks a reservation must allocate
+    free: int                   # free-list size at probe time
+    evictable: int              # cached blocks reserve() could evict
+
+    @property
+    def fits_now(self) -> bool:
+        return self.need_new <= self.free + self.evictable
+
+
 class KVPool:
     """Host-side bookkeeping for the paged KV cache (see module docstring).
 
@@ -251,6 +275,59 @@ class KVPool:
             self._prefix[h] = bid
             self._hash_of[bid] = h
             self.ref[bid] += 1
+
+    # -- reservation probing / reclaim accounting ----------------------------
+
+    def evictable_cached(self) -> int:
+        """Cached prefix blocks ``reserve`` could evict right now (the
+        map's pin is their only ref).  O(cached blocks) — callers probing
+        a whole queue compute this once and pass it as ``probe``'s
+        ``evictable_hint``."""
+        return sum(1 for bid in self._hash_of if self.ref[bid] == 1)
+
+    def probe(self, prompt: Sequence[int], max_new_tokens: int,
+              evictable_hint: Optional[int] = None) -> ProbeReport:
+        """Answer "would ``admit(prompt, max_new_tokens)`` succeed right
+        now?" WITHOUT mutating anything: no refs taken, no LRU touch, no
+        backoff recorded.  Scheduling policies call this once per queued
+        request per step (with ``evictable_hint`` =
+        :meth:`evictable_cached` computed once for the batch), so it must
+        stay side-effect free."""
+        plen = len(prompt)
+        total = min(blocks_for(plen + max_new_tokens, self.block_size),
+                    self.blocks_per_slot)
+        matched: List[int] = []
+        if self.share_prefixes and plen > 0:
+            nfull = (plen - 1) // self.block_size
+            for h in self._chain_hashes(prompt, self.block_size, nfull):
+                bid = self._prefix.get(h)
+                if bid is None:
+                    break
+                matched.append(bid)
+        matched = matched[:total]
+        # evictable = cached blocks reserve() may reclaim (ref == 1, the
+        # map's pin is the only user) MINUS the matched ones: admit()
+        # pins those via match_prefix before reserving, so they are not
+        # up for eviction in the very reservation being probed.
+        if evictable_hint is None:
+            evictable_hint = self.evictable_cached()
+        evictable = evictable_hint - sum(1 for bid in matched
+                                         if self.ref[bid] == 1)
+        return ProbeReport(total=total, shared=len(matched),
+                           need_new=total - len(matched),
+                           free=len(self._free), evictable=evictable)
+
+    def reclaimable_blocks(self, slot: int) -> int:
+        """Blocks that return to the free list outright if the slot is
+        released: exclusively-owned entries (ref == 1).  Blocks shared
+        with another slot or pinned by the prefix cache (ref >= 2) stay
+        with their other owners — eviction never frees referenced
+        blocks.  (A preempt-release that REGISTERS the slot's prompt
+        turns its full prompt blocks into cached-evictable rather than
+        free, which ``reserve`` can still reclaim under pressure.)"""
+        n = int(self.n_slot_blocks[slot])
+        return sum(1 for b in self.tables[slot, :n]
+                   if self.ref[int(b)] == 1)
 
     # -- admission / release -------------------------------------------------
 

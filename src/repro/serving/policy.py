@@ -1,0 +1,244 @@
+"""Pluggable scheduling policies for the continuous-batching engine.
+
+The paper's thesis is that throughput is won in a SCHEDULING SPACE, not
+in raw compute: the GTA array explores dataflow x precision x resize per
+GEMM, and PRs 1-3 threaded that exploration through the kernels and the
+model interior.  This module applies the same lesson one level up (the
+GPTPU observation: accelerator utilization is decided by the task
+scheduler that feeds the array).  The serving layer's scarce resources —
+engine slots and KV-pool blocks — get their own policy space:
+
+  ``fifo``         strict arrival order (the pre-policy engine behavior,
+                   kept as the baseline).  Head-of-line blocking is the
+                   known failure mode: one reservation that does not fit
+                   the pool stalls every request behind it.
+  ``best_fit``     admit the queued request whose block reservation —
+                   AFTER prefix-credit from ``KVPool.probe`` (cached
+                   prefix blocks cost nothing) — best fits the current
+                   free list: the largest reservation that still fits,
+                   so free blocks are consumed instead of idling behind
+                   an oversized head.  Starvation-bounded: a head older
+                   than ``age_cap_s`` is forced through in FIFO order.
+  ``slo_preempt``  FIFO admission plus preempt-by-eviction for TTFT
+                   SLOs: when a queued request with ``Request.ttft_slo``
+                   has waited past ``risk_frac`` of its deadline and
+                   cannot be admitted, the decoding victim with the most
+                   reclaimable blocks and least progress is evicted —
+                   its produced tokens are kept, its resident KV blocks
+                   are registered in the prefix cache, and it is
+                   re-queued; re-admission skip-prefills the cached
+                   blocks so preempted work is never recomputed (greedy
+                   output is token-identical to a never-preempted run,
+                   gated in serve_bench).
+
+Policies are pure host-side decision functions over immutable views
+(:class:`PendingView`, :class:`SlotView`); the engine owns all state
+mutation, so a policy can never corrupt slot/pool bookkeeping.  Custom
+policies subclass :class:`SchedulerPolicy` and register via
+:func:`register_policy`; ``ContinuousEngine(policy="name")`` resolves
+through :func:`make_policy`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+from repro.serving.kv_pool import ProbeReport
+
+
+@dataclasses.dataclass(frozen=True)
+class PendingView:
+    """Immutable snapshot of one queued request, as policies see it."""
+
+    index: int                  # position in the pending queue (0 = head)
+    rid: int
+    prompt_len: int             # tokens still to prefill (incl. resume tail)
+    new_tokens: int             # remaining decode budget
+    priority: int
+    ttft_slo: Optional[float]   # seconds, None = no deadline
+    waited_s: float             # now - submit time
+    resumed: bool               # True once the request has produced tokens
+    preemptions: int            # times this request was preempted
+    probe: Optional[ProbeReport]  # pool reservation probe (None on dense)
+
+
+@dataclasses.dataclass(frozen=True)
+class SlotView:
+    """Immutable snapshot of one engine slot (None slots stay None)."""
+
+    index: int
+    rid: int
+    phase: str                  # "prefill" | "decode"
+    priority: int
+    produced: int               # tokens produced so far
+    remaining: int              # decode budget left
+    reclaimable_blocks: int     # blocks freed outright if evicted
+    preemptions: int
+    has_slo: bool
+
+
+class SchedulerPolicy:
+    """Admission/preemption decision interface (see module docstring).
+
+    ``select_admission`` returns the pending-queue index to admit next
+    (None = hold every queued request this step); ``select_victim``
+    returns the slot index to preempt (None = no preemption).  Both are
+    called once per engine step with fresh views; returning an index
+    never guarantees the action succeeds (pool backoff re-queues), so
+    policies must be safe under retry.
+    """
+
+    name = "base"
+    #: policies that read block-reservation probes need the paged pool
+    requires_pool = False
+    #: set False to skip the per-request ``KVPool.probe`` when building
+    #: views (fifo never reads them — keeps the default path free)
+    needs_probes = True
+    #: set True for policies whose ``select_victim`` can return a slot;
+    #: the engine skips the preemption hook entirely otherwise
+    preempts = False
+
+    def select_admission(self, pending: List[PendingView],
+                         now: float) -> Optional[int]:
+        raise NotImplementedError
+
+    def select_victim(self, pending: List[PendingView],
+                      slots: List[Optional[SlotView]],
+                      now: float) -> Optional[int]:
+        return None
+
+
+class FifoPolicy(SchedulerPolicy):
+    """Strict arrival order — the pre-policy engine behavior."""
+
+    name = "fifo"
+    needs_probes = False
+
+    def select_admission(self, pending, now):
+        return 0 if pending else None
+
+
+class BestFitPolicy(SchedulerPolicy):
+    """Admit the largest reservation that still fits the free list.
+
+    ``probe.fits_now`` already credits cached prefix blocks and the
+    evictable prefix cache, so "fits" means the pool's ``reserve`` would
+    succeed right now.  Among fitting requests the policy picks the one
+    consuming the most fresh blocks (classic best-fit: least leftover
+    fragmentation), priority first, earliest-submitted on ties.  A head
+    request older than ``age_cap_s`` is forced through in FIFO order
+    regardless of fit — the starvation bound: an oversized reservation
+    is eventually attempted every step until the pool drains enough.
+    """
+
+    name = "best_fit"
+    requires_pool = True
+
+    def __init__(self, age_cap_s: float = 30.0):
+        if age_cap_s <= 0:
+            raise ValueError("age_cap_s must be positive")
+        self.age_cap_s = age_cap_s
+
+    def select_admission(self, pending, now):
+        if not pending:
+            return None
+        if pending[0].waited_s > self.age_cap_s:
+            return 0
+        fits = [p for p in pending if p.probe is not None and p.probe.fits_now]
+        if not fits:
+            return None
+        best = max(fits, key=lambda p: (p.priority, p.probe.need_new,
+                                        -p.index))
+        return best.index
+
+
+class SloPreemptPolicy(SchedulerPolicy):
+    """SLO-aware admission + preempt-by-eviction for TTFT deadlines.
+
+    A queued request is AT RISK once it has waited ``risk_frac`` of its
+    ``ttft_slo`` without producing a first token (resumed requests have
+    already consumed their TTFT and never re-trigger — the anti-thrash
+    rule).  Admission is FIFO except that the most urgent at-risk
+    request jumps the queue whenever its reservation fits — a deadline
+    never waits behind an unfittable best-effort head.  If it does NOT
+    fit (or no slot is free), the policy picks a victim among decoding
+    slots: most reclaimable blocks first, least progress second (the
+    eviction that frees the most pool for the least recompute), skipping
+    slots already preempted ``max_preemptions`` times and slots
+    outranking the at-risk request's priority.
+    """
+
+    name = "slo_preempt"
+    requires_pool = True
+    preempts = True
+
+    def __init__(self, risk_frac: float = 0.5, max_preemptions: int = 2,
+                 min_progress: int = 1):
+        if not 0 < risk_frac <= 1:
+            raise ValueError("risk_frac must be in (0, 1]")
+        self.risk_frac = risk_frac
+        self.max_preemptions = max_preemptions
+        self.min_progress = min_progress
+
+    def _at_risk(self, pending):
+        return [p for p in pending
+                if p.ttft_slo is not None and not p.resumed
+                and p.waited_s >= self.risk_frac * p.ttft_slo]
+
+    def select_admission(self, pending, now):
+        if not pending:
+            return None
+        at_risk = self._at_risk(pending)
+        if at_risk:
+            target = max(at_risk, key=lambda p: (p.priority, p.waited_s))
+            if target.probe is None or target.probe.fits_now:
+                return target.index
+        return 0
+
+    def select_victim(self, pending, slots, now):
+        at_risk = self._at_risk(pending)
+        if not at_risk:
+            return None
+        target = max(at_risk, key=lambda p: (p.priority, p.waited_s))
+        free = any(s is None for s in slots)
+        if free and target.probe is not None and target.probe.fits_now:
+            return None                 # plain admission serves it this step
+        cands = [s for s in slots
+                 if s is not None and s.phase == "decode"
+                 and s.produced >= self.min_progress
+                 and s.preemptions < self.max_preemptions
+                 and s.priority <= target.priority]
+        if not cands:
+            return None
+        victim = max(cands, key=lambda s: (s.reclaimable_blocks,
+                                           -s.produced, -s.index))
+        return victim.index
+
+
+_REGISTRY: Dict[str, Callable[..., SchedulerPolicy]] = {}
+
+
+def register_policy(name: str,
+                    factory: Callable[..., SchedulerPolicy]) -> None:
+    """Expose a policy under ``ContinuousEngine(policy=name)``."""
+    _REGISTRY[name] = factory
+
+
+register_policy("fifo", FifoPolicy)
+register_policy("best_fit", BestFitPolicy)
+register_policy("slo_preempt", SloPreemptPolicy)
+
+#: CLI surface (launch/serve.py) — keep in sync with the registry
+POLICY_NAMES = ("fifo", "best_fit", "slo_preempt")
+
+
+def make_policy(name: str, **kwargs) -> SchedulerPolicy:
+    """Instantiate a registered policy by name (kwargs to its factory)."""
+    try:
+        factory = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown scheduling policy {name!r}; registered: "
+            f"{sorted(_REGISTRY)}") from None
+    return factory(**kwargs)

@@ -160,6 +160,91 @@ def test_reserve_rejects_oversize_and_recovers():
     pool.check()
 
 
+def test_probe_is_side_effect_free_and_exact():
+    """probe() must answer exactly what admit() would do, without taking
+    refs, touching the LRU order, or recording backoffs."""
+    pool = _pool(num_blocks=9, slots=2)          # 8 usable
+    prompt = _prompt(11, seed=20)                # 2 full blocks + tail
+    pool.admit(0, prompt, max_new_tokens=2)
+    pool.release_slot(0, prompt=prompt)          # caches 2 prefix blocks
+    before = (pool.ref.copy().tolist(), list(pool._free),
+              list(pool._prefix), pool.stats()["backoffs"])
+
+    rep = pool.probe(prompt, 2)
+    # 11 + 2 tokens -> 4 blocks, 2 covered by the cached prefix
+    assert rep.total == 4 and rep.shared == 2 and rep.need_new == 2
+    # matched blocks are NOT double-counted as evictable
+    assert rep.evictable == 0
+    assert rep.fits_now
+    after = (pool.ref.copy().tolist(), list(pool._free),
+             list(pool._prefix), pool.stats()["backoffs"])
+    assert before == after                       # zero side effects
+
+    # fits_now == admit() outcome, in both directions
+    assert pool.admit(1, prompt, max_new_tokens=2) is not None
+    big = _prompt(30, seed=21)                   # 8 blocks + decode
+    rep2 = pool.probe(big, 2)
+    assert not rep2.fits_now
+    assert pool.admit(0, big, max_new_tokens=2) is None
+    pool.check()
+
+
+def test_reclaimable_counts_exclusive_blocks_only():
+    pool = _pool(num_blocks=16, slots=2)
+    prompt = _prompt(11, seed=22)
+    pool.admit(0, prompt, max_new_tokens=2)      # 4 exclusive blocks
+    assert pool.reclaimable_blocks(0) == 4
+    pool.register_prefix(prompt, list(pool.tables[0, :2]))
+    # the 2 registered blocks now carry the map's pin (ref 2): evicting
+    # the slot would hand them to the cache, not the free list
+    assert pool.reclaimable_blocks(0) == 2
+    plan = pool.admit(1, prompt, max_new_tokens=2)
+    assert plan.shared_tokens == 8
+    assert pool.reclaimable_blocks(1) == 2       # its two fresh blocks
+    pool.check()
+
+
+def test_eviction_respects_cow_refs_and_survivor_blocks():
+    """Preempt-by-eviction of a slot whose blocks are COW-shared with a
+    live slot must not free the referenced blocks: the survivor's table
+    rows stay mapped and intact, only the victim's exclusive tail is
+    reclaimed."""
+    pool = _pool(num_blocks=16, slots=2)
+    prompt = _prompt(11, seed=23)
+    pool.admit(0, prompt, max_new_tokens=4)
+    pool.register_prefix(prompt, list(pool.tables[0, :2]))
+    plan1 = pool.admit(1, prompt, max_new_tokens=4)
+    shared = list(plan1.shared_blocks)
+    assert shared == list(pool.tables[0, :2])    # physically shared
+    survivor_row = [int(b) for b in pool.tables[1, :4]]
+
+    # preempt-style eviction of slot 0: register full sequence, release
+    seq = prompt + [7, 8, 9]                     # "produced" tokens
+    pool.release_slot(0, prompt=seq)
+    pool.check()                                 # every ref accounted for
+    for b in shared:
+        assert pool.ref[b] >= 2                  # survivor + prefix map
+        assert b not in pool._free               # never freed
+    # survivor's mapping is untouched
+    assert [int(b) for b in pool.tables[1, :4]] == survivor_row
+
+    # survivor writes into the shared span -> COW fork, original intact
+    pool.ensure_writable(1, 0, 3)
+    (src, dst), = pool.take_copies()
+    assert src == shared[0] and pool.tables[1, 0] == dst != src
+    assert pool.ref[shared[0]] >= 1              # cache still pins original
+    pool.check()
+
+    # survivor releases; cached blocks evict under pressure and free
+    pool.release_slot(1)
+    got = pool.reserve(13)                       # forces eviction of cache
+    assert got is not None and len(got) == 13
+    assert pool.stats()["evictions"] > 0
+    for b in got:
+        pool._release_one(b)
+    pool.check()
+
+
 def test_null_block_is_pinned():
     pool = _pool()
     with pytest.raises(ValueError):

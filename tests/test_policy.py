@@ -1,0 +1,168 @@
+"""SchedulerPolicy decision logic: pure host-side units over immutable
+views — no jax, runs in ms.  Engine integration (preempt/resume token
+identity, skip-prefill resume) lives in test_serving_engine.py."""
+
+import pytest
+
+from repro.serving.kv_pool import ProbeReport
+from repro.serving.policy import (BestFitPolicy, FifoPolicy, PendingView,
+                                  SloPreemptPolicy, SlotView, make_policy,
+                                  register_policy)
+
+
+def _probe(need, free, evictable=0, shared=0):
+    return ProbeReport(total=need + shared, shared=shared, need_new=need,
+                       free=free, evictable=evictable)
+
+
+def _pending(index, *, rid=None, waited=0.0, slo=None, prio=0,
+             resumed=False, probe=None, preemptions=0):
+    return PendingView(index=index, rid=rid if rid is not None else index,
+                       prompt_len=8, new_tokens=4, priority=prio,
+                       ttft_slo=slo, waited_s=waited, resumed=resumed,
+                       preemptions=preemptions, probe=probe)
+
+
+def _slot(index, *, phase="decode", produced=4, reclaimable=2, prio=0,
+          preemptions=0, has_slo=False, remaining=8):
+    return SlotView(index=index, rid=100 + index, phase=phase,
+                    priority=prio, produced=produced, remaining=remaining,
+                    reclaimable_blocks=reclaimable, preemptions=preemptions,
+                    has_slo=has_slo)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_make_policy_registry():
+    assert make_policy("fifo").name == "fifo"
+    assert make_policy("best_fit", age_cap_s=1.5).age_cap_s == 1.5
+    assert make_policy("slo_preempt", risk_frac=0.25).risk_frac == 0.25
+    with pytest.raises(ValueError, match="unknown scheduling policy"):
+        make_policy("round_robin")
+    register_policy("custom_fifo", FifoPolicy)
+    assert isinstance(make_policy("custom_fifo"), FifoPolicy)
+
+
+def test_policy_ctor_validation():
+    with pytest.raises(ValueError):
+        BestFitPolicy(age_cap_s=0)
+    with pytest.raises(ValueError):
+        SloPreemptPolicy(risk_frac=0.0)
+
+
+# ---------------------------------------------------------------------------
+# fifo
+# ---------------------------------------------------------------------------
+
+def test_fifo_always_head():
+    pol = FifoPolicy()
+    assert pol.select_admission([], 0.0) is None
+    views = [_pending(0), _pending(1), _pending(2)]
+    assert pol.select_admission(views, 0.0) == 0
+    assert pol.select_victim(views, [_slot(0)], 0.0) is None
+    assert pol.needs_probes is False and pol.preempts is False
+
+
+# ---------------------------------------------------------------------------
+# best_fit
+# ---------------------------------------------------------------------------
+
+def test_best_fit_picks_largest_fitting_reservation():
+    pol = BestFitPolicy()
+    views = [_pending(0, probe=_probe(need=9, free=5)),    # head: too big
+             _pending(1, probe=_probe(need=2, free=5)),
+             _pending(2, probe=_probe(need=4, free=5)),    # best fit
+             _pending(3, probe=_probe(need=7, free=5))]
+    assert pol.select_admission(views, 0.0) == 2
+
+
+def test_best_fit_counts_evictable_and_prefix_credit():
+    pol = BestFitPolicy()
+    # need 6 > free 4, but 2 evictable cached blocks close the gap
+    views = [_pending(0, probe=_probe(need=6, free=4, evictable=2))]
+    assert pol.select_admission(views, 0.0) == 0
+    views = [_pending(0, probe=_probe(need=6, free=4, evictable=1))]
+    assert pol.select_admission(views, 0.0) is None      # hold: nothing fits
+
+
+def test_best_fit_age_cap_forces_fifo_head():
+    pol = BestFitPolicy(age_cap_s=1.0)
+    views = [_pending(0, waited=2.0, probe=_probe(need=9, free=5)),
+             _pending(1, probe=_probe(need=2, free=5))]
+    # head over the age cap: forced through in FIFO order even unfitting
+    assert pol.select_admission(views, 0.0) == 0
+
+
+def test_best_fit_priority_then_earliest_tiebreak():
+    pol = BestFitPolicy()
+    views = [_pending(0, probe=_probe(need=3, free=5)),
+             _pending(1, prio=1, probe=_probe(need=1, free=5)),
+             _pending(2, probe=_probe(need=3, free=5))]
+    assert pol.select_admission(views, 0.0) == 1         # priority wins
+    views = [_pending(0, probe=_probe(need=3, free=5)),
+             _pending(1, probe=_probe(need=3, free=5))]
+    assert pol.select_admission(views, 0.0) == 0         # earliest on ties
+
+
+# ---------------------------------------------------------------------------
+# slo_preempt
+# ---------------------------------------------------------------------------
+
+def test_slo_at_risk_jumps_queue_when_it_fits():
+    pol = SloPreemptPolicy(risk_frac=0.5)
+    views = [_pending(0, probe=_probe(need=9, free=5)),          # big head
+             _pending(1, slo=1.0, waited=0.6,
+                      probe=_probe(need=1, free=5))]             # at risk
+    assert pol.select_admission(views, 0.0) == 1
+    # not yet at risk -> plain FIFO
+    views[1] = _pending(1, slo=1.0, waited=0.2,
+                        probe=_probe(need=1, free=5))
+    assert pol.select_admission(views, 0.0) == 0
+
+
+def test_slo_victim_most_reclaimable_then_least_progress():
+    pol = SloPreemptPolicy(risk_frac=0.5)
+    pending = [_pending(0, slo=0.1, waited=1.0,
+                        probe=_probe(need=3, free=0))]
+    slots = [_slot(0, reclaimable=2, produced=10),
+             _slot(1, reclaimable=5, produced=10),     # most reclaimable
+             _slot(2, reclaimable=5, produced=3)]      # ... least progress
+    assert pol.select_victim(pending, slots, 0.0) == 2
+
+
+def test_slo_no_preempt_when_admission_suffices_or_no_risk():
+    pol = SloPreemptPolicy(risk_frac=0.5)
+    # free slot + fitting reservation: admission handles it, no victim
+    pending = [_pending(0, slo=0.1, waited=1.0, probe=_probe(need=1, free=4))]
+    slots = [None, _slot(1)]
+    assert pol.select_victim(pending, slots, 0.0) is None
+    # nobody at risk: no victim even under pressure
+    pending = [_pending(0, probe=_probe(need=9, free=0))]
+    assert pol.select_victim(pending, [_slot(0)], 0.0) is None
+
+
+def test_slo_anti_thrash_guards():
+    pol = SloPreemptPolicy(risk_frac=0.5, max_preemptions=2)
+    pending = [_pending(0, slo=0.1, waited=1.0, probe=_probe(need=3, free=0))]
+    # resumed requests have consumed their TTFT: never at risk again
+    resumed = [_pending(0, slo=0.1, waited=9.0, resumed=True,
+                        probe=_probe(need=3, free=0))]
+    assert pol.select_victim(resumed, [_slot(0)], 0.0) is None
+    # victims at the preemption cap are skipped
+    slots = [_slot(0, preemptions=2)]
+    assert pol.select_victim(pending, slots, 0.0) is None
+    # prefill-phase and zero-progress slots are not preemptable
+    slots = [_slot(0, phase="prefill"), _slot(1, produced=0)]
+    assert pol.select_victim(pending, slots, 0.0) is None
+    # higher-priority victims are protected from lower-priority requesters
+    slots = [_slot(0, prio=5)]
+    assert pol.select_victim(pending, slots, 0.0) is None
+
+
+def test_probe_report_fits_arithmetic():
+    assert _probe(need=3, free=3).fits_now
+    assert _probe(need=3, free=1, evictable=2).fits_now
+    assert not _probe(need=3, free=1, evictable=1).fits_now
+    assert _probe(need=0, free=0).fits_now

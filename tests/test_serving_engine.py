@@ -21,6 +21,7 @@ from repro.core.scheduler import CachedChoice, ScheduleCache
 from repro.kernels import ops
 from repro.models import network as N
 from repro.serving.engine import ContinuousEngine, Request, WaveEngine
+from repro.serving.policy import BestFitPolicy
 
 KEY = jax.random.PRNGKey(0)
 
@@ -385,3 +386,186 @@ def test_paged_full_window_prompt(tiny):
     assert len(res.tokens) == 1
     ref, _ = N.forward(params, cfg, {"tokens": jnp.asarray(r.prompt)[None]})
     assert int(res.tokens[0]) == int(jnp.argmax(ref[0, -1]))
+
+
+# ---------------------------------------------------------------------------
+# scheduling policies: best_fit admission, preempt-by-eviction, resume
+# ---------------------------------------------------------------------------
+
+def _overload_reqs(vocab, seed=31):
+    """2 hogs seize the slots, an oversized reservation blocks the FIFO
+    head against a tight pool, SLO'd shorts queue behind it."""
+    rng = np.random.default_rng(seed)
+    reqs = [Request(rid=0, prompt=rng.integers(3, vocab, 60
+                                               ).astype(np.int32),
+                    max_new_tokens=24, eos=-1),
+            Request(rid=1, prompt=rng.integers(3, vocab, 60
+                                               ).astype(np.int32),
+                    max_new_tokens=24, eos=-1),
+            Request(rid=2, prompt=rng.integers(3, vocab, 100
+                                               ).astype(np.int32),
+                    max_new_tokens=12, eos=-1)]
+    for i in range(3, 7):
+        reqs.append(Request(rid=i,
+                            prompt=rng.integers(3, vocab, 6
+                                                ).astype(np.int32),
+                            max_new_tokens=3, eos=-1, ttft_slo=1e-4))
+    return reqs
+
+
+def test_best_fit_bypasses_blocked_head(tiny):
+    """An oversized head reservation must not starve the pool: best_fit
+    admits the fitting short behind it, fifo head-of-line blocks it."""
+    cfg, params = tiny
+    mk = lambda: [
+        Request(rid=0, prompt=rng0.integers(3, cfg.vocab, 70
+                                            ).astype(np.int32),
+                max_new_tokens=6, eos=-1),      # 5 of 7 usable blocks
+        Request(rid=1, prompt=rng0.integers(3, cfg.vocab, 70
+                                            ).astype(np.int32),
+                max_new_tokens=6, eos=-1),      # does not fit while 0 runs
+        Request(rid=2, prompt=rng0.integers(3, cfg.vocab, 8
+                                            ).astype(np.int32),
+                max_new_tokens=2, eos=-1)]      # 1 block: always fits
+    per_slot = -(-96 // 16)
+    rng0 = np.random.default_rng(17)
+    fifo = ContinuousEngine(cfg, params, slots=2, max_len=96,
+                            kv_blocks=per_slot + 2, share_prefixes=False,
+                            policy="fifo", audit=True)
+    fifo_ttft = {r.rid: r.ttft_steps for r in fifo.run(mk())}
+    rng0 = np.random.default_rng(17)
+    # huge age cap: cold-start jit on a loaded CI host must not trip the
+    # starvation bound mid-test (the bound itself is unit-tested)
+    bf = ContinuousEngine(cfg, params, slots=2, max_len=96,
+                          kv_blocks=per_slot + 2, share_prefixes=False,
+                          policy=BestFitPolicy(age_cap_s=1e9), audit=True)
+    bf_res = bf.run(mk())
+    bf_ttft = {r.rid: r.ttft_steps for r in bf_res}
+    # fifo: rid 2 waits behind the unfittable head until rid 0 drains;
+    # best_fit: rid 2 admits immediately into the free slot + free blocks
+    assert fifo.pool.stats()["backoffs"] > 0           # head really blocked
+    assert bf.pool.stats()["backoffs"] == 0            # never tried what
+    assert bf_ttft[2] < fifo_ttft[2], (bf_ttft, fifo_ttft)  # can't fit
+    assert bf_res[0].rid == 2                          # finishes first
+    bf.pool.check()
+
+
+def test_slo_preempt_token_identity_on_overload(tiny):
+    """The acceptance gate, in miniature: under overload slo_preempt must
+    actually preempt, beat fifo's p95 TTFT (dispatch-count proxy), and
+    keep every request's greedy output token-identical to the
+    never-preempted fifo run — including the resumed victims."""
+    cfg, params = tiny
+    reqs = _overload_reqs(cfg.vocab)
+    out = {}
+    for pol in ("fifo", "slo_preempt"):
+        eng = ContinuousEngine(cfg, params, slots=4, max_len=160,
+                               kv_blocks=20, policy=pol, audit=True)
+        res = eng.run([dataclasses.replace(r) for r in reqs])
+        out[pol] = (eng, {r.rid: list(map(int, r.tokens)) for r in res},
+                    {r.rid: r.ttft_steps for r in res}, res)
+    fifo_eng, fifo_toks, fifo_ttft, _ = out["fifo"]
+    slo_eng, slo_toks, slo_ttft, slo_eng_results = out["slo_preempt"]
+    assert slo_eng.preemptions > 0
+    assert slo_toks == fifo_toks                 # preempt/resume exactness
+    slo_p95 = np.percentile(list(slo_ttft.values()), 95)
+    fifo_p95 = np.percentile(list(fifo_ttft.values()), 95)
+    assert slo_p95 < fifo_p95, (slo_ttft, fifo_ttft)
+    # the victims really were resumed (their results carry the count);
+    # under this much pool pressure their cached blocks MAY have been
+    # evicted before resume (then they re-prefill — still exact); the
+    # zero-pressure skip-prefill path is asserted in
+    # test_preempt_resume_reference_exact.
+    assert any(r > 0 for r in
+               (res.preemptions for res in slo_eng_results))
+    slo_eng.pool.check()
+
+
+def test_preempt_resume_reference_exact(tiny):
+    """Direct preemption surgery: evict a mid-decode slot, let it resume,
+    and require the final tokens to equal the full-recompute reference —
+    the strongest form of 'preempted work is not recomputed wrongly'."""
+    cfg, params = tiny
+    r = _req(0, 21, 10, cfg.vocab, seed=41)
+    eng = ContinuousEngine(cfg, params, slots=2, max_len=96, audit=True)
+    eng.submit(dataclasses.replace(r))
+    while True:
+        eng.step()
+        st = eng._slots[0]
+        if st is not None and st.phase == "decode" and len(st.produced) >= 4:
+            break
+    eng._preempt(0)
+    eng.pool.check()
+    # the victim's resident full blocks went to the prefix cache
+    hits_before = eng.pool.stats()["shared_token_hits"]
+    res = []
+    while not res:
+        eng.step()
+        try:
+            res.append(eng._results.get_nowait())
+        except Exception:
+            pass
+    assert res[0].preemptions == 1
+    assert eng.pool.stats()["shared_token_hits"] > hits_before  # skip-prefill
+    seq = list(np.asarray(r.prompt))
+    want = []
+    for _ in range(r.max_new_tokens):
+        logits, _ = N.forward(params, cfg, {"tokens": jnp.asarray(seq)[None]})
+        nxt = int(jnp.argmax(logits[0, -1]))
+        want.append(nxt)
+        seq.append(nxt)
+    assert list(map(int, res[0].tokens)) == want
+    eng.pool.check()
+
+
+def test_preempt_cow_shared_survivor_unchanged(tiny):
+    """Evicting a victim whose blocks are COW-/prefix-shared with a live
+    slot must not corrupt the survivor: its output stays equal to an
+    undisturbed run."""
+    cfg, params = tiny
+    rng = np.random.default_rng(53)
+    prompt = rng.integers(3, cfg.vocab, 40).astype(np.int32)
+    mk = lambda: [Request(rid=0, prompt=prompt.copy(), max_new_tokens=10,
+                          eos=-1),
+                  Request(rid=1, prompt=prompt.copy(), max_new_tokens=10,
+                          eos=-1)]
+    base = {r.rid: list(map(int, r.tokens))
+            for r in ContinuousEngine(cfg, params, slots=2,
+                                      max_len=96).run(mk())}
+    eng = ContinuousEngine(cfg, params, slots=2, max_len=96, audit=True)
+    q0, q1 = mk()
+    # stagger: rid 1 admits AFTER rid 0's prefill registered its prompt
+    # blocks, so its admission maps the same physical blocks (ref >= 2)
+    eng.submit(q0)
+    while True:
+        eng.step()
+        s0 = eng._slots[0]
+        if s0 is not None and s0.phase == "decode":
+            break
+    eng.submit(q1)
+    while True:
+        eng.step()
+        s1 = eng._slots[1]
+        if s1 is not None and s1.phase == "decode" and len(s1.produced) >= 3:
+            break
+    # slots share the prompt's full prefix blocks at this point
+    assert eng.pool.stats()["shared_token_hits"] > 0
+    eng._preempt(1)
+    eng.pool.check()
+    res = []
+    while len(res) < 2:
+        eng.step()
+        try:
+            res.append(eng._results.get_nowait())
+        except Exception:
+            pass
+    got = {r.rid: list(map(int, r.tokens)) for r in res}
+    assert got == base                       # survivor AND victim intact
+    eng.pool.check()
+
+
+def test_policy_requires_pool_on_dense():
+    cfg = CONFIGS.get("qwen2_0_5b").scaled_down()
+    with pytest.raises(ValueError, match="dense"):
+        ContinuousEngine(cfg, N.init(cfg, KEY), slots=1, max_len=96,
+                         paged=False, policy="best_fit")
