@@ -27,6 +27,17 @@ engines serve it with ``audit=True`` (``pool.check()`` after EVERY step):
                       re-queued with produced tokens, resumed via
                       prefix-cache skip-prefill)
 
+A third, REPETITION-HEAVY trace (looped phrase prompts, long decode
+budgets) exercises the speculative-decoding subsystem (``serving.spec``),
+all with ``audit=True``:
+
+  paged_rep         vanilla paged decode on the rep trace (the reference)
+  paged_spec_ngram  prompt-lookup drafting (model-free), k = 4
+  paged_spec_model  small-model drafting (self-draft: random init gives no
+                    correlated separate model, so the draft IS the target
+                    config + weights — full acceptance exercises the whole
+                    draft/verify/rollback path), k = 4
+
 Reported per engine: tokens/sec, decode steps, request-latency p50/p99,
 TTFT p50/p95, peak KV bytes.  Paged adds the pool telemetry (blocks,
 shared-prefix token hits, peak block usage) and the decode-gap bound;
@@ -59,7 +70,15 @@ Acceptance gates (exit nonzero on violation):
     preempt/resume must never change what the model says — the fifo row
     doubles as the never-preempted reference); fifo records backoffs
     (the trace genuinely overloads the pool); pool.check() holds after
-    every step on all three engines (audit mode).
+    every step on all three engines (audit mode);
+  * speculative gates (rep trace): BOTH spec rows produce token-identical
+    greedy output to the paged_rep reference (accept-longest-prefix plus
+    KV rollback must never change what the model says); each needs at
+    least a 1.5x reduction in decode dispatches over paged_rep; each
+    accepts at least one draft (avg accept len > 1); and the verify-step
+    GEMM shapes hit the ScheduleCache at 100% over the timed run (they
+    are pre-registered at engine construction); pool.check() holds after
+    every step, rollback steps included (audit mode).
 
     PYTHONPATH=src python -m benchmarks.serve_bench          # full trace
     PYTHONPATH=src python -m benchmarks.serve_bench --dry    # CI smoke
@@ -147,6 +166,25 @@ def _overload_trace(n_requests: int, vocab: int, seed: int = 1):
                             prompt=rng.integers(3, vocab, plen
                                                 ).astype(np.int32),
                             max_new_tokens=mnew, eos=-1, ttft_slo=slo))
+    return reqs
+
+
+def _rep_trace(n_requests: int, vocab: int, seed: int = 2,
+               max_new: int = 24):
+    """Repetition-heavy trace for the speculative rows: every prompt is a
+    short phrase looped several times plus a per-request salt — the
+    workload prompt-lookup drafting exists for (templated chat, code
+    edits, RAG quote-backs), with decode budgets long enough that the
+    draft's history window sees the model's own produced loop too."""
+    from repro.serving.engine import Request
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n_requests):
+        phrase = rng.integers(3, vocab, 6).astype(np.int32)
+        salt = rng.integers(3, vocab, 2).astype(np.int32)
+        prompt = np.concatenate([salt] + [phrase] * 4)
+        reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=max_new,
+                            eos=-1))
     return reqs
 
 
@@ -288,7 +326,8 @@ def run_bench(n_requests: int, slots: int, max_len: int,
     by["paged"]["gather_gemms_in_applied_log"] = not missing
 
     prows, pfail = run_policy_bench(cfg, params, slots, n_requests=12)
-    return rows + prows, failures + pfail
+    srows, sfail = run_spec_bench(cfg, params, slots)
+    return rows + prows + srows, failures + pfail + sfail
 
 
 #: the overload trace's sizes (100-token blocker, hog decode budgets) and
@@ -365,6 +404,83 @@ def run_policy_bench(cfg, params, slots: int, n_requests: int):
     return rows, failures
 
 
+#: rep-trace window: 26-token looped prompts + 24 decode tokens fit with
+#: speculative headroom; fixed so the dispatch-count gates are
+#: independent of the CLI --max-len.
+SPEC_MAX_LEN = 96
+
+
+def run_spec_bench(cfg, params, slots: int, n_requests: int = 8):
+    """Speculative-decoding rows on the repetition-heavy trace (module
+    docstring).  Both spec engines run ``audit=True`` — ``pool.check()``
+    after every step, rollback steps included, is part of the acceptance
+    surface.  The model row SELF-drafts (draft config == target, shared
+    weights): with random init no separate small model correlates with
+    the target, so self-drafting is the honest way to exercise the
+    full draft/verify/rollback machinery at high acceptance — real
+    deployments plug a trained small config into the same ModelDraft."""
+    import dataclasses
+
+    from repro.serving.engine import ContinuousEngine
+    from repro.serving.spec import ModelDraft
+
+    reqs = _rep_trace(n_requests, cfg.vocab)
+
+    def engines():
+        return {
+            "paged_rep": ContinuousEngine(cfg, params, slots=slots,
+                                          max_len=SPEC_MAX_LEN, audit=True),
+            "paged_spec_ngram": ContinuousEngine(
+                cfg, params, slots=slots, max_len=SPEC_MAX_LEN,
+                spec="ngram", spec_k=4, audit=True),
+            "paged_spec_model": ContinuousEngine(
+                cfg, params, slots=slots, max_len=SPEC_MAX_LEN,
+                spec=ModelDraft(cfg, params), spec_k=4, audit=True),
+        }
+
+    # warmup traces the verify/draft programs once (cached per config)
+    for eng in engines().values():
+        eng.run([dataclasses.replace(r) for r in reqs])
+
+    rows, tokens, failures = [], {}, []
+    for name, eng in engines().items():
+        before = eng.schedule.stats()
+        t0 = time.perf_counter()
+        res = eng.run([dataclasses.replace(r) for r in reqs])
+        row = _summarize(name, res, time.perf_counter() - t0, eng)
+        row["pool"] = eng.pool.stats()
+        row["chunk_steps"] = eng.chunk_steps
+        after = eng.schedule.stats()
+        hits = after["hits"] - before["hits"]
+        misses = after["misses"] - before["misses"]
+        row["schedule_hit_rate_run"] = round(hits / max(hits + misses, 1), 4)
+        if eng.spec is not None:
+            row["spec"] = eng.spec_stats()
+        rows.append(row)
+        tokens[name] = {r.rid: list(map(int, r.tokens)) for r in res}
+
+    by = {r["engine"]: r for r in rows}
+    ref_steps = by["paged_rep"]["decode_steps"]
+    for name in ("paged_spec_ngram", "paged_spec_model"):
+        if tokens[name] != tokens["paged_rep"]:
+            failures.append(
+                f"{name} output != paged output (greedy) — speculative "
+                f"accept/rollback changed the tokens")
+        steps = by[name]["decode_steps"]
+        if steps * 1.5 > ref_steps:
+            failures.append(
+                f"{name} took {steps} decode dispatches vs paged "
+                f"{ref_steps} — below the gated 1.5x reduction")
+        if by[name]["schedule_hit_rate_run"] < 1.0:
+            failures.append(
+                f"{name} explored the schedule space during the timed run "
+                f"— verify shapes are not pre-registered at construction")
+        if by[name]["spec"]["avg_accept_len"] <= 1.0:
+            failures.append(f"{name} never accepted a draft — the "
+                            f"speculative path is vacuous")
+    return rows, failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--dry", action="store_true",
@@ -425,6 +541,18 @@ def main(argv=None) -> int:
           f"{ps['p95_ttft_steps']:.0f} dispatches "
           f"({ps['preemptions']} preemptions, "
           f"{ps['resumed_requests']} requests resumed token-identically)")
+    sr, sn, sm = (by["paged_rep"], by["paged_spec_ngram"],
+                  by["paged_spec_model"])
+    print(f"speculative decode (rep trace): paged {sr['decode_steps']} "
+          f"dispatches -> ngram {sn['decode_steps']} "
+          f"({sr['decode_steps']/max(sn['decode_steps'],1):.1f}x, accept "
+          f"len {sn['spec']['avg_accept_len']:.2f}), model "
+          f"{sm['decode_steps']} "
+          f"({sr['decode_steps']/max(sm['decode_steps'],1):.1f}x, accept "
+          f"len {sm['spec']['avg_accept_len']:.2f}, "
+          f"{sm['spec']['draft_steps']} draft dispatches); verify-shape "
+          f"schedule hit rate {sn['schedule_hit_rate_run']*100:.0f}%/"
+          f"{sm['schedule_hit_rate_run']*100:.0f}%")
     for msg in failures:
         print(f"FAIL: {msg}")
     return 1 if failures else 0

@@ -44,6 +44,12 @@ CHECKS = [
     ("serve", "engine=paged.pool.shared_token_hits", "higher", 0.10),
     ("serve", "engine=policy_best_fit.avg_pool_util", "higher", 0.10),
     ("serve", "engine=policy_slo_preempt.p95_ttft_steps", "lower", 0.15),
+    # speculative decoding (rep trace): dispatch counts and acceptance
+    # length are deterministic (greedy accept against a fixed trace)
+    ("serve", "engine=paged_spec_ngram.decode_steps", "lower", 0.10),
+    ("serve", "engine=paged_spec_model.decode_steps", "lower", 0.10),
+    ("serve", "engine=paged_spec_ngram.spec.avg_accept_len", "higher", 0.10),
+    ("serve", "engine=paged_spec_model.spec.avg_accept_len", "higher", 0.05),
 ]
 
 

@@ -7,12 +7,16 @@
 # mode (asserts dense-continuous beats wave, paged == dense
 # token-for-token, scheduled-backend == XLA-backend token-for-token with a
 # 100% schedule-cache hit rate, paged peak KV below dense, decode gap
-# bounded by one chunk, and the scheduling-policy gates on the overload
+# bounded by one chunk, the scheduling-policy gates on the overload
 # trace: best_fit pool-utilization and slo_preempt p95-TTFT wins over
-# fifo with token-identical output and a clean pool.check() every step),
-# then a paged-engine smoke: tiny config, 4 requests sharing a prompt
-# prefix — asserts block reuse actually happened.  CI diffs the smoke
-# JSON artifacts against the committed baselines afterwards
+# fifo with token-identical output and a clean pool.check() every step,
+# and the speculative gates on the repetition trace: ngram + model spec
+# rows token-identical to vanilla paged with >= 1.5x fewer decode
+# dispatches and 100% verify-shape schedule hits), then a paged-engine
+# smoke: tiny config, 4 requests sharing a prompt prefix — asserts block
+# reuse actually happened, plus an ngram speculative run over the same
+# engine shape asserting identical tokens in fewer dispatches.  CI diffs
+# the smoke JSON artifacts against the committed baselines afterwards
 # (scripts/bench_gate.py).
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -48,4 +52,20 @@ kv = eng.kv_bytes()
 print(f"[smoke] paged engine OK: {st['shared_token_hits']} shared-prefix "
       f"token hits, peak KV {kv['peak']}/{kv['allocated']} B, "
       f"{eng.chunk_steps} chunk batches")
+
+# speculative smoke: same trace through ngram drafting — identical greedy
+# tokens, fewer decode dispatches, clean pool after every audited step.
+base = {r.rid: list(map(int, r.tokens)) for r in res}
+sp = ContinuousEngine(cfg, params, slots=2, max_len=96, spec="ngram",
+                      spec_k=4, audit=True)
+sres = sp.run([Request(rid=r.rid, prompt=r.prompt.copy(),
+                       max_new_tokens=r.max_new_tokens, eos=r.eos)
+               for r in reqs])
+assert {r.rid: list(map(int, r.tokens)) for r in sres} == base
+assert sp.steps < eng.steps, (sp.steps, eng.steps)
+sp.pool.check()
+ss = sp.spec_stats()
+print(f"[smoke] spec engine OK: {ss['tokens_emitted']} tokens in "
+      f"{ss['verify_steps']} verify dispatches (vanilla {eng.steps}), "
+      f"avg accept len {ss['avg_accept_len']:.2f}")
 EOF

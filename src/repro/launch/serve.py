@@ -15,9 +15,16 @@ at-risk request may evict the decoding victim with the most reclaimable
 blocks, which resumes later via prefix-cache skip-prefill with its
 produced tokens intact.
 
+Speculative decoding (``--spec ngram`` / ``--spec model:<arch>``,
+``--spec-k``): the paged engine verifies up to k drafted tokens per
+dispatch (token-identical greedy output, fewer engine steps; see
+``serving.spec``).
+
 CLI (CPU demo sizes):
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
         --scaled-down --requests 8 --max-new 16 --quant
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
+        --scaled-down --requests 8 --spec ngram --spec-k 4
 """
 
 from __future__ import annotations
@@ -71,6 +78,20 @@ def main(argv=None):
     ap.add_argument("--ttft-slo", type=float, default=0.0,
                     help="per-request TTFT deadline in seconds (0 = no "
                          "SLO); only the slo_preempt policy acts on it")
+    ap.add_argument("--spec", default=None, metavar="ngram|model:<arch>",
+                    help="speculative decoding (paged engine, greedy "
+                         "requests only): 'ngram' = prompt-lookup drafting "
+                         "from each slot's own token history (model-free); "
+                         "'model:<arch>' = a small draft model proposes "
+                         "(e.g. model:qwen2-0.5b; the draft shares the "
+                         "target's KV-pool block tables — same arch as "
+                         "--arch self-drafts with the target weights, "
+                         "other archs run freshly initialized as a demo). "
+                         "Output stays token-identical to vanilla decode; "
+                         "accepted drafts cut engine dispatches")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="max draft tokens verified per engine step "
+                         "(the verify batch is slots x (k+1); default 4)")
     ap.add_argument("--quant", action="store_true",
                     help="int8 GTA serving path (QuantTensor weights)")
     ap.add_argument("--gemm-backend", choices=("xla", "scheduled"),
@@ -116,15 +137,44 @@ def main(argv=None):
                     ttft_slo=args.ttft_slo or None)
             for i in range(args.requests)]
 
+    spec = None
+    if args.spec:
+        if args.spec == "ngram":
+            spec = "ngram"
+        elif args.spec.startswith("model:"):
+            from repro.serving.spec import ModelDraft
+            draft_arch = args.spec.split(":", 1)[1]
+            draft_cfg = CONFIGS.get(draft_arch)
+            if args.scaled_down:
+                draft_cfg = draft_cfg.scaled_down()
+            if draft_cfg.name == cfg.name:
+                # self-draft: share the target weights (full acceptance —
+                # the mechanism demo without trained checkpoints)
+                draft_cfg, draft_params = cfg, params
+            else:
+                draft_params = N.init(draft_cfg, jax.random.PRNGKey(1))
+            spec = ModelDraft(draft_cfg, draft_params)
+        else:
+            raise SystemExit(f"--spec {args.spec!r}: expected 'ngram' or "
+                             f"'model:<arch>'")
+        if args.temperature > 0:
+            raise SystemExit("--spec is greedy-only: drop --temperature")
+
     t0 = time.perf_counter()
     if args.engine == "wave":
+        if spec is not None:
+            raise SystemExit("--spec needs the continuous paged engine")
         eng = WaveEngine(cfg, params, slots=args.slots, max_len=args.max_len)
         results: List[Result] = eng.run(reqs)
     else:
+        if spec is not None and args.engine == "dense":
+            raise SystemExit("--spec needs the paged engine (KV rollback "
+                             "lives in the block pool)")
         eng = ContinuousEngine(cfg, params, slots=args.slots,
                                max_len=args.max_len,
                                paged=args.engine != "dense",
-                               policy=args.policy)
+                               policy=args.policy,
+                               spec=spec, spec_k=args.spec_k)
         eng.start()
         for r in reqs:
             if args.arrival_ms > 0:
@@ -154,6 +204,13 @@ def main(argv=None):
             print(f"[serve] policy {eng.policy.name}: mean pool util "
                   f"{eng.avg_pool_util():.2f}, {eng.preemptions} "
                   f"preemptions, {ps['backoffs']} admission backoffs")
+            if eng.spec is not None:
+                sp = eng.spec_stats()
+                print(f"[serve] spec {sp['provider']} k={sp['k']}: "
+                      f"{sp['tokens_emitted']} tokens in "
+                      f"{sp['verify_steps']} verify dispatches "
+                      f"(avg accept len {sp['avg_accept_len']:.2f}, "
+                      f"{sp['draft_steps']} draft dispatches)")
     for r in sorted(results, key=lambda r: r.rid)[:4]:
         print(f"  rid={r.rid} new_tokens={len(r.tokens)} "
               f"prefill={r.prefill_s*1e3:.0f}ms decode={r.decode_s*1e3:.0f}ms")

@@ -138,10 +138,18 @@ class ModelConfig:
         return kinds <= {BlockKind.MAMBA2}
 
     @property
+    def has_recurrent_state(self) -> bool:
+        """Carries SSM blocks, i.e. per-slot recurrent state that is not
+        block-addressable — the single predicate behind every serving
+        restriction on hybrids (no KV-prefix sharing, no speculative
+        rollback; ``KVPool.truncate`` is attention-side only)."""
+        return BlockKind.MAMBA2 in set(self.pattern) | set(self.tail)
+
+    @property
     def sub_quadratic(self) -> bool:
         """Eligible for long_500k: SSM or hybrid (no dense-KV-growth-bound
         full-attention stack)."""
-        return BlockKind.MAMBA2 in set(self.pattern) | set(self.tail)
+        return self.has_recurrent_state
 
     def validate(self) -> "ModelConfig":
         pat = max(1, len(self.pattern))

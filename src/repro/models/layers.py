@@ -251,8 +251,23 @@ def embed_apply(p: Dict, tokens: jax.Array, dtype) -> jax.Array:
 
 
 def head_apply(table_or_w: jax.Array, x: jax.Array,
-               cap: Optional[float] = None) -> jax.Array:
-    """Logits: x (B,S,D) @ w (V,D)^T -> fp32 (B,S,V), with optional softcap."""
+               cap: Optional[float] = None, *, backend=None) -> jax.Array:
+    """Logits: x (B,S,D) @ w (V,D)^T -> fp32 (B,S,V), with optional softcap.
+
+    ``backend`` (``kernels.ops.GemmBackend``) routes the (rows, vocab, d)
+    contraction — the hottest remaining unscheduled GEMM once the
+    multi-token verify step lands — through the scheduled fused Pallas
+    kernels: leading dims collapse to one (B*S, D) dispatch against the
+    transposed table and the paper-§5 cache picks dataflow/fold for the
+    shape the engine pre-registers as (head_rows, vocab, d).  QuantTensor
+    heads (none exist today — ``quant.policy`` quantizes projections
+    only) fall back to the XLA path."""
+    if backend is not None and not hasattr(table_or_w, "q"):
+        lead, d = x.shape[:-1], x.shape[-1]
+        w = jnp.swapaxes(table_or_w.astype(x.dtype), 0, 1)   # (D, V)
+        logits = backend.matmul(x.reshape(-1, d), w,
+                                out_dtype=jnp.float32)
+        return softcap(logits.reshape(lead + (logits.shape[-1],)), cap)
     logits = jax.lax.dot_general(
         x, table_or_w.astype(x.dtype),
         (((x.ndim - 1,), (1,)), ((), ())),

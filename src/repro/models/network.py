@@ -297,7 +297,8 @@ def forward(params: PyTree, cfg: ModelConfig, batch: Dict
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     head = (params["embed"]["table"] if cfg.tie_embeddings
             else params["lm_head"])
-    logits = shard_act(head_apply(head, x, cfg.final_logit_softcap), "b.m")
+    logits = shard_act(head_apply(head, x, cfg.final_logit_softcap,
+                                  backend=gemm_backend(cfg)), "b.m")
     return logits, aux
 
 
@@ -365,12 +366,15 @@ def _serve(params: PyTree, cfg: ModelConfig, batch: Dict, caches: PyTree,
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     head = (params["embed"]["table"] if cfg.tie_embeddings
             else params["lm_head"])
+    backend = gemm_backend(cfg)
     if last_index is not None:   # ragged: logits of each row's last REAL token
         idx = jnp.asarray(last_index, jnp.int32)
         x = jnp.take_along_axis(x, idx[:, None, None], axis=1)
-        logits = head_apply(head, x, cfg.final_logit_softcap)
+        logits = head_apply(head, x, cfg.final_logit_softcap,
+                            backend=backend)
     else:
-        logits = head_apply(head, x[:, -1:], cfg.final_logit_softcap)
+        logits = head_apply(head, x[:, -1:], cfg.final_logit_softcap,
+                            backend=backend)
     return logits[:, 0], new_caches
 
 
@@ -584,6 +588,65 @@ def prefill_paged_chunk(params: PyTree, cfg: ModelConfig, tokens: jax.Array,
                               pos_advance=lens, seq_lens=lens,
                               last_index=last_index)
     return logits, scatter_slot_view(caches, new_view, slot_ids)
+
+
+def verify_paged_chunk(params: PyTree, cfg: ModelConfig, tokens: jax.Array,
+                       caches: PyTree, slot_ids: jax.Array,
+                       block_rows: jax.Array, seq_lens: jax.Array
+                       ) -> Tuple[jax.Array, PyTree]:
+    """Speculative-decoding VERIFY step: score k+1 tokens per slot in one
+    call and return logits at EVERY position.
+
+    tokens (B, L): per row ``[cur_tok, draft_1 .. draft_k]`` right-padded
+    to the engine's fixed ``L = spec_k + 1`` (one jitted program serves
+    every step); seq_lens (B,) the REAL token count per row (``k_row + 1``
+    for verifying rows, 0 for rows riding along masked).  Reuses the
+    chunked-prefill machinery's masked ragged layout exactly — each row's
+    queries start at its slot's cache cursor, attend over all resident KV
+    plus the in-chunk causal prefix through the block table, and KV for
+    the speculated span is written through the table (positions past the
+    validity bound stay unobservable garbage).  Returns logits (B, L, V)
+    so the host can greedy-verify: ``argmax(logits[i, j])`` is the
+    target's token AFTER consuming ``tokens[i, j]`` — accept the longest
+    draft prefix that matches, then roll the cache cursors back with
+    :func:`set_slot_pos` (this function advances them by ``seq_lens``,
+    i.e. assumes full acceptance; rejection is a host-side rollback).
+
+    Unlike :func:`prefill_paged_chunk` there is no ``last_index`` gather:
+    the head applies to ALL B*L rows — the ``(B*L, vocab, d)`` GEMM the
+    engine pre-registers in the ScheduleCache as the verify shape family.
+    """
+    lens = jnp.asarray(seq_lens, jnp.int32)
+    view = gather_slot_view(caches, slot_ids)
+    pos0 = _first_pos_leaf(view)
+    x = _embed_inputs(params, cfg, {"tokens": tokens})
+    x, new_view, _ = _run_blocks(params, cfg, x, pos_offset=pos0,
+                                 caches=view, block_table=block_rows,
+                                 pos_advance=lens, seq_lens=lens)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = (params["embed"]["table"] if cfg.tie_embeddings
+            else params["lm_head"])
+    logits = head_apply(head, x, cfg.final_logit_softcap,
+                        backend=gemm_backend(cfg))
+    return logits, scatter_slot_view(caches, new_view, slot_ids)
+
+
+def set_slot_pos(caches: PyTree, pos: jax.Array) -> PyTree:
+    """Overwrite every per-slot cache cursor with ``pos`` (slots,) —
+    the KV-rollback half of speculative decoding: the verify step
+    advanced each cursor by the full speculated span, the host accepted a
+    prefix, and this resets the validity bound to the accepted length
+    (rejected positions become unobservable garbage that the next write
+    overwrites).  Pool leaves and recurrent state are untouched —
+    rollback is cursor-only, which is exactly why hybrid (SSM) archs
+    cannot speculate."""
+    pos = jnp.asarray(pos, jnp.int32)
+
+    def fn(path, leaf):
+        if "pos" in _path_keys(path):
+            return jnp.broadcast_to(pos.astype(leaf.dtype), leaf.shape)
+        return leaf
+    return jax.tree_util.tree_map_with_path(fn, caches)
 
 
 def _first_pos_leaf(view: PyTree) -> jax.Array:

@@ -6,6 +6,10 @@ prefix sharing; ``paged=False`` restores the dense stripes);
 ``WaveEngine`` keeps the seed wave-drain behavior for benchmarks.
 Admission order and preempt-by-eviction are pluggable
 (``policy.SchedulerPolicy``: ``fifo`` / ``best_fit`` / ``slo_preempt``).
+Speculative decoding (``spec.DraftProvider``: ``ngram`` prompt-lookup
+drafting, ``ModelDraft`` small-model drafting over the shared block
+tables) turns decode into draft/verify multi-token steps with KV
+rollback (``KVPool.truncate``), token-identical to vanilla greedy.
 ``ScheduleCache`` (re-exported from ``core.scheduler``) is the shape ->
 (dataflow, arrangement, k_fold) memo the engine hot path — including the
 paged-decode gather GEMMs — and ``kernels.ops.matmul`` consult.
@@ -19,3 +23,5 @@ from repro.serving.policy import (BestFitPolicy, FifoPolicy,  # noqa: F401
                                   PendingView, SchedulerPolicy,
                                   SloPreemptPolicy, SlotView, make_policy,
                                   register_policy)
+from repro.serving.spec import (DraftProvider, ModelDraft,  # noqa: F401
+                                NgramDraft, make_provider)

@@ -70,6 +70,26 @@ are delegated to a pluggable :class:`repro.serving.policy.SchedulerPolicy`
     dispatches before the first token — the deterministic TTFT proxy
     serve_bench gates on).
 
+**Speculative decoding (paged path, ``spec=``).**  With a
+:class:`repro.serving.spec.DraftProvider` (``spec="ngram"`` prompt-lookup
+drafting, or a ``ModelDraft`` running a small draft config over the SAME
+pool block tables), decode becomes DRAFT/VERIFY rounds: every step the
+provider proposes up to ``spec_k`` tokens per slot and ONE jitted
+``verify_chunk`` dispatch scores ``[cur_tok, drafts...]`` for all slots
+at once — the chunked-prefill masked ragged layout at a fixed
+``(slots, spec_k + 1)`` shape, pre-registered in the ScheduleCache at
+construction.  The host accepts the longest draft prefix matching the
+target's own argmax (greedy-only; sampled requests are rejected at
+``submit``), so output is token-identical to vanilla greedy decode while
+each dispatch can emit up to ``spec_k + 1`` tokens.  Rejected tails are
+rolled back: cache cursors via ``network.set_slot_pos``, pool blocks via
+``KVPool.truncate`` — spec admissions reserve the decode span LAZILY
+(``KVPool.extend``, one verify span ahead) so rollback genuinely returns
+blocks; a slot whose span cannot be hosted is preempted through the PR-4
+machinery and resumes exactly.  Hybrid (SSM) configs are rejected at
+construction: recurrent state has no truncate.  Telemetry:
+``spec_stats()`` / ``avg_accept_len()``.
+
 **ScheduleCache contract.**  The engine owns a
 :class:`repro.core.scheduler.ScheduleCache` and, on every admission and
 decode-shape change, resolves the step's dominant p-GEMMs
@@ -109,10 +129,11 @@ from repro.core.precision import precision_for_dtype
 from repro.core.scheduler import ScheduleCache
 from repro.kernels import paged_attention as PA
 from repro.models import network as N
-from repro.models.config import BlockKind, ModelConfig
+from repro.models.config import ModelConfig
 from repro.serving.kv_pool import KVPool, blocks_for
 from repro.serving.policy import (PendingView, SchedulerPolicy, SlotView,
                                   make_policy)
+from repro.serving.spec import DraftProvider, make_provider
 
 PyTree = Any
 
@@ -172,7 +193,17 @@ def _engine_fns(cfg: ModelConfig, max_len: int) -> Dict[str, Any]:
         tok, key = _sample_traced(key, logits, temps)
         return tok, caches, key
 
+    def verify_chunk(params, toks, caches, slot_ids, bt, lens):
+        # speculative verify is greedy-only (the engine rejects
+        # temperature > 0 at submit), so argmax happens on-device and one
+        # (slots, k+1) int32 array crosses to the host per step.
+        logits, caches = N.verify_paged_chunk(params, cfg, toks, caches,
+                                              slot_ids, bt, lens)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches
+
     fns = {
+        "verify_chunk": jax.jit(verify_chunk),
+        "set_pos": jax.jit(N.set_slot_pos),
         "decode_sample": jax.jit(decode_sample),
         "admit_ragged": jax.jit(admit_ragged),
         "decode_sample_paged": jax.jit(decode_sample_paged),
@@ -290,9 +321,36 @@ class ContinuousEngine:
                  prefill_chunk: Optional[int] = None,
                  share_prefixes: bool = True,
                  policy: Union[str, SchedulerPolicy] = "fifo",
+                 spec: Union[str, DraftProvider, None] = None,
+                 spec_k: int = 4,
                  audit: bool = False):
         if cfg.is_encoder_only:
             raise ValueError(f"{cfg.name} is encoder-only: no decode serving")
+        self.spec: Optional[DraftProvider] = None
+        if spec is not None:
+            if not paged:
+                raise ValueError(
+                    "speculative decoding serves through the paged KV pool "
+                    "(lazy extend + truncate rollback); the dense "
+                    "(paged=False) engine has no pool — drop spec= or use "
+                    "paged=True")
+            if cfg.has_recurrent_state:
+                raise ValueError(
+                    f"{cfg.name} is a hybrid (SSM) arch: the verify step "
+                    f"rolls rejected tokens back by cursor truncation, and "
+                    f"recurrent state cannot be rolled back (ROADMAP 'SSM "
+                    f"state checkpointing' is the missing half) — spec= is "
+                    f"attention-only for now")
+            if spec_k < 1:
+                raise ValueError(f"spec_k must be >= 1, got {spec_k}")
+            self.spec = make_provider(spec)
+        self.spec_k = spec_k
+        #: speculative telemetry: tokens emitted by verify steps, draft
+        #: tokens proposed, draft tokens accepted (emitted - verify steps)
+        self.spec_emitted = 0
+        self.spec_drafted = 0
+        self.spec_accepted = 0
+        self.spec_slot_verifies = 0   # (slot, verify-step) events
         self.cfg = cfg
         self.policy = (make_policy(policy) if isinstance(policy, str)
                        else policy)
@@ -361,9 +419,8 @@ class ContinuousEngine:
             # carry recurrent state the pool cannot reconstruct from
             # blocks, so sharing (= skipping the shared prefill) would
             # silently drop the prefix from the SSM recurrence.  Disable.
-            kinds = tuple(cfg.pattern) + tuple(cfg.tail)
             share_prefixes = (share_prefixes
-                              and BlockKind.MAMBA2 not in kinds)
+                              and not cfg.has_recurrent_state)
             self.pool: Optional[KVPool] = KVPool(
                 kv_blocks, block_size, slots=slots, max_len=max_len,
                 share_prefixes=share_prefixes)
@@ -418,6 +475,13 @@ class ContinuousEngine:
             self._register_gemms(self.slots * self.prefill_chunk, self.slots)
             for M, Nn, K in PA.gather_gemm_shapes(cfg, block_size):
                 self.schedule.resolve(M, Nn, K, self._prec)
+        if self.spec is not None:
+            # the verify-step shape family (slots * (k+1) interior tokens,
+            # and the head over ALL of them): pre-resolved here so
+            # steady-state speculative serving is a pure cache-hit dispatch
+            L = self.spec_k + 1
+            self._register_gemms(self.slots * L, self.slots * L)
+            self.spec.bind(self)
 
     # -- async request/result API -------------------------------------------
 
@@ -430,6 +494,12 @@ class ContinuousEngine:
                 f"prompt {len(req.prompt)} exceeds max_len {self.max_len}")
         if len(req.prompt) == 0:
             raise ValueError("empty prompt")
+        if self.spec is not None and req.temperature > 0:
+            raise ValueError(
+                "speculative decoding is greedy-only (accept-longest-prefix "
+                "against the target argmax; sampled verification needs "
+                "rejection sampling) — submit temperature=0 requests or "
+                "serve without spec=")
         with self._cv:
             self._pending.append(_Pending(req=req,
                                           t_submit=time.perf_counter()))
@@ -515,7 +585,8 @@ class ContinuousEngine:
                       evictable_hint: Optional[int] = None) -> PendingView:
         remaining = ent.req.max_new_tokens - len(ent.resume_tokens)
         probe = (self.pool.probe([int(t) for t in ent.full_prompt],
-                                 remaining, evictable_hint=evictable_hint)
+                                 self._reserve_horizon(remaining),
+                                 evictable_hint=evictable_hint)
                  if self.paged and self.policy.needs_probes else None)
         return PendingView(index=index, rid=ent.req.rid,
                            prompt_len=len(ent.full_prompt),
@@ -559,6 +630,14 @@ class ContinuousEngine:
                 "peak": per_block * self.pool.peak_used}
 
     # -- admission -----------------------------------------------------------
+
+    def _reserve_horizon(self, remaining_new: int) -> int:
+        """Decode positions an admission reserves up front: the whole
+        remaining budget normally (decode can never fail mid-flight), ONE
+        position under speculative decoding (the verify loop extends and
+        truncates the span per step — lazy reservation is what makes
+        rollback return real blocks)."""
+        return 1 if self.spec is not None else remaining_new
 
     def _free_slot(self) -> Optional[int]:
         for i, s in enumerate(self._slots):
@@ -607,11 +686,18 @@ class ContinuousEngine:
         preempted entry the admission prompt is prompt + produced tokens
         — the resident part skip-prefills via the prefix cache, so
         preempted work is not recomputed.  Returns False on pool
-        exhaustion — the request goes back to the queue."""
+        exhaustion — the request goes back to the queue.
+
+        Speculative mode reserves LAZILY: only the prompt (plus one
+        decode position) is reserved here, and each verify step extends
+        the table one speculative span ahead (``KVPool.extend``) so that
+        ``KVPool.truncate`` can genuinely return rejected-tail blocks —
+        the non-spec engine keeps the reserve-everything-up-front
+        guarantee unchanged."""
         req = ent.req
         remaining_new = req.max_new_tokens - len(ent.resume_tokens)
         plan = self.pool.admit(slot, [int(t) for t in ent.full_prompt],
-                               remaining_new)
+                               self._reserve_horizon(remaining_new))
         if plan is None:
             return False
         t0 = time.perf_counter()
@@ -620,6 +706,8 @@ class ContinuousEngine:
         self.caches = self._fns["reset_slot"](
             self.caches, jnp.asarray(slot, jnp.int32),
             jnp.asarray(plan.shared_tokens, jnp.int32))
+        if self.spec is not None:
+            self.spec.on_reset_slot(self, slot, plan.shared_tokens)
         self._pos[slot] = plan.shared_tokens
         rest = np.asarray(ent.full_prompt[plan.shared_tokens:], np.int32)
         L = self.prefill_chunk
@@ -748,6 +836,8 @@ class ContinuousEngine:
             src = jnp.asarray([c[0] for c in copies], jnp.int32)
             dst = jnp.asarray([c[1] for c in copies], jnp.int32)
             self.caches = self._fns["copy_blocks"](self.caches, src, dst)
+            if self.spec is not None:
+                self.spec.on_apply_cow(self, src, dst)
             self._bt = jnp.asarray(self.pool.tables)
 
     def _prefill_chunk_step(self, pre: List[int]) -> None:
@@ -772,11 +862,18 @@ class ContinuousEngine:
         self._register_gemms(self.slots * L, self.slots)
 
         t0 = time.perf_counter()
+        last_idx = np.maximum(lens - 1, 0)
         tok, self.caches, self.key = self._fns["prefill_chunk"](
             self.params, jnp.asarray(toks), self.caches, self._slot_ids,
             self._bt, jnp.asarray(lens),
-            jnp.asarray(np.maximum(lens - 1, 0)), self.key,
+            jnp.asarray(last_idx), self.key,
             jnp.asarray(temps))
+        if self.spec is not None:
+            # the draft model prefills the SAME chunk through the same
+            # tables, so its KV stays position-for-position resident with
+            # the target's (shared prefixes included — both models wrote
+            # the cached blocks when they were first prefilled).
+            self.spec.on_prefill_chunk(self, toks, lens, last_idx)
         self.chunk_steps += 1
         if any(s is not None and s.phase == "decode" for s in self._slots):
             self._chunks_since_decode += 1
@@ -839,7 +936,15 @@ class ContinuousEngine:
                   if s is not None and s.phase == "decode"]
         if not active:
             return self._end_step()
+        if self.spec is not None:
+            self._spec_step(active)
+        else:
+            self._decode_step(active)
+        self._admit()
+        return self._end_step()
 
+    def _decode_step(self, active: List[int]) -> None:
+        """ONE batched single-token decode dispatch over ``active``."""
         self._register_gemms(self.slots, self.slots)
         toks = np.zeros((self.slots, 1), np.int32)
         temps = np.zeros(self.slots, np.float32)
@@ -883,8 +988,145 @@ class ContinuousEngine:
                     or len(st.produced) >= st.req.max_new_tokens
                     or self._pos[i] >= self.max_len):
                 self._finish(i)
-        self._admit()
-        return self._end_step()
+
+    # -- the speculative verify step ------------------------------------------
+
+    def _spec_step(self, active: List[int]) -> None:
+        """One DRAFT/VERIFY round over the decoding slots.
+
+        Per slot: extend the block table one speculative span ahead
+        (lazy reservation), COW-fork anything the span writes would
+        touch, let the draft provider propose up to k tokens, then score
+        ``[cur_tok, draft_1..draft_k]`` for every slot in ONE jitted
+        ``verify_chunk`` dispatch (fixed (slots, k+1) shape — rows with
+        shorter or no drafts ride along masked).  The host accepts the
+        longest draft prefix matching the target's own argmax — between
+        1 and k+1 tokens emitted per dispatch, token-identical to
+        vanilla greedy decode by construction — and rolls the rejected
+        tail back: cache cursors via ``set_pos``, pool blocks via
+        ``KVPool.truncate``.  A slot whose span cannot be hosted even at
+        k = 0 is preempted (re-queued with produced tokens; the freed
+        blocks guarantee its lone re-admission succeeds)."""
+        L = self.spec_k + 1
+        ks: Dict[int, int] = {}
+        run: List[int] = []
+        grew = False
+        for i in active:
+            st = self._slots[i]
+            remaining = st.req.max_new_tokens - len(st.produced)
+            headroom = self.max_len - int(self._pos[i]) - 1
+            k_i = max(0, min(self.spec_k, remaining - 1, headroom))
+            nblk = int(self.pool.n_slot_blocks[i])
+            while not self.pool.extend(i, int(self._pos[i]) + k_i + 1):
+                if k_i == 0:
+                    k_i = -1
+                    break
+                k_i = 0
+            if k_i < 0:
+                self._preempt(i)
+                continue
+            grew |= int(self.pool.n_slot_blocks[i]) != nblk
+            ks[i] = k_i
+            run.append(i)
+        if not run:
+            return
+        # writable span BEFORE the draft runs: tables are shared, so the
+        # draft's speculative writes must land in forked blocks too.
+        for i in run:
+            self.pool.ensure_writable(i, int(self._pos[i]),
+                                      int(self._pos[i]) + ks[i])
+        self._apply_cow()
+        if grew:
+            # only re-upload the table mirror when extend actually grew a
+            # row (most steps speculate within the blocks already mapped;
+            # stale trailing entries from last step's truncate sit beyond
+            # the validity bound, so reads through them are masked).
+            self._bt = jnp.asarray(self.pool.tables)
+        drafts = self.spec.propose(self, run, ks)
+
+        toks = np.zeros((self.slots, L), np.int32)
+        lens = np.zeros(self.slots, np.int32)
+        for i in run:
+            d = [int(t) for t in drafts.get(i, [])][:ks[i]]
+            drafts[i] = d
+            toks[i, 0] = self._slots[i].cur_tok
+            toks[i, 1:1 + len(d)] = d
+            lens[i] = len(d) + 1
+        self._register_gemms(self.slots * L, self.slots * L)
+        tok, self.caches = self._fns["verify_chunk"](
+            self.params, jnp.asarray(toks), self.caches, self._slot_ids,
+            self._bt, jnp.asarray(lens))
+        self.steps += 1
+        self.decode_times.append(time.perf_counter())
+        self._chunks_since_decode = 0
+
+        tok_np = np.asarray(tok)
+        rejected = False
+        for i in run:
+            st = self._slots[i]
+            d = drafts[i]
+            emit: List[int] = []
+            j = 0
+            while True:
+                # emitting tok[j] is valid iff inputs 0..j were correct:
+                # input 0 is cur_tok (always), input j+1 is draft j —
+                # checked before advancing.  Budget/EOS stop emission.
+                t = int(tok_np[i, j])
+                emit.append(t)
+                if (t == st.req.eos or len(st.produced) + len(emit)
+                        >= st.req.max_new_tokens):
+                    break
+                if j < len(d) and d[j] == t:
+                    j += 1
+                    continue
+                break
+            st.produced.extend(emit)
+            st.cur_tok = emit[-1]
+            self._pos[i] += len(emit)
+            rejected |= len(emit) < int(lens[i])
+            self.spec_emitted += len(emit)
+            self.spec_drafted += len(d)
+            self.spec_accepted += len(emit) - 1
+            self.spec_slot_verifies += 1
+        # KV rollback: cursors back to the accepted lengths, rejected
+        # tail blocks back to the pool (ref-respecting truncate).  Full
+        # acceptance everywhere means the cursors already sit at the
+        # accepted lengths (verify advanced them by exactly ``lens``), so
+        # the reset dispatches are skipped on that hot path.
+        if rejected:
+            self.caches = self._fns["set_pos"](self.caches,
+                                               jnp.asarray(self._pos))
+            self.spec.on_rollback(self, self._pos)
+        for i in run:
+            self.pool.truncate(i, int(self._pos[i]))
+            st = self._slots[i]
+            if (st.cur_tok == st.req.eos
+                    or len(st.produced) >= st.req.max_new_tokens
+                    or self._pos[i] >= self.max_len):
+                self._finish(i)
+
+    def avg_accept_len(self) -> float:
+        """Mean tokens a slot emits per verify it takes part in (1.0 =
+        nothing ever accepted, spec_k + 1 = every draft always accepted)
+        — the deterministic speculation metric serve_bench gates on."""
+        return self.spec_emitted / max(self.spec_slot_verifies, 1)
+
+    def spec_stats(self) -> Dict[str, Any]:
+        """Speculation telemetry (zeros when spec is off)."""
+        return {
+            "provider": self.spec.name if self.spec else None,
+            "k": self.spec_k if self.spec else 0,
+            # steps counts ONLY verify dispatches in spec mode; without
+            # spec it counts vanilla decode dispatches, which are not
+            # verify steps — keep the zeros-when-off contract honest
+            "verify_steps": self.steps if self.spec else 0,
+            "tokens_emitted": self.spec_emitted,
+            "drafted": self.spec_drafted,
+            "accepted": self.spec_accepted,
+            "avg_accept_len": round(self.avg_accept_len(), 4),
+            "draft_steps": getattr(self.spec, "steps", 0),
+            "draft_chunk_steps": getattr(self.spec, "chunk_steps", 0),
+        }
 
     # -- synchronous convenience ----------------------------------------------
 

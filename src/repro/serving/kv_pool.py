@@ -46,6 +46,13 @@ Allocator invariants:
     — shared prefixes are block-aligned and writes start at the prompt
     tail — but the pool enforces the invariant regardless, so any future
     partial-block sharing policy inherits a safe write path.)
+  * **Lazy growth + rollback.**  ``extend`` grows a slot's table on
+    demand (the speculative-decoding engine reserves one verify step
+    ahead instead of the whole decode budget); ``truncate`` is the KV
+    rollback — it drops the slot's mapping beyond the accepted tokens,
+    freeing exclusively-owned tail blocks, unpinning (never freeing)
+    blocks another slot or the prefix cache still references, and
+    scrubbing pending COW copies into released blocks.
   * **Eviction.**  Finished slots release their refs but registered
     prefix blocks stay cached (the map's ref pins them).  When a
     reservation cannot be met, least-recently-used cached blocks with no
@@ -363,6 +370,58 @@ class KVPool:
                          shared_tokens=len(shared) * self.block_size,
                          shared_blocks=tuple(shared),
                          new_blocks=tuple(fresh))
+
+    def extend(self, slot: int, total_tokens: int) -> bool:
+        """Grow the slot's table to cover ``total_tokens`` logical
+        positions (allocating fresh blocks, evicting cached prefix blocks
+        under pressure).  The speculative-decoding engine reserves its
+        decode span LAZILY — one verify step ahead — instead of the whole
+        ``max_new`` budget up front, so rejected speculation can actually
+        return blocks to the pool (:meth:`truncate`).  Returns False
+        (clean backoff, counted) when the pool cannot grow the table; the
+        caller degrades (shorter speculation, or preempt-and-requeue)."""
+        need = min(blocks_for(total_tokens, self.block_size),
+                   self.blocks_per_slot)
+        cur = int(self.n_slot_blocks[slot])
+        if need <= cur:
+            return True
+        fresh = self.reserve(need - cur)
+        if fresh is None:
+            return False
+        self.tables[slot, cur:need] = fresh
+        self.n_slot_blocks[slot] = need
+        self._note_usage()
+        return True
+
+    def truncate(self, slot: int, n_keep: int) -> int:
+        """KV rollback: shrink the slot's mapping to the first
+        ``blocks_for(n_keep)`` blocks (the blocks still holding accepted
+        tokens) and release the tail — the blocks a rejected speculation
+        wrote garbage into.  Returns the number of table entries dropped.
+
+        Ref semantics mirror :meth:`release_slot`: a tail block another
+        slot still maps, or the prefix cache still pins, only loses THIS
+        slot's ref (unpinned, never freed); an exclusively-owned tail
+        block returns to the free list.  Pending copy-on-write forks whose
+        destination lies in the released tail are scrubbed — the fork
+        never materializes on device, so a freed destination block can be
+        re-allocated immediately without a stale copy racing it.
+        ``check()`` holds afterwards by construction."""
+        keep = min(blocks_for(max(0, int(n_keep)), self.block_size),
+                   self.blocks_per_slot)
+        cur = int(self.n_slot_blocks[slot])
+        if keep >= cur:
+            return 0
+        dropped = [int(b) for b in self.tables[slot, keep:cur]]
+        dropped_set = set(dropped)
+        if self.pending_copies:
+            self.pending_copies = [(s, d) for (s, d) in self.pending_copies
+                                   if d not in dropped_set]
+        for bid in dropped:
+            self._release_one(bid)
+        self.tables[slot, keep:cur] = NULL_BLOCK
+        self.n_slot_blocks[slot] = keep
+        return cur - keep
 
     def release_slot(self, slot: int, *, prompt: Optional[Sequence[int]]
                      = None) -> None:

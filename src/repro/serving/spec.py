@@ -1,0 +1,242 @@
+"""Speculative decoding: draft providers for the multi-token verify step.
+
+The paged engine's decode loop pays one full batched dispatch per
+accepted token.  Speculative decoding turns that loop into DRAFT /
+VERIFY rounds: a cheap provider proposes up to k next tokens per slot,
+the target model scores all of them in ONE ``network.verify_paged_chunk``
+call (the chunked-prefill masked ragged layout, so the batch is
+``(slots, k+1)`` instead of ``(slots, 1)``), and the engine greedily
+accepts the longest draft prefix that matches the target's own argmax —
+emitting between 1 and k+1 tokens per dispatch while staying
+token-identical to vanilla greedy decode (acceptance only ever shortcuts
+steps the target would have taken anyway).  Rejected tail KV is rolled
+back host-side: cache cursors via ``network.set_slot_pos``, pool blocks
+via ``KVPool.truncate`` (the engine reserves the speculative span lazily
+with ``KVPool.extend``, so rejection genuinely returns blocks).
+
+Two providers ship; both are deterministic given the engine state:
+
+  * :class:`NgramDraft` — prompt-lookup ("ngram") drafting: the slot's
+    own token history (prompt + produced) is searched for the most
+    recent earlier occurrence of its current tail n-gram, and the tokens
+    that followed it are proposed.  Model-free, zero extra dispatches —
+    the win on repetition-heavy traffic (code edits, RAG quote-backs,
+    chat templates), and the paper angle: acceptance turns many
+    batch-1-per-slot decode GEMMs into one wider verify GEMM, exactly
+    the shape family the schedule cache is built to exploit.
+  * :class:`ModelDraft` — a small draft ``ModelConfig`` (e.g. a 0.5B
+    drafting for a big target; the serve_bench row self-drafts so
+    acceptance is exercised without trained weights) runs k+1 cheap
+    decode dispatches to propose, with its OWN paged KV arrays addressed
+    through the SAME ``KVPool`` block tables as the target — one
+    allocator governs both models, so admission, prefix sharing,
+    copy-on-write and truncate stay single-sourced.  The draft mirrors
+    every table-affecting engine event through the ``on_*`` hooks below.
+
+Providers see the engine directly (they are engine components, not
+plugins crossing a stability boundary): ``propose`` may read slot state
+and dispatch draft programs; all TARGET-side mutation stays in the
+engine.  Hybrid (mamba2/zamba2) targets and drafts are rejected at
+construction — recurrent state has no truncate, so rollback cannot be
+made exact (ROADMAP: "SSM state checkpointing" is the missing half;
+``KVPool.truncate`` is the attention-side half).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import network as N
+from repro.models.config import ModelConfig
+
+PyTree = object
+
+
+class DraftProvider:
+    """Base provider: the protocol the engine drives.
+
+    ``propose`` is the only required override.  The ``on_*`` hooks mirror
+    engine events that touch the shared block tables; providers with
+    device-side state (ModelDraft) use them to keep their caches
+    coherent, host-only providers (NgramDraft) inherit the no-ops.
+    """
+
+    name = "base"
+
+    def bind(self, engine) -> None:
+        """Called once at engine construction (pool + caches exist)."""
+
+    def propose(self, engine, slots: List[int],
+                ks: Dict[int, int]) -> Dict[int, List[int]]:
+        """Draft up to ``ks[i]`` next tokens for each decoding slot in
+        ``slots``; fewer (or none) is always legal — the verify step
+        shrinks to what was proposed."""
+        raise NotImplementedError
+
+    def on_prefill_chunk(self, engine, toks: np.ndarray, lens: np.ndarray,
+                         last_idx: np.ndarray) -> None:
+        """A target prefill-chunk batch just ran (same layout/tables)."""
+
+    def on_reset_slot(self, engine, slot: int, pos_value: int) -> None:
+        """A slot was (re-)admitted with ``pos_value`` resident tokens."""
+
+    def on_apply_cow(self, engine, src: jax.Array, dst: jax.Array) -> None:
+        """COW forks were applied to the target pool; mirror them."""
+
+    def on_rollback(self, engine, pos: np.ndarray) -> None:
+        """Post-verify rollback: every slot's accepted resident length."""
+
+
+class NgramDraft(DraftProvider):
+    """Prompt-lookup drafting: propose the continuation that followed the
+    most recent earlier occurrence of the slot's current tail n-gram.
+    Tries the longest gram first (``n`` down to 1) so a long exact match
+    beats a short ambiguous one; no match proposes nothing and the slot
+    falls back to a plain 1-token verify that step."""
+
+    name = "ngram"
+
+    def __init__(self, n: int = 3, window: int = 1024):
+        if n < 1:
+            raise ValueError("ngram n must be >= 1")
+        self.n = n
+        #: history tokens searched (a bound keeps propose O(window * n))
+        self.window = window
+
+    def propose(self, engine, slots, ks):
+        out: Dict[int, List[int]] = {}
+        for i in slots:
+            st = engine._slots[i]
+            hist = ([int(t) for t in st.req.prompt]
+                    + [int(t) for t in st.produced])
+            out[i] = self.lookup(hist[-self.window:], ks[i])
+        return out
+
+    def lookup(self, hist: List[int], k: int) -> List[int]:
+        L = len(hist)
+        if k <= 0 or L < 2:
+            return []
+        for g in range(min(self.n, L - 1), 0, -1):
+            pat = hist[L - g:]
+            for idx in range(L - g - 1, -1, -1):   # most recent first
+                if hist[idx:idx + g] == pat:
+                    return hist[idx + g: idx + g + k]
+        return []
+
+
+class ModelDraft(DraftProvider):
+    """Small-model drafting over the shared block tables.
+
+    The draft keeps its own paged cache tree (its layers' geometry, the
+    target's ``(num_blocks, block_size)`` pool shape) and proposes by
+    running ``k+1`` batched greedy decode dispatches: consume the current
+    token (emit draft 1), consume draft 1 (emit draft 2), ..., and one
+    final consume of the last draft so the draft's KV covers every
+    position the target may accept — after rollback both models are
+    resident to exactly the accepted length.  Because tables are shared,
+    every allocator event (admission, COW fork, truncate, eviction)
+    applies to both models by construction; the ``on_*`` hooks only
+    mirror the DEVICE-side effects (chunk prefill, block copies, cursor
+    resets/rollbacks)."""
+
+    name = "model"
+
+    def __init__(self, cfg: ModelConfig, params: PyTree):
+        if cfg.has_recurrent_state:
+            raise ValueError(
+                f"draft {cfg.name} is a hybrid (SSM) arch: draft state "
+                f"rolls back every verify step, and recurrent state "
+                f"cannot (see KVPool.truncate — attention-side only)")
+        if cfg.is_encoder_only:
+            raise ValueError(f"draft {cfg.name} is encoder-only")
+        self.cfg = cfg
+        self.params = params
+        self.caches: PyTree = None
+        self.steps = 0          # draft decode dispatches (telemetry)
+        self.chunk_steps = 0    # draft prefill-chunk dispatches
+
+    def bind(self, engine) -> None:
+        if self.cfg.vocab != engine.cfg.vocab:
+            raise ValueError(
+                f"draft vocab {self.cfg.vocab} != target vocab "
+                f"{engine.cfg.vocab}: drafted ids would be meaningless")
+        # the engine's per-config jitted-program cache: a restarted engine
+        # over the same draft config must not recompile the draft either
+        from repro.serving.engine import _engine_fns
+        self._fns = _engine_fns(self.cfg, engine.max_len)
+        self.caches = N.expand_cache_pos(
+            N.init_paged_caches(self.cfg, engine.slots,
+                                engine.pool.num_blocks,
+                                engine.pool.block_size),
+            engine.slots)
+        self._key = jax.random.PRNGKey(0)
+        self._zero_temps = jnp.zeros((engine.slots,), jnp.float32)
+
+    def on_prefill_chunk(self, engine, toks, lens, last_idx) -> None:
+        _, self.caches, self._key = self._fns["prefill_chunk"](
+            self.params, jnp.asarray(toks), self.caches, engine._slot_ids,
+            engine._bt, jnp.asarray(lens), jnp.asarray(last_idx),
+            self._key, self._zero_temps)
+        self.chunk_steps += 1
+
+    def on_reset_slot(self, engine, slot, pos_value) -> None:
+        self.caches = self._fns["reset_slot"](
+            self.caches, jnp.asarray(slot, jnp.int32),
+            jnp.asarray(pos_value, jnp.int32))
+
+    def on_apply_cow(self, engine, src, dst) -> None:
+        self.caches = self._fns["copy_blocks"](self.caches, src, dst)
+
+    def on_rollback(self, engine, pos) -> None:
+        self.caches = self._fns["set_pos"](self.caches,
+                                           jnp.asarray(pos, jnp.int32))
+
+    def propose(self, engine, slots, ks):
+        out: Dict[int, List[int]] = {i: [] for i in slots}
+        if not slots:
+            return out
+        kmax = max(ks[i] for i in slots)
+        S = engine.slots
+        toks = np.zeros((S, 1), np.int32)
+        pos = engine._pos.copy()
+        for i in slots:
+            toks[i, 0] = engine._slots[i].cur_tok
+        # k_i + 1 consumes per slot: the extra one writes the last draft's
+        # KV so full acceptance leaves the draft resident too (rows past
+        # their budget ride along with adv == 0, writes masked as usual).
+        for j in range(kmax + 1):
+            adv = np.zeros(S, np.int32)
+            for i in slots:
+                if j <= ks[i]:
+                    adv[i] = 1
+            tok, self.caches, self._key = self._fns["decode_sample_paged"](
+                self.params, jnp.asarray(toks), self.caches,
+                jnp.asarray(pos), engine._bt, jnp.asarray(adv),
+                self._key, self._zero_temps)
+            self.steps += 1
+            pos += adv
+            tok_np = np.asarray(tok)
+            for i in slots:
+                if j < ks[i]:
+                    out[i].append(int(tok_np[i]))
+                    toks[i, 0] = int(tok_np[i])
+        return out
+
+
+def make_provider(spec) -> DraftProvider:
+    """Normalize the engine's ``spec=`` argument: a provider instance
+    passes through; the string ``"ngram"`` builds the model-free default.
+    (``"model"`` needs a draft config + params — construct
+    :class:`ModelDraft` directly, or use ``launch.serve --spec
+    model:<arch>``.)"""
+    if isinstance(spec, DraftProvider):
+        return spec
+    if spec == "ngram":
+        return NgramDraft()
+    raise ValueError(
+        f"unknown spec provider {spec!r}: pass 'ngram' or a DraftProvider "
+        f"instance (e.g. spec.ModelDraft(draft_cfg, draft_params))")

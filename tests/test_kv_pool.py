@@ -245,6 +245,101 @@ def test_eviction_respects_cow_refs_and_survivor_blocks():
     pool.check()
 
 
+def test_extend_grows_lazily_and_backs_off():
+    pool = _pool(num_blocks=7, max_len=32)       # 6 usable
+    plan = pool.admit(0, _prompt(6), max_new_tokens=1)   # 2 blocks (7 pos)
+    assert plan is not None and pool.used_blocks == 2
+    assert pool.extend(0, 7)                     # already covered: no-op
+    assert pool.used_blocks == 2
+    assert pool.extend(0, 12)                    # 3 blocks total
+    assert int(pool.n_slot_blocks[0]) == 3
+    assert pool.extend(0, 24)                    # 6 blocks total (all)
+    assert not pool.extend(0, 28)                # 7th block: pool exhausted
+    assert pool.stats()["backoffs"] == 1
+    pool.check()                                 # failed extend leaked nothing
+
+
+def test_truncate_frees_exclusive_tail_blocks():
+    pool = _pool(num_blocks=16, max_len=64)
+    pool.admit(0, _prompt(6), max_new_tokens=1)
+    pool.extend(0, 20)                           # 5 blocks
+    assert int(pool.n_slot_blocks[0]) == 5
+    dropped = pool.truncate(0, 9)                # keep 3 blocks
+    assert dropped == 2 and int(pool.n_slot_blocks[0]) == 3
+    assert pool.used_blocks == 3                 # tail back on the free list
+    assert all(b == 0 for b in pool.tables[0, 3:])
+    assert pool.truncate(0, 12) == 0             # nothing beyond 3 blocks
+    pool.check()
+
+
+def test_truncate_unpins_prefix_shared_blocks_never_frees():
+    """Rolling back INTO a prefix-shared region must only drop this
+    slot's ref: the cache (and any other slot) still references the
+    blocks, so they must survive — and a later admission must still
+    skip-prefill off them."""
+    pool = _pool(num_blocks=16, slots=2, max_len=64)
+    prompt = _prompt(11, seed=30)                # 2 full blocks + tail
+    pool.admit(0, prompt, max_new_tokens=2)
+    pool.register_prefix(prompt, list(pool.tables[0, :2]))
+    plan1 = pool.admit(1, prompt, max_new_tokens=2)
+    assert plan1.shared_tokens == 8
+    shared = list(plan1.shared_blocks)
+    # roll slot 1 all the way back into the shared prefix
+    assert pool.truncate(1, 2) == 3              # keeps only block 0
+    for b in shared:
+        assert pool.ref[b] >= 1                  # slot 0 + cache keep them
+        assert b not in pool._free               # unpinned, never freed
+    pool.check()
+    pool.release_slot(1)
+    pool.release_slot(0, prompt=prompt)
+    # the cached prefix is intact: a fresh admission still matches it
+    plan2 = pool.admit(0, prompt, max_new_tokens=2)
+    assert plan2.shared_tokens == 8
+    pool.check()
+
+
+def test_truncate_scrubs_pending_cow_copies_into_released_tail():
+    """A COW fork whose destination lands in the rejected tail must be
+    undone: the fresh block is freed and the queued device copy is
+    dropped, so a re-allocation of that block can never race a stale
+    copy.  The shared source keeps its other refs."""
+    pool = _pool(num_blocks=16, slots=2, max_len=64)
+    prompt = _prompt(11, seed=31)
+    pool.admit(0, prompt, max_new_tokens=4)
+    pool.register_prefix(prompt, list(pool.tables[0, :2]))
+    pool.release_slot(0)
+    plan = pool.admit(1, prompt, max_new_tokens=4)
+    shared = plan.shared_blocks[0]
+    pool.ensure_writable(1, 0, 3)                # forks shared block 0
+    assert pool.cow_forks == 1 and len(pool.pending_copies) == 1
+    fresh = pool.pending_copies[0][1]
+    assert pool.tables[1, 0] == fresh
+    # rollback to zero kept tokens: the fork was for rejected writes
+    pool.truncate(1, 0)
+    assert pool.pending_copies == []             # stale copy scrubbed
+    assert pool.ref[fresh] == 0 and fresh in pool._free
+    assert pool.ref[shared] >= 1                 # cache still pins source
+    pool.check()
+
+
+def test_truncate_then_extend_round_trips():
+    """The speculative-decode steady state: extend one verify span,
+    reject, truncate, extend again — ref counts stay exact through many
+    cycles and the pool never leaks."""
+    pool = _pool(num_blocks=9, max_len=64)       # 8 usable
+    pool.admit(0, _prompt(5), max_new_tokens=1)  # 2 blocks
+    resident = 6
+    for _ in range(10):
+        assert pool.extend(0, resident + 5)      # speculate 5 tokens
+        resident += 1                            # accept only one
+        pool.truncate(0, resident)
+        pool.check()
+    assert int(pool.n_slot_blocks[0]) == blocks_for(resident, 4)
+    pool.release_slot(0)
+    assert pool.used_blocks == 0
+    pool.check()
+
+
 def test_null_block_is_pinned():
     pool = _pool()
     with pytest.raises(ValueError):
