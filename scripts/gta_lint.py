@@ -1,0 +1,112 @@
+#!/usr/bin/env python
+"""gta-lint: run the static verifier suite over registered configs.
+
+Three passes (see ``src/repro/analysis/``):
+
+  schedule  every engine-registered GEMM shape's resolved schedule is
+            checked for fold divisibility, VMEM residency (incl. the OS
+            accumulator plane), revisit-accumulate safety, and exact
+            grid coverage — per config, per precision path.
+  jaxpr     the engine's pre-resolved hot dispatches (decode step,
+            prefill_paged_chunk, verify_paged_chunk, head_apply) are
+            traced abstractly and screened for zero-cost dispatches,
+            silent fp32 promotion in quant paths, host transfers,
+            scalar leakage, baked constants, outsized intermediates.
+  pool      bounded-exhaustive model check of KVPool op sequences
+            against the refcount invariants (config-independent; runs
+            once, not per config).
+
+Findings are matched against the committed baseline
+(``scripts/gta_lint_baseline.json``); any finding NOT in the baseline
+exits 1.  CI runs this over every config in ``repro.configs``:
+
+    python scripts/gta_lint.py                       # all configs, all passes
+    python scripts/gta_lint.py --configs qwen2_0_5b --passes schedule,jaxpr
+    python scripts/gta_lint.py --json                # machine-readable
+    python scripts/gta_lint.py --write-baseline      # accept current findings
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__),
+                                "gta_lint_baseline.json")
+
+
+def main(argv=None) -> int:
+    from repro.analysis import (PASS_NAMES, load_baseline, split_suppressed,
+                                write_baseline)
+    from repro.configs import ARCH_IDS, get
+
+    ap = argparse.ArgumentParser(description="GTA static verifier suite")
+    ap.add_argument("--configs", default=None,
+                    help="comma-separated arch ids (default: all registered)")
+    ap.add_argument("--passes", default=",".join(PASS_NAMES),
+                    help=f"comma-separated subset of {PASS_NAMES}")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="suppression file (missing = empty baseline)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="accept all current findings into --baseline")
+    ap.add_argument("--max-states", type=int, default=50_000,
+                    help="pool model-checker state budget")
+    ap.add_argument("--json", action="store_true",
+                    help="emit findings as JSON on stdout")
+    args = ap.parse_args(argv)
+
+    passes = [p.strip() for p in args.passes.split(",") if p.strip()]
+    unknown = set(passes) - set(PASS_NAMES)
+    if unknown:
+        ap.error(f"unknown pass(es) {sorted(unknown)}; choose from "
+                 f"{PASS_NAMES}")
+    names = ([c.strip() for c in args.configs.split(",") if c.strip()]
+             if args.configs else list(ARCH_IDS))
+
+    findings = []
+    t0 = time.time()
+
+    if "schedule" in passes:
+        from repro.analysis.schedule_check import check_config as p1
+        for name in names:
+            findings += p1(get(name))
+    if "jaxpr" in passes:
+        from repro.analysis.jaxpr_lint import check_config as p2
+        for name in names:
+            findings += p2(get(name))
+    if "pool" in passes:
+        from repro.analysis.pool_model import ModelCheckConfig, check_pool
+        findings += check_pool(ModelCheckConfig(),
+                               max_states=args.max_states)
+
+    if args.write_baseline:
+        write_baseline(findings, args.baseline)
+        print(f"wrote {len(findings)} suppression(s) to {args.baseline}")
+        return 0
+
+    fresh, known = split_suppressed(findings, load_baseline(args.baseline))
+    dt = time.time() - t0
+    if args.json:
+        print(json.dumps({
+            "configs": names, "passes": passes, "seconds": round(dt, 2),
+            "unsuppressed": [f.to_dict() for f in fresh],
+            "suppressed": [f.to_dict() for f in known]}, indent=2))
+    else:
+        for f in fresh:
+            print(f.format())
+        for f in known:
+            print(f"[suppressed] {f.format()}")
+        print(f"gta-lint: {len(names)} config(s), passes={passes}: "
+              f"{len(fresh)} unsuppressed, {len(known)} suppressed "
+              f"finding(s) in {dt:.1f}s")
+    return 1 if fresh else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,111 @@
+"""gta-lint: static verification of schedules, jitted hot paths, and
+KV-pool lifecycles — the gate between ``ScheduleCache.resolve`` and
+dispatch.
+
+Three passes, one finding format, one CLI (``scripts/gta_lint.py``):
+
+* **Pass 1 — schedule legality** (:mod:`repro.analysis.schedule_check`):
+  every BlockConfig/schedule the cache can emit for the registered
+  configs' engine shapes is checked for fold divisibility, VMEM
+  residency (including the OS accumulator plane), revisit-accumulate
+  safety, and exact grid coverage of the output.
+* **Pass 2 — jaxpr hygiene** (:mod:`repro.analysis.jaxpr_lint`): the
+  engine's pre-resolved hot dispatches are traced abstractly and
+  screened for silent fp32 promotion in quant paths, host transfers,
+  Python-scalar leakage, zero-cost (invisible-to-roofline) dispatches,
+  and outsized intermediates.
+* **Pass 3 — pool model checking** (:mod:`repro.analysis.pool_model`):
+  exhaustive bounded exploration of public-API op sequences on a small
+  :class:`~repro.serving.kv_pool.KVPool` against its refcount
+  invariants, emitting a minimal counterexample trace on failure.
+
+Findings are value objects with a stable fingerprint; a committed
+baseline file suppresses known/accepted findings so CI gates on *new*
+ones only (Timeloop-style mappers prune illegal mappings before
+costing — this is the same discipline applied retroactively).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from collections.abc import Iterable, Sequence
+
+#: ordered pass ids, CLI `--passes` vocabulary
+PASS_NAMES = ("schedule", "jaxpr", "pool")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One verifier diagnostic.
+
+    ``fingerprint`` hashes the *identity* (pass, rule, subject) but not
+    the free-text detail, so reworded messages do not invalidate
+    baselines while a new subject (new shape, new dispatch, new trace)
+    always surfaces as a new finding.
+    """
+
+    pass_name: str              # one of PASS_NAMES
+    rule: str                   # kebab-case rule id, e.g. "vmem-residency"
+    subject: str                # stable subject key, e.g. "qwen2/gemm(8,896,896)"
+    detail: str                 # human explanation of the violation
+    severity: str = "error"     # "error" gates CI; "warn" is advisory
+
+    @property
+    def fingerprint(self) -> str:
+        key = f"{self.pass_name}:{self.rule}:{self.subject}"
+        return hashlib.sha1(key.encode()).hexdigest()[:16]
+
+    def to_dict(self) -> dict[str, str]:
+        return {"fingerprint": self.fingerprint,
+                "pass": self.pass_name, "rule": self.rule,
+                "subject": self.subject, "detail": self.detail,
+                "severity": self.severity}
+
+    def format(self) -> str:
+        return (f"[{self.pass_name}:{self.rule}] {self.subject}: "
+                f"{self.detail} ({self.severity}, {self.fingerprint})")
+
+
+# ---------------------------------------------------------------------------
+# baseline / suppression file
+# ---------------------------------------------------------------------------
+
+def load_baseline(path: str) -> dict[str, dict]:
+    """fingerprint -> suppression entry.  A missing file is an empty
+    baseline (everything gates), matching a fresh checkout before the
+    first ``--write-baseline``."""
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except FileNotFoundError:
+        return {}
+    return {e["fingerprint"]: e for e in data.get("suppressions", [])}
+
+
+def write_baseline(findings: Sequence[Finding], path: str,
+                   reason: str = "accepted at baseline") -> None:
+    """Persist every finding as a suppression (one entry per unique
+    fingerprint, sorted for stable diffs)."""
+    seen: dict[str, dict] = {}
+    for f in findings:
+        e = f.to_dict()
+        e["reason"] = reason
+        seen.setdefault(f.fingerprint, e)
+    data = {"version": 1,
+            "suppressions": [seen[k] for k in sorted(seen)]}
+    with open(path, "w") as fh:
+        json.dump(data, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+
+
+def split_suppressed(findings: Iterable[Finding],
+                     baseline: dict[str, dict] | None = None,
+                     ) -> tuple[list[Finding], list[Finding]]:
+    """(unsuppressed, suppressed) under the baseline."""
+    base = baseline or {}
+    fresh, known = [], []
+    for f in findings:
+        (known if f.fingerprint in base else fresh).append(f)
+    return fresh, known

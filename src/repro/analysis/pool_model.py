@@ -1,0 +1,362 @@
+"""Pass 3 — bounded model checking of the KV-pool lifecycle.
+
+Exhaustively explores every sequence of public :class:`KVPool`
+operations (admit with prefix sharing / extend / truncate / COW fork /
+take-copies / release with or without preempt-registration) on a small
+pool, auditing :meth:`KVPool.audit_violations` after every transition.
+The invariants are the pool's own — the checker and the runtime
+``audit=True`` path judge states through the same predicate, so a
+counterexample here is a replayable runtime bug and vice versa.
+
+States are canonicalized on the full behavioral state (free-list
+*order* included — it decides future allocations; telemetry counters
+excluded) and explored breadth-first, so the first counterexample found
+is a minimal-length trace.
+
+``BuggyPool*`` subclasses seed one historical or representative bug
+each (use-after-free on COW sources, unscrubbed pending copies,
+force-eviction of shared blocks, leaked release refs); the test suite
+proves the checker reproduces their counterexamples, which is the
+evidence the *clean* pool's green run actually means something.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from collections.abc import Sequence
+
+import numpy as np
+
+from repro.serving.kv_pool import NULL_BLOCK, KVPool
+
+#: an op is (name, *args) — the trace vocabulary of counterexamples
+Op = tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCheckConfig:
+    """Geometry of the explored pool.  Deliberately tiny: the bugs this
+    pass hunts are control-flow bugs (refcount transfer, scrub order,
+    eviction guards), all of which manifest within a handful of blocks;
+    a bigger pool only multiplies equivalent interleavings."""
+
+    num_blocks: int = 8
+    block_size: int = 2
+    slots: int = 2
+    max_len: int = 8
+    #: admission prompts; P0/P1 share a first block (COW pressure),
+    #: P2 is disjoint (eviction pressure)
+    prompts: tuple[tuple[int, ...], ...] = ((1, 2, 3, 4, 5),
+                                            (1, 2, 3, 9, 9),
+                                            (7, 8, 9))
+    max_new_tokens: int = 2
+    share_prefixes: bool = True
+
+    def make_pool(self, pool_cls: type = KVPool) -> KVPool:
+        return pool_cls(self.num_blocks, self.block_size, slots=self.slots,
+                        max_len=self.max_len,
+                        share_prefixes=self.share_prefixes)
+
+
+@dataclasses.dataclass
+class CheckResult:
+    ok: bool
+    states_explored: int
+    transitions: int
+    #: None when ok; else {"trace", "violations", "pool", "pending_op"}
+    #: — the PoolAuditError reproducer format
+    counterexample: dict | None = None
+    truncated: bool = False        # hit max_states before exhausting space
+
+
+# ---------------------------------------------------------------------------
+# state representation
+# ---------------------------------------------------------------------------
+
+def _clone(pool: KVPool) -> KVPool:
+    """Fast behavioral copy (no __init__, no deepcopy): every field that
+    decides future transitions is duplicated, telemetry is reset-shared."""
+    p = object.__new__(type(pool))
+    p.num_blocks = pool.num_blocks
+    p.block_size = pool.block_size
+    p.slots = pool.slots
+    p.max_len = pool.max_len
+    p.blocks_per_slot = pool.blocks_per_slot
+    p.share_prefixes = pool.share_prefixes
+    p._free = collections.deque(pool._free)
+    p.ref = pool.ref.copy()
+    p.tables = pool.tables.copy()
+    p.n_slot_blocks = pool.n_slot_blocks.copy()
+    p._prefix = collections.OrderedDict(pool._prefix)
+    p._hash_of = dict(pool._hash_of)
+    p.pending_copies = list(pool.pending_copies)
+    p.peak_used = pool.peak_used
+    p.shared_token_hits = pool.shared_token_hits
+    p.cow_forks = pool.cow_forks
+    p.evictions = pool.evictions
+    p.backoffs = pool.backoffs
+    return p
+
+
+def _state_key(pool: KVPool, owners: tuple) -> tuple:
+    """Canonical hashable key: allocator order, refs, tables, prefix-map
+    (insertion order = LRU order), pending copies, slot ownership."""
+    return (tuple(pool._free),
+            pool.ref.tobytes(),
+            pool.tables.tobytes(),
+            pool.n_slot_blocks.tobytes(),
+            tuple(pool._prefix.items()),
+            tuple(pool.pending_copies),
+            owners)
+
+
+def _enabled_ops(pool: KVPool, owners: tuple, cfg: ModelCheckConfig
+                 ) -> list[Op]:
+    """Deterministically ordered op alphabet at this state."""
+    ops: list[Op] = []
+    bs = cfg.block_size
+    for s in range(cfg.slots):
+        if owners[s] is None:
+            for pid in range(len(cfg.prompts)):
+                ops.append(("admit", s, pid))
+        else:
+            cur = int(pool.n_slot_blocks[s])
+            if cur < pool.blocks_per_slot:
+                ops.append(("extend", s, (cur + 1) * bs))
+            if cur > 0:
+                ops.append(("truncate", s, (cur - 1) * bs))
+                if cur > 1:
+                    ops.append(("truncate", s, 0))
+                ops.append(("cow", s, 0, cur * bs - 1))
+            ops.append(("release", s, False))
+            ops.append(("release", s, True))
+    if pool.pending_copies:
+        ops.append(("take",))
+    return ops
+
+
+def _apply(pool: KVPool, owners: tuple, op: Op,
+           cfg: ModelCheckConfig) -> tuple[tuple, str | None]:
+    """Execute ``op`` on ``pool`` in place; returns (new owners, error).
+    ``error`` is set when the op raised something other than the legal
+    MemoryError backoff — itself a counterexample."""
+    owners = list(owners)
+    name = op[0]
+    try:
+        if name == "admit":
+            _, s, pid = op
+            plan = pool.admit(s, list(cfg.prompts[pid]),
+                              cfg.max_new_tokens)
+            if plan is not None:
+                owners[s] = pid
+        elif name == "extend":
+            _, s, total = op
+            pool.extend(s, total)
+        elif name == "truncate":
+            _, s, keep = op
+            pool.truncate(s, keep)
+        elif name == "cow":
+            _, s, lo, hi = op
+            pool.ensure_writable(s, lo, hi)
+        elif name == "release":
+            _, s, register = op
+            prompt = (list(cfg.prompts[owners[s]])
+                      if register and owners[s] is not None else None)
+            pool.release_slot(s, prompt=prompt)
+            owners[s] = None
+        elif name == "take":
+            pool.take_copies()
+        else:  # pragma: no cover - alphabet and dispatch move together
+            raise ValueError(f"unknown op {name}")
+    except MemoryError:
+        return tuple(owners), None      # legal backoff; state still audited
+    except Exception as e:  # noqa: BLE001 - any crash is a counterexample
+        return tuple(owners), f"{type(e).__name__}: {e}"
+    return tuple(owners), None
+
+
+def _counterexample(trace: Sequence[Op], violations: Sequence[str],
+                    pool: KVPool) -> dict:
+    return {"trace": [list(op) for op in trace],
+            "violations": list(violations),
+            "pool": pool.snapshot_state(),
+            "pending_op": {"op": "model-check",
+                           "trace": [list(op) for op in trace]}}
+
+
+def explore(cfg: ModelCheckConfig | None = None, *,
+            pool_cls: type = KVPool, max_states: int = 50_000,
+            max_depth: int = 64) -> CheckResult:
+    """Breadth-first bounded exploration; stops at the first invariant
+    violation (minimal trace) or when the reachable space / ``max_states``
+    is exhausted."""
+    cfg = cfg or ModelCheckConfig()
+    root = cfg.make_pool(pool_cls)
+    owners0: tuple = (None,) * cfg.slots
+    vio = root.audit_violations()
+    if vio:
+        return CheckResult(False, 1, 0, _counterexample((), vio, root))
+    seen = {_state_key(root, owners0)}
+    queue: collections.deque[tuple[KVPool, tuple, tuple]] = (
+        collections.deque([(root, owners0, ())]))
+    transitions = 0
+    truncated = False
+    while queue:
+        pool, owners, trace = queue.popleft()
+        if len(trace) >= max_depth:
+            truncated = True
+            continue
+        for op in _enabled_ops(pool, owners, cfg):
+            nxt = _clone(pool)
+            new_owners, err = _apply(nxt, owners, op, cfg)
+            transitions += 1
+            if err is not None:
+                return CheckResult(False, len(seen), transitions,
+                                   _counterexample(trace + (op,),
+                                                   [f"op raised {err}"],
+                                                   nxt))
+            vio = nxt.audit_violations()
+            if vio:
+                return CheckResult(False, len(seen), transitions,
+                                   _counterexample(trace + (op,), vio, nxt))
+            key = _state_key(nxt, new_owners)
+            if key in seen:
+                continue
+            if len(seen) >= max_states:
+                truncated = True
+                continue
+            seen.add(key)
+            queue.append((nxt, new_owners, trace + (op,)))
+    return CheckResult(True, len(seen), transitions, None,
+                       truncated=truncated)
+
+
+def replay(trace: Sequence[Sequence], cfg: ModelCheckConfig | None = None,
+           *, pool_cls: type = KVPool) -> KVPool:
+    """Re-execute a counterexample trace (as serialized in a reproducer)
+    against a fresh pool and return the final pool state — the bridge
+    from a CI finding or a runtime PoolAuditError back to a debugger."""
+    cfg = cfg or ModelCheckConfig()
+    pool = cfg.make_pool(pool_cls)
+    owners: tuple = (None,) * cfg.slots
+    for raw in trace:
+        owners, _err = _apply(pool, owners, tuple(raw), cfg)
+    return pool
+
+
+# ---------------------------------------------------------------------------
+# seeded-bug mutants: each class re-introduces one representative bug.
+# The checker MUST find all of them (tests/test_analysis.py), otherwise
+# its green run on the real pool is vacuous.
+# ---------------------------------------------------------------------------
+
+class BuggyPoolEagerCOWRelease(KVPool):
+    """The historical COW bug this PR fixes: ``ensure_writable`` released
+    the slot's ref on the forked source immediately, leaving the queued
+    device copy reading a block the allocator could hand out again
+    (use-after-free window)."""
+
+    def ensure_writable(self, slot: int, first_pos: int, last_pos: int
+                        ) -> None:
+        j0 = first_pos // self.block_size
+        j1 = min(last_pos // self.block_size, self.blocks_per_slot - 1)
+        for j in range(j0, j1 + 1):
+            bid = int(self.tables[slot, j])
+            if bid == NULL_BLOCK or self.ref[bid] <= 1:
+                continue
+            fresh = self._alloc_one()
+            if fresh is None:
+                self._evict_cached(1)
+                fresh = self._alloc_one()
+                if fresh is None:
+                    raise MemoryError("KV pool exhausted during COW fork")
+            self.pending_copies.append((bid, fresh))
+            self.cow_forks += 1
+            self._release_one(bid)          # BUG: unpins the pending source
+            self.tables[slot, j] = fresh
+
+
+class BuggyPoolNoScrub(KVPool):
+    """``truncate`` frees the rejected tail without scrubbing pending
+    COW copies — a freed destination can be re-allocated with a stale
+    device copy still queued against it."""
+
+    def truncate(self, slot: int, n_keep: int) -> int:
+        from repro.serving.kv_pool import blocks_for
+        keep = min(blocks_for(max(0, int(n_keep)), self.block_size),
+                   self.blocks_per_slot)
+        cur = int(self.n_slot_blocks[slot])
+        if keep >= cur:
+            return 0
+        dropped = [int(b) for b in self.tables[slot, keep:cur]]
+        for bid in dropped:                 # BUG: no _scrub_pending
+            self._release_one(bid)
+        self.tables[slot, keep:cur] = NULL_BLOCK
+        self.n_slot_blocks[slot] = keep
+        return cur - keep
+
+
+class BuggyPoolEvictShared(KVPool):
+    """Eviction ignores refcounts: cached blocks are force-freed even
+    while a live slot still maps them (evict-while-shared)."""
+
+    def _evict_cached(self, need: int) -> None:
+        if need <= len(self._free):
+            return
+        for h in list(self._prefix):
+            bid = self._prefix[h]
+            del self._prefix[h]             # BUG: no ref == 1 guard,
+            del self._hash_of[bid]          # and a force-free below
+            self.ref[bid] = 0
+            self._free.append(bid)
+            self.evictions += 1
+            if len(self._free) >= need:
+                return
+
+
+class BuggyPoolLeakyRelease(KVPool):
+    """``release_slot`` forgets the row's last block — its ref outlives
+    every user, so the block never returns to the free list (leak)."""
+
+    def release_slot(self, slot: int, *,
+                     prompt: Sequence[int] | None = None) -> None:
+        n = int(self.n_slot_blocks[slot])
+        row = [int(b) for b in self.tables[slot, :n]]
+        if prompt is not None:
+            self.register_prefix(prompt, row)
+        self._scrub_pending(set(row))
+        for bid in row[:-1]:                # BUG: skips the last block
+            self._release_one(bid)
+        self.tables[slot, :] = NULL_BLOCK
+        self.n_slot_blocks[slot] = 0
+
+
+#: mutant registry: rule id -> class (the CLI's --seeded self-test and
+#: the unit tests iterate this)
+SEEDED_BUGS: dict[str, type] = {
+    "cow-source-use-after-free": BuggyPoolEagerCOWRelease,
+    "truncate-stale-pending-copy": BuggyPoolNoScrub,
+    "evict-while-shared": BuggyPoolEvictShared,
+    "release-leaks-block": BuggyPoolLeakyRelease,
+}
+
+
+def check_pool(cfg: ModelCheckConfig | None = None, *,
+               max_states: int = 50_000,
+               pool_cls: type = KVPool) -> list:
+    """gta-lint entry point: findings for the (by default real) pool."""
+    from repro.analysis import Finding
+    cfg = cfg or ModelCheckConfig()
+    res = explore(cfg, max_states=max_states, pool_cls=pool_cls)
+    out = []
+    if not res.ok:
+        ce = res.counterexample or {}
+        trace = " -> ".join(":".join(str(x) for x in op)
+                            for op in ce.get("trace", []))
+        out.append(Finding(
+            "pool", "invariant-violation", f"trace[{trace}]",
+            f"{'; '.join(ce.get('violations', []))} "
+            f"(after {res.states_explored} states); reproduce with "
+            f"analysis.pool_model.replay({ce.get('trace')!r})"))
+    return out

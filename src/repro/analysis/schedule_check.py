@@ -1,0 +1,314 @@
+"""Pass 1 — static schedule-legality verification.
+
+For every p-GEMM shape the serving engine registers against the
+:class:`~repro.core.scheduler.ScheduleCache` (decode step, prefill
+chunk, paged-decode gathers, speculative verify, LM head, quant path),
+this pass re-derives the exact dispatch ``kernels.ops.matmul`` /
+``quant_matmul`` would execute — resolved dataflow, block config with
+the fold-fallback ``bk`` override, padding, effective fold — and
+verifies it against the properties the fused-reduction kernels assume:
+
+* ``fold-divisibility`` — the executed fold equals the scheduled fold
+  (the ``realizable_k_folds`` <-> ``bk`` fallback cross-module
+  contract); a silent degrade means the cache's cost model priced a
+  traversal that never runs.
+* ``vmem-residency`` — operand blocks plus the fp32 accumulator plane
+  (OS scratch, or the fp32 output block WS/IS accumulate into) fit the
+  per-target VMEM block budget.
+* ``revisit-accumulate`` — any grid dimension that revisits an output
+  block carries ``arbitrary`` dimension semantics and the kernel
+  accumulates (PR 3's fused kernels are only correct under both).
+* ``grid-coverage`` — enumerating the full grid, every output tile
+  receives each K contribution exactly once per fold band: no gap, no
+  double-accumulate, no write-write overlap between distinct tiles.
+* ``degenerate-shape`` — no zero-dimension GEMM reaches the cache (the
+  mamba2 ``d_ff == 0`` crash class; the engine filters these, this rule
+  keeps it honest).
+
+The dispatch-variant table below (grid order, output index map,
+dimension semantics, accumulation) restates ``kernels.mpgemm``; the
+analysis unit tests pin the two against each other so they cannot
+drift apart silently.
+"""
+
+from __future__ import annotations
+
+import itertools
+
+import jax.numpy as jnp
+
+from repro.analysis import Finding
+from repro.core.dataflow import Dataflow
+from repro.core.precision import precision_for_dtype
+from repro.core.scheduler import ScheduleCache
+from repro.core.tiling import BLOCK_BUDGET_BYTES, MXU_DIM
+from repro.kernels.mpgemm import effective_fold
+from repro.kernels.ops import cached_block_config
+from repro.kernels.paged_attention import gather_gemm_shapes
+from repro.models.config import ModelConfig
+
+#: lint-time engine geometry: the ContinuousEngine defaults, which are
+#: also what CI serving tests and serve_bench construct
+ENGINE_SLOTS = 8
+ENGINE_PREFILL_CHUNK = 32
+ENGINE_SPEC_K = 4
+ENGINE_BLOCK_SIZE = 16
+
+
+def engine_gemm_shapes(cfg: ModelConfig, *, slots: int = ENGINE_SLOTS,
+                       prefill_chunk: int = ENGINE_PREFILL_CHUNK,
+                       spec_k: int = ENGINE_SPEC_K,
+                       block_size: int = ENGINE_BLOCK_SIZE,
+                       ) -> list[tuple[str, tuple[int, int, int]]]:
+    """(label, (M, N, K)) for every shape the engine pre-resolves —
+    mirrors ``ContinuousEngine._register_gemms`` + the constructor's
+    paged/spec registrations.  Encoder-only configs serve no decode
+    engine and contribute nothing."""
+    if cfg.is_encoder_only:
+        return []
+    d = cfg.d_model
+
+    def family(tag: str, m: int, head_rows: int
+               ) -> list[tuple[str, tuple[int, int, int]]]:
+        shapes = [(f"{tag}/qkv", (m, cfg.n_heads * cfg.hd, d)),
+                  (f"{tag}/kv", (m, cfg.n_kv_heads * cfg.hd, d)),
+                  (f"{tag}/attn-out", (m, d, cfg.n_heads * cfg.hd))]
+        if cfg.moe is not None:
+            shapes += [(f"{tag}/moe-up", (m, cfg.moe.d_ff_expert, d)),
+                       (f"{tag}/moe-down", (m, d, cfg.moe.d_ff_expert))]
+        else:
+            shapes += [(f"{tag}/ff-up", (m, cfg.d_ff, d)),
+                       (f"{tag}/ff-down", (m, d, cfg.d_ff))]
+        shapes.append((f"{tag}/head", (head_rows, cfg.vocab, d)))
+        # the engine skips degenerate shapes before resolve (attention-
+        # free archs: mamba2 has d_ff == 0) — mirror that filter; the
+        # degenerate-shape rule still guards every OTHER path into the
+        # cache (paged gathers, future registrations)
+        return [(lbl, (M, Nn, K)) for lbl, (M, Nn, K) in shapes
+                if M > 0 and Nn > 0 and K > 0]
+
+    out = family("decode", slots, slots)
+    out += family("prefill", slots * prefill_chunk, slots)
+    for i, shp in enumerate(gather_gemm_shapes(cfg, block_size)):
+        out.append((f"paged-gather[{i}]", shp))
+    if not cfg.has_recurrent_state:     # spec is attention-only
+        L = spec_k + 1
+        out += family("verify", slots * L, slots * L)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# dispatch mirror: what ops.matmul would execute for a shape
+# ---------------------------------------------------------------------------
+
+def derive_dispatch(M: int, N: int, K: int, precision: str,
+                    itemsize: int,
+                    schedule: ScheduleCache | None = None) -> dict:
+    """Replicate the ``ops.matmul`` scheduled-dispatch derivation without
+    executing it: resolve, SIMD->OS mapping, block search narrowed to the
+    chosen dataflow, the fold-fallback ``bk`` override, padding, and the
+    effective fold."""
+    schedule = schedule or ScheduleCache()
+    choice = schedule.resolve(M, N, K, precision)
+    dataflow = (Dataflow.OS if choice.dataflow is Dataflow.SIMD
+                else choice.dataflow)
+    blocks = cached_block_config(M, N, K, itemsize, itemsize, 4, 1,
+                                 (dataflow,))
+    bm, bn, bk = blocks.bm, blocks.bn, blocks.bk
+    fold_req = choice.k_fold
+    if fold_req > 1 and effective_fold(K, bk, fold_req) != fold_req:
+        bk = MXU_DIM
+    Mp, Np, Kp = (-(-M // bm) * bm, -(-N // bn) * bn, -(-K // bk) * bk)
+    ef = effective_fold(Kp, bk, fold_req)
+    return {"choice": choice, "dataflow": dataflow,
+            "bm": bm, "bn": bn, "bk": bk,
+            "padded": (Mp, Np, Kp), "fold_requested": fold_req,
+            "fold_effective": ef}
+
+
+def _variant(dataflow: Dataflow, gm: int, gn: int, gk: int, f: int) -> dict:
+    """Restated fused-epilogue dispatch structure from ``kernels.mpgemm``
+    (tests pin this mirror against the real kernels): grid order, index
+    maps, dimension semantics and whether the kernel accumulates into
+    the output/scratch block."""
+    gkf = gk // f
+    if dataflow is Dataflow.OS and f == 1:
+        return {"grid": (gm, gn, gk),
+                "out_map": lambda m, n, k: (m, n),
+                "keff": lambda m, n, k: k,
+                "semantics": ("parallel", "parallel", "arbitrary"),
+                "accumulates": True}
+    if dataflow is Dataflow.OS:
+        return {"grid": (gm, gn, f, gkf),
+                "out_map": lambda m, n, fi, k: (m, n),
+                "keff": lambda m, n, fi, k: fi * gkf + k,
+                "semantics": ("parallel", "parallel", "arbitrary",
+                              "arbitrary"),
+                "accumulates": True}
+    if dataflow is Dataflow.WS:
+        return {"grid": (gn, f, gkf, gm),
+                "out_map": lambda n, fi, k, m: (m, n),
+                "keff": lambda n, fi, k, m: fi * gkf + k,
+                "semantics": ("parallel", "arbitrary", "arbitrary",
+                              "arbitrary"),
+                "accumulates": True}
+    if dataflow is Dataflow.IS:
+        return {"grid": (gm, f, gkf, gn),
+                "out_map": lambda m, fi, k, n: (m, n),
+                "keff": lambda m, fi, k, n: fi * gkf + k,
+                "semantics": ("parallel", "arbitrary", "arbitrary",
+                              "arbitrary"),
+                "accumulates": True}
+    raise ValueError(f"unsupported dataflow {dataflow}")
+
+
+def check_shape(subject: str, M: int, N: int, K: int, *, precision: str,
+                itemsize: int, budget: int = BLOCK_BUDGET_BYTES,
+                schedule: ScheduleCache | None = None,
+                max_grid_points: int = 1_000_000) -> list[Finding]:
+    """All Pass-1 rules for one GEMM shape at one precision."""
+    out: list[Finding] = []
+    if M <= 0 or N <= 0 or K <= 0:
+        out.append(Finding(
+            "schedule", "degenerate-shape", subject,
+            f"GEMM ({M}, {N}, {K}) has a zero/negative dimension; the "
+            f"cost model divides by reduction chunks and the kernel grid "
+            f"would be empty — such shapes must be filtered before "
+            f"ScheduleCache.resolve"))
+        return out
+    d = derive_dispatch(M, N, K, precision, itemsize, schedule)
+    bm, bn, bk = d["bm"], d["bn"], d["bk"]
+    Mp, Np, Kp = d["padded"]
+
+    # fold divisibility: the scheduled fold must execute as modeled
+    if d["fold_effective"] != d["fold_requested"]:
+        out.append(Finding(
+            "schedule", "fold-divisibility", subject,
+            f"scheduled k_fold={d['fold_requested']} degrades to "
+            f"{d['fold_effective']} at bk={bk} (K={K}->padded {Kp}): the "
+            f"cache costed a banded traversal the kernel will not run"))
+
+    # VMEM residency: streamed operand blocks + the resident fp32
+    # accumulator plane (OS scratch, or the fp32 out block WS/IS
+    # accumulate into) + the out block itself for OS flushes
+    ws = bm * bk * itemsize + bk * bn * itemsize
+    acc = bm * bn * 4
+    resident = ws + acc + (bm * bn * 4 if d["dataflow"] is Dataflow.OS
+                           else 0)
+    if resident > budget:
+        out.append(Finding(
+            "schedule", "vmem-residency", subject,
+            f"blocks ({bm},{bn},{bk}) x{itemsize}B + fp32 accumulator "
+            f"need {resident} B resident > budget {budget} B "
+            f"({d['dataflow'].value} dataflow)"))
+
+    gm, gn, gk = Mp // bm, Np // bn, Kp // bk
+    f = d["fold_effective"]
+    var = _variant(d["dataflow"], gm, gn, gk, f)
+
+    # revisit-accumulate: grid dims not represented in the out index map
+    # revisit their block; each must carry 'arbitrary' semantics and the
+    # kernel must accumulate across the revisits
+    ndim = len(var["grid"])
+    probe = [0] * ndim
+    base = var["out_map"](*probe)
+    revisit_dims = []
+    for dim in range(ndim):
+        if var["grid"][dim] <= 1:
+            continue
+        probe2 = list(probe)
+        probe2[dim] = 1
+        if var["out_map"](*probe2) == base:
+            revisit_dims.append(dim)
+    for dim in revisit_dims:
+        if var["semantics"][dim] != "arbitrary":
+            out.append(Finding(
+                "schedule", "revisit-accumulate", subject,
+                f"grid dim {dim} (extent {var['grid'][dim]}) revisits "
+                f"the output block under '{var['semantics'][dim]}' "
+                f"semantics — Mosaic may not round-trip the block "
+                f"between non-consecutive visits"))
+    if revisit_dims and not var["accumulates"]:
+        out.append(Finding(
+            "schedule", "revisit-accumulate", subject,
+            f"output blocks are revisited along grid dims "
+            f"{revisit_dims} but the kernel does not accumulate — "
+            f"revisits would overwrite partial sums"))
+
+    # grid coverage: every output tile gets every K contribution exactly
+    # once (full enumeration; engine grids are small)
+    points = 1
+    for g in var["grid"]:
+        points *= g
+    if points <= max_grid_points:
+        visits: dict[tuple[int, int], list[int]] = {}
+        for idx in itertools.product(*(range(g) for g in var["grid"])):
+            visits.setdefault(var["out_map"](*idx), []).append(
+                var["keff"](*idx))
+        want_tiles = {(m, n) for m in range(gm) for n in range(gn)}
+        got_tiles = set(visits)
+        if got_tiles != want_tiles:
+            missing = sorted(want_tiles - got_tiles)[:4]
+            extra = sorted(got_tiles - want_tiles)[:4]
+            out.append(Finding(
+                "schedule", "grid-coverage", subject,
+                f"output tiles not covered exactly: missing {missing}, "
+                f"out-of-range {extra} (grid {var['grid']})"))
+        else:
+            want_k = list(range(gk))
+            for tile, ks in visits.items():
+                if sorted(ks) != want_k:
+                    out.append(Finding(
+                        "schedule", "grid-coverage", subject,
+                        f"tile {tile} accumulates K steps "
+                        f"{sorted(ks)[:8]}... != exactly once each of "
+                        f"0..{gk - 1} (fold banding broken)"))
+                    break
+    else:  # pragma: no cover - engine shapes never reach this
+        out.append(Finding(
+            "schedule", "grid-coverage", subject,
+            f"grid too large to enumerate ({points} points > "
+            f"{max_grid_points}); raise max_grid_points", severity="warn"))
+    return out
+
+
+def check_config(cfg: ModelConfig, *, slots: int = ENGINE_SLOTS,
+                 prefill_chunk: int = ENGINE_PREFILL_CHUNK,
+                 spec_k: int = ENGINE_SPEC_K,
+                 block_size: int = ENGINE_BLOCK_SIZE) -> list[Finding]:
+    """Pass 1 over every schedule the engine would emit for ``cfg`` —
+    the float serving path at the config's compute precision, plus the
+    INT8 quant path when the config serves quantized."""
+    findings: list[Finding] = []
+    prec = precision_for_dtype(jnp.dtype(cfg.compute_dtype),
+                               default="FP32").name
+    itemsize = jnp.dtype(cfg.compute_dtype).itemsize
+    schedule = ScheduleCache()
+    shapes = engine_gemm_shapes(cfg, slots=slots,
+                                prefill_chunk=prefill_chunk,
+                                spec_k=spec_k, block_size=block_size)
+    for label, (M, N, K) in shapes:
+        subject = f"{cfg.name}/{label}({M},{N},{K})@{prec}"
+        findings += check_shape(subject, M, N, K, precision=prec,
+                                itemsize=itemsize, schedule=schedule)
+    if cfg.quant_serving:
+        qsched = ScheduleCache()
+        for label, (M, N, K) in shapes:
+            if M <= 0 or N <= 0 or K <= 0:
+                continue        # already reported on the float path
+            subject = f"{cfg.name}/{label}({M},{N},{K})@INT8"
+            # quant_matmul always executes OS / fold 1 with the dequant
+            # fused into the flush; verify residency for its block pick
+            choice = qsched.resolve(M, N, K, "INT8")
+            del choice          # resolution must not raise; applied = OS/1
+            blocks = cached_block_config(M, N, K, itemsize, 1, 4, 1, None)
+            resident = (blocks.bm * blocks.bk * itemsize
+                        + blocks.bk * blocks.bn * 1
+                        + 2 * blocks.bm * blocks.bn * 4)
+            if resident > BLOCK_BUDGET_BYTES:
+                findings.append(Finding(
+                    "schedule", "vmem-residency", subject,
+                    f"quant blocks ({blocks.bm},{blocks.bn},{blocks.bk}) "
+                    f"need {resident} B resident > budget "
+                    f"{BLOCK_BUDGET_BYTES} B"))
+    return findings

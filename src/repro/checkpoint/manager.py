@@ -27,7 +27,7 @@ import json
 import os
 import shutil
 import threading
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any
 
 import jax
 import numpy as np
@@ -37,7 +37,7 @@ PyTree = Any
 _SEP = "/"
 
 
-def _flatten_with_paths(tree: PyTree) -> Tuple[List[Tuple[str, Any]], Any]:
+def _flatten_with_paths(tree: PyTree) -> tuple[list[tuple[str, Any]], Any]:
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     out = []
     for path, leaf in flat:
@@ -47,7 +47,7 @@ def _flatten_with_paths(tree: PyTree) -> Tuple[List[Tuple[str, Any]], Any]:
     return out, treedef
 
 
-def _host_shard(arr: jax.Array) -> Tuple[np.ndarray, List[Tuple[int, int]]]:
+def _host_shard(arr: jax.Array) -> tuple[np.ndarray, list[tuple[int, int]]]:
     """(local data, index offsets) for this host's first addressable shard
     set, concatenated contiguously where possible; single-host -> whole."""
     if not hasattr(arr, "addressable_shards"):
@@ -65,21 +65,21 @@ class CheckpointManager:
         self.dir = directory
         self.keep_last = keep_last
         os.makedirs(directory, exist_ok=True)
-        self._thread: Optional[threading.Thread] = None
+        self._thread: threading.Thread | None = None
 
     # -- helpers -------------------------------------------------------------
     def _step_dir(self, step: int, tmp: bool = False) -> str:
         return os.path.join(self.dir, f"step_{step:09d}" + (".tmp" if tmp
                                                             else ""))
 
-    def steps(self) -> List[int]:
+    def steps(self) -> list[int]:
         out = []
         for d in os.listdir(self.dir):
             if d.startswith("step_") and not d.endswith(".tmp"):
                 out.append(int(d[5:]))
         return sorted(out)
 
-    def latest_step(self) -> Optional[int]:
+    def latest_step(self) -> int | None:
         s = self.steps()
         return s[-1] if s else None
 
@@ -90,7 +90,7 @@ class CheckpointManager:
 
     # -- save ------------------------------------------------------------------
     def save(self, step: int, tree: PyTree, *, blocking: bool = False,
-             extra: Optional[Dict] = None):
+             extra: dict | None = None):
         """Async checkpoint of an arbitrary pytree of arrays."""
         self.wait()
         flat, _ = _flatten_with_paths(tree)
@@ -146,9 +146,9 @@ class CheckpointManager:
                     shutil.rmtree(full, ignore_errors=True)
 
     # -- restore -----------------------------------------------------------------
-    def restore(self, tree_like: PyTree, step: Optional[int] = None,
-                shardings: Optional[PyTree] = None
-                ) -> Tuple[PyTree, Dict]:
+    def restore(self, tree_like: PyTree, step: int | None = None,
+                shardings: PyTree | None = None
+                ) -> tuple[PyTree, dict]:
         """Restore into the structure of ``tree_like``; reshards onto
         ``shardings`` (elastic: new mesh is fine — manifest shapes are
         global).  Returns (tree, manifest_extra)."""

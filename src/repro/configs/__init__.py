@@ -8,11 +8,10 @@ the paper's own evaluation config (``gta_paper``).  Input-shape sets live in
 from __future__ import annotations
 
 import importlib
-from typing import Dict, List
 
 from repro.models.config import ModelConfig
 
-ARCH_IDS: List[str] = [
+ARCH_IDS: list[str] = [
     "qwen1_5_4b",
     "gemma2_9b",
     "qwen2_0_5b",
@@ -26,7 +25,7 @@ ARCH_IDS: List[str] = [
 ]
 
 #: accepted aliases (the assignment's dashed ids)
-ALIASES: Dict[str, str] = {
+ALIASES: dict[str, str] = {
     "qwen1.5-4b": "qwen1_5_4b",
     "gemma2-9b": "gemma2_9b",
     "qwen2-0.5b": "qwen2_0_5b",
@@ -48,5 +47,5 @@ def get(name: str) -> ModelConfig:
     return mod.CONFIG.validate()
 
 
-def all_configs() -> Dict[str, ModelConfig]:
+def all_configs() -> dict[str, ModelConfig]:
     return {a: get(a) for a in ARCH_IDS}

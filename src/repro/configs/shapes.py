@@ -15,7 +15,6 @@ Skips (recorded in DESIGN.md §Arch-applicability):
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,7 +30,7 @@ class ShapeSpec:
     mode: str                  # "train" | "prefill" | "decode"
 
 
-SHAPES: Dict[str, ShapeSpec] = {
+SHAPES: dict[str, ShapeSpec] = {
     "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
     "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
     "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
@@ -41,7 +40,7 @@ SHAPES: Dict[str, ShapeSpec] = {
 SHAPE_IDS = tuple(SHAPES)
 
 
-def skip_reason(cfg: ModelConfig, shape: ShapeSpec) -> Optional[str]:
+def skip_reason(cfg: ModelConfig, shape: ShapeSpec) -> str | None:
     """None if the (arch, shape) cell runs; otherwise why it is skipped."""
     if cfg.is_encoder_only and shape.mode in ("decode",):
         return "encoder-only: no autoregressive decode step"
@@ -55,7 +54,7 @@ def skip_reason(cfg: ModelConfig, shape: ShapeSpec) -> Optional[str]:
     return None
 
 
-def live_cells() -> List[Tuple[str, str]]:
+def live_cells() -> list[tuple[str, str]]:
     """All (arch, shape) pairs that run (31 of the 40)."""
     from repro import configs as C
     out = []
@@ -75,7 +74,7 @@ def _sds(shape, dtype):
     return jax.ShapeDtypeStruct(shape, dtype)
 
 
-def train_batch_spec(cfg: ModelConfig, shape: ShapeSpec) -> Dict:
+def train_batch_spec(cfg: ModelConfig, shape: ShapeSpec) -> dict:
     """The batch pytree for train_step / loss_fn."""
     B, S = shape.global_batch, shape.seq_len
     if cfg.frontend == "frames":
@@ -90,7 +89,7 @@ def train_batch_spec(cfg: ModelConfig, shape: ShapeSpec) -> Dict:
             "labels": _sds((B, S), jnp.int32)}
 
 
-def prefill_batch_spec(cfg: ModelConfig, shape: ShapeSpec) -> Dict:
+def prefill_batch_spec(cfg: ModelConfig, shape: ShapeSpec) -> dict:
     B, S = shape.global_batch, shape.seq_len
     if cfg.frontend == "frames":
         return {"frames": _sds((B, S, cfg.d_model), jnp.bfloat16)}
@@ -105,7 +104,7 @@ def decode_token_spec(cfg: ModelConfig, shape: ShapeSpec):
     return _sds((shape.global_batch, 1), jnp.int32)
 
 
-def input_specs(cfg: ModelConfig, shape_name: str) -> Dict:
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
     """Everything the corresponding step function takes (minus params/cache)."""
     shape = SHAPES[shape_name]
     if shape.mode == "train":

@@ -33,7 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Iterator, List, Optional
+from collections.abc import Iterator
 
 from repro.core.pgemm import PGEMM
 
@@ -260,7 +260,7 @@ def cost_simd(op: PGEMM, array: ArrayShape) -> CostReport:
 
 
 def candidate_costs(op: PGEMM, array: ArrayShape,
-                    k_folds: Optional[List[int]] = None) -> Iterator[CostReport]:
+                    k_folds: list[int] | None = None) -> Iterator[CostReport]:
     """Enumerate the full (dataflow x k_fold x direction) space for one array
     shape — the inner loop of the paper's scheduling exploration."""
     if k_folds is None:

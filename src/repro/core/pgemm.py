@@ -19,7 +19,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import math
-from typing import List, Sequence, Tuple, Union
+from collections.abc import Sequence
 
 from repro.core.precision import Precision
 
@@ -103,7 +103,7 @@ class VectorOp:
         return self.n_elems
 
 
-Operator = Union[PGEMM, VectorOp]
+Operator = PGEMM | VectorOp
 
 
 # ---------------------------------------------------------------------------
@@ -140,8 +140,8 @@ def conv2d_as_pgemm(
     batch: int,
     in_ch: int,
     out_ch: int,
-    img_hw: Tuple[int, int],
-    kernel_hw: Tuple[int, int],
+    img_hw: tuple[int, int],
+    kernel_hw: tuple[int, int],
     stride: int = 1,
     pad: int = 0,
     precision: Precision,
@@ -190,10 +190,10 @@ def total_flops(ops: Sequence[Operator]) -> int:
     return sum(op.flops for op in ops)
 
 
-def split_paths(ops: Sequence[Operator]) -> Tuple[List[PGEMM], List[VectorOp]]:
+def split_paths(ops: Sequence[Operator]) -> tuple[list[PGEMM], list[VectorOp]]:
     """Partition a workload's operator list by execution path."""
-    gemms: List[PGEMM] = []
-    vecs: List[VectorOp] = []
+    gemms: list[PGEMM] = []
+    vecs: list[VectorOp] = []
     for op in ops:
         if classify(op) is ExecPath.GEMM:
             assert isinstance(op, PGEMM)

@@ -21,7 +21,6 @@ from __future__ import annotations
 import dataclasses
 import enum
 import math
-from typing import Dict
 
 PE_BITS = 8  # paper's basic PE precision
 
@@ -77,7 +76,7 @@ FP32 = Precision("FP32", 32, 24, PClass.FLOAT)
 FP64 = Precision("FP64", 64, 53, PClass.FLOAT)
 
 ALL_PRECISIONS = (INT8, INT16, INT32, INT64, BP16, FP16, FP32, FP64)
-BY_NAME: Dict[str, Precision] = {p.name: p for p in ALL_PRECISIONS}
+BY_NAME: dict[str, Precision] = {p.name: p for p in ALL_PRECISIONS}
 
 _DTYPE_TO_NAME = {"int8": "INT8", "int16": "INT16", "int32": "INT32",
                   "int64": "INT64", "bfloat16": "BP16", "float16": "FP16",

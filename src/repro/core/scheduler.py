@@ -23,7 +23,7 @@ import collections
 import dataclasses
 import math
 import threading
-from typing import Dict, List, Optional, Sequence, Tuple
+from collections.abc import Sequence
 
 from repro.core.dataflow import (ArrayShape, CostReport, Dataflow, Direction,
                                  candidate_costs)
@@ -61,7 +61,7 @@ class GTAConfig:
     def groups(self) -> int:
         return max(1, self.lanes // self.group_lanes)
 
-    def arrangements(self) -> List[ArrayShape]:
+    def arrangements(self) -> list[ArrayShape]:
         """All (rows x cols) arrays reachable by re-arranging the lanes of
         ONE mask group."""
         n = self.group_lanes
@@ -78,7 +78,7 @@ class ScheduleChoice:
     """The selected schedule plus the full explored space (for analysis)."""
 
     best: CostReport
-    space: Tuple[CostReport, ...]
+    space: tuple[CostReport, ...]
 
     @property
     def cycles(self) -> float:
@@ -106,9 +106,9 @@ def sum_of_squares_priority(reports: Sequence[CostReport]) -> CostReport:
 
 
 def explore(op: PGEMM, config: GTAConfig,
-            k_folds: Optional[List[int]] = None) -> ScheduleChoice:
+            k_folds: list[int] | None = None) -> ScheduleChoice:
     """Enumerate (arrangement x dataflow x fold x direction) and select."""
-    space: List[CostReport] = []
+    space: list[CostReport] = []
     for array in config.arrangements():
         space.extend(candidate_costs(op, array, k_folds=k_folds))
     best = sum_of_squares_priority(space)
@@ -116,7 +116,7 @@ def explore(op: PGEMM, config: GTAConfig,
 
 
 def schedule_workload(ops: Sequence[PGEMM], config: GTAConfig,
-                      ) -> List[ScheduleChoice]:
+                      ) -> list[ScheduleChoice]:
     """Schedule every p-GEMM of a workload independently (the paper schedules
     per-operator; inter-operator fusion is out of scope)."""
     return [explore(op, config) for op in ops]
@@ -126,7 +126,7 @@ def schedule_workload(ops: Sequence[PGEMM], config: GTAConfig,
 # ScheduleCache: memoized schedule selection for the serving hot path
 # ---------------------------------------------------------------------------
 
-GemmKey = Tuple[int, int, int, str]  # (M, N, K, precision name)
+GemmKey = tuple[int, int, int, str]  # (M, N, K, precision name)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -158,18 +158,18 @@ class ScheduleCache:
     admission thread while benchmarks read stats.
     """
 
-    def __init__(self, config: Optional[GTAConfig] = None,
-                 k_folds: Optional[List[int]] = None):
+    def __init__(self, config: GTAConfig | None = None,
+                 k_folds: list[int] | None = None):
         self.config = config or GTAConfig()
         self.k_folds = k_folds
-        self._entries: Dict[GemmKey, CachedChoice] = {}
+        self._entries: dict[GemmKey, CachedChoice] = {}
         self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
         #: bounded tail of (key, CachedChoice) kernel applications — enough
         #: for tests/benchmarks to assert the choice landed without growing
         #: forever on a long-running serving hot path.
-        self.applied: "collections.deque[Tuple[GemmKey, CachedChoice]]" = (
+        self.applied: "collections.deque[tuple[GemmKey, CachedChoice]]" = (
             collections.deque(maxlen=1024))
         self.applied_total = 0
 
@@ -179,7 +179,7 @@ class ScheduleCache:
         name = precision if isinstance(precision, str) else precision.name
         return (int(M), int(N), int(K), name)
 
-    def realizable_k_folds(self, K: int) -> List[int]:
+    def realizable_k_folds(self, K: int) -> list[int]:
         """The fold candidates the kernel can actually execute for this
         contraction: fold bands must tile the K grid evenly, and the finest
         TPU block granularity is ``tiling.MXU_DIM`` — so only divisors of
@@ -226,8 +226,8 @@ class ScheduleCache:
     def note_applied(self, M: int, N: int, K: int,
                      precision: "Precision | str",
                      choice: CachedChoice, *,
-                     effective_k_fold: Optional[int] = None,
-                     effective_dataflow: Optional[Dataflow] = None) -> None:
+                     effective_k_fold: int | None = None,
+                     effective_dataflow: Dataflow | None = None) -> None:
         """Record one kernel application of ``choice``.  The applied log
         stores what EXECUTED, not what was requested: callers pass
         ``effective_k_fold`` when the kernel degraded the fold to fit the
@@ -246,13 +246,13 @@ class ScheduleCache:
     def __len__(self) -> int:
         return len(self._entries)
 
-    def stats(self) -> Dict[str, int]:
+    def stats(self) -> dict[str, int]:
         with self._lock:
             return {"hits": self.hits, "misses": self.misses,
                     "entries": len(self._entries),
                     "applied": self.applied_total}
 
-    def summary(self) -> List[Tuple[GemmKey, CachedChoice]]:
+    def summary(self) -> list[tuple[GemmKey, CachedChoice]]:
         """Entries sorted by modeled cycles, heaviest first."""
         with self._lock:
             return sorted(self._entries.items(),
@@ -263,10 +263,10 @@ class ScheduleCache:
 # Pareto utilities (used by tests + Fig. 9 analysis)
 # ---------------------------------------------------------------------------
 
-def pareto_front(reports: Sequence[CostReport]) -> List[CostReport]:
+def pareto_front(reports: Sequence[CostReport]) -> list[CostReport]:
     """Non-dominated (cycles, traffic) points, ascending by cycles."""
     pts = sorted(reports, key=lambda r: (r.cycles, r.traffic_bytes))
-    front: List[CostReport] = []
+    front: list[CostReport] = []
     best_t = math.inf
     for r in pts:
         if r.traffic_bytes < best_t:

@@ -30,7 +30,7 @@ re-fetches, VPU chaining re-reads, and GTA stream/spill traffic alike).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from collections.abc import Sequence
 
 from repro.core import pgemm as P
 from repro.core.pgemm import Operator, PGEMM, VectorOp
@@ -64,10 +64,10 @@ class SimResult:
 class _Platform:
     name = "abstract"
 
-    def run_pgemm(self, op: PGEMM) -> Tuple[float, float]:
+    def run_pgemm(self, op: PGEMM) -> tuple[float, float]:
         raise NotImplementedError
 
-    def run_vector(self, op: VectorOp) -> Tuple[float, float]:
+    def run_vector(self, op: VectorOp) -> tuple[float, float]:
         raise NotImplementedError
 
     def run(self, ops: Sequence[Operator]) -> SimResult:
@@ -117,7 +117,7 @@ class GTASim(_Platform):
                              batch=max(1, op.batch // max(1, _CEIL(g, gm * gn))))
         return None
 
-    def run_pgemm(self, op: PGEMM) -> Tuple[float, float]:
+    def run_pgemm(self, op: PGEMM) -> tuple[float, float]:
         """The group count is itself a scheduling decision (how many mask
         sub-regions to carve, §4.2): enumerate powers of two up to the
         physical group count, keep the fastest, and break near-ties (within
@@ -125,7 +125,7 @@ class GTASim(_Platform):
         *within-machine* dataflow/tiling choice inside ``explore``; carving
         the machine is a throughput decision — idle groups help nothing.)"""
         max_g = self.config.groups
-        cands: List[Tuple[float, float]] = []
+        cands: list[tuple[float, float]] = []
         g = 1
         while g <= max_g:
             sub = self._split(op, g)
@@ -140,7 +140,7 @@ class GTASim(_Platform):
         near = [ct for ct in cands if ct[0] <= 1.05 * min_c]
         return min(near, key=lambda ct: ct[1])
 
-    def run_vector(self, op: VectorOp) -> Tuple[float, float]:
+    def run_vector(self, op: VectorOp) -> tuple[float, float]:
         l = op.precision.limbs
         mults_per_cycle = max(1, self.config.total_pes // (l * l))
         cycles = _CEIL(op.flops, mults_per_cycle)
@@ -173,7 +173,7 @@ class VPUSim(_Platform):
     def _rate(self, p: Precision) -> int:
         return max(1, self.lanes * self.datapath_bits // p.bits)
 
-    def run_pgemm(self, op: PGEMM) -> Tuple[float, float]:
+    def run_pgemm(self, op: PGEMM) -> tuple[float, float]:
         rate = self._rate(op.precision)
         eb = op.precision.bytes
         cycles = _CEIL(op.macs, rate)
@@ -185,7 +185,7 @@ class VPUSim(_Platform):
         traffic = (2 * op.macs + op.M * op.N * op.batch) * eb
         return float(cycles), float(traffic)
 
-    def run_vector(self, op: VectorOp) -> Tuple[float, float]:
+    def run_vector(self, op: VectorOp) -> tuple[float, float]:
         rate = self._rate(op.precision)
         return float(_CEIL(op.flops, rate)), float(op.min_bytes)
 
@@ -223,7 +223,7 @@ class GPGPUSim(_Platform):
     def _tc_macs_per_cycle(self, p: Precision) -> float:
         return self._MACS_PER_S[p.name] / (self.FREQ_GHZ * 1e9)
 
-    def run_pgemm(self, op: PGEMM) -> Tuple[float, float]:
+    def run_pgemm(self, op: PGEMM) -> tuple[float, float]:
         rate = self._tc_macs_per_cycle(op.precision)
         # fragment-fit utilization: padded to fragment multiples
         um = op.M / (_CEIL(op.M, self.FRAG_M) * self.FRAG_M)
@@ -241,7 +241,7 @@ class GPGPUSim(_Platform):
         c = op.M * op.N * eb
         return float(cycles), float((a + b + c) * op.batch)
 
-    def run_vector(self, op: VectorOp) -> Tuple[float, float]:
+    def run_vector(self, op: VectorOp) -> tuple[float, float]:
         # 16896 FP32 CUDA cores, 1 FMA/cycle each; wider types run slower.
         flops_per_cycle = 16896 * 2
         scale = max(1.0, op.precision.bits / 32)
@@ -264,7 +264,7 @@ class CGRASim(_Platform):
         self.mapping_util = mapping_util
         self.name = "CGRA-hycube"
 
-    def run_pgemm(self, op: PGEMM) -> Tuple[float, float]:
+    def run_pgemm(self, op: PGEMM) -> tuple[float, float]:
         pes = self.rows * self.cols
         eff = pes * self.mapping_util
         # FUs are 32-bit; wider multiplies take quadratic extra initiation
@@ -276,7 +276,7 @@ class CGRASim(_Platform):
         c = op.M * op.N * eb
         return float(cycles), float((a + b + c) * op.batch)
 
-    def run_vector(self, op: VectorOp) -> Tuple[float, float]:
+    def run_vector(self, op: VectorOp) -> tuple[float, float]:
         pes = self.rows * self.cols
         scale = max(1.0, op.precision.bits / 32)
         cycles = op.flops * scale / (pes * self.mapping_util)
@@ -290,7 +290,7 @@ class CGRASim(_Platform):
 BASELINES = ("VPU-Ara", "GPGPU-H100", "CGRA-hycube")
 
 #: GTA lane count matching each baseline's compute area (see module doc).
-PARITY_LANES: Dict[str, int] = {
+PARITY_LANES: dict[str, int] = {
     "VPU-Ara": 4,
     "GPGPU-H100": GPGPU_EQUIV_LANES,
     "CGRA-hycube": CGRA_EQUIV_LANES,
@@ -308,13 +308,13 @@ def _baseline(name: str) -> _Platform:
 
 
 def compare_vs(baseline: str, ops: Sequence[Operator]
-               ) -> Tuple[SimResult, SimResult]:
+               ) -> tuple[SimResult, SimResult]:
     """(GTA@area-parity result, baseline result) for one workload."""
     gta = GTASim(GTAConfig(lanes=PARITY_LANES[baseline]))
     return gta.run(ops), _baseline(baseline).run(ops)
 
 
-def speedup_and_mem_eff(gta: SimResult, base: SimResult) -> Tuple[float, float]:
+def speedup_and_mem_eff(gta: SimResult, base: SimResult) -> tuple[float, float]:
     """(cycle speedup, memory-traffic efficiency) of GTA over the baseline
     at the paper's same-clock assumption."""
     return (base.cycles / max(gta.cycles, 1e-12),

@@ -23,7 +23,7 @@ buffering => block working set <= ~4 MiB.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, List, Optional, Sequence, Tuple
+from collections.abc import Iterable, Sequence
 
 from repro.core.dataflow import Dataflow
 
@@ -47,7 +47,7 @@ class BlockConfig:
     hbm_bytes: float = 0.0
 
     @property
-    def key(self) -> Tuple[int, int, int, str]:
+    def key(self) -> tuple[int, int, int, str]:
         return (self.bm, self.bn, self.bk, self.dataflow.value)
 
 
@@ -59,7 +59,7 @@ def _align(x: int, a: int) -> int:
     return max(a, (x // a) * a) if x >= a else a
 
 
-def _block_candidates(dim: int, align: int, caps: Sequence[int]) -> List[int]:
+def _block_candidates(dim: int, align: int, caps: Sequence[int]) -> list[int]:
     out = []
     for c in caps:
         c = min(c, _align(dim, align) if dim >= align else align)
@@ -78,23 +78,31 @@ def candidate_block_configs(
     M: int, N: int, K: int, *, abytes: int = 2, bbytes: int = 2,
     obytes: int = 4, limb_factor: int = 1,
     budget: int = BLOCK_BUDGET_BYTES,
-) -> List[BlockConfig]:
+) -> list[BlockConfig]:
     """Enumerate (bm, bn, bk, dataflow) candidates with costs."""
     al_m = _SUBLANE.get(abytes, 8)
     cand_m = _block_candidates(M, al_m, (128, 256, 512))
     cand_n = _block_candidates(N, MXU_DIM, (128, 256, 512, 1024))
     cand_k = _block_candidates(K, MXU_DIM, (128, 256, 512, 1024, 2048))
 
-    out: List[BlockConfig] = []
+    out: list[BlockConfig] = []
     for bm in cand_m:
         for bn in cand_n:
             for bk in cand_k:
-                if working_set_bytes(bm, bn, bk, abytes, bbytes, obytes) > budget:
+                ws = working_set_bytes(bm, bn, bk, abytes, bbytes, obytes)
+                if ws > budget:
                     continue
                 gm, gn, gk = _ceil(M, bm), _ceil(N, bn), _ceil(K, bk)
                 passes = (gm * gn * gk * (bm / MXU_DIM) * (bn / MXU_DIM)
                           * (bk / MXU_DIM) * limb_factor)
                 for df in (Dataflow.WS, Dataflow.IS, Dataflow.OS):
+                    # OS keeps a private fp32 accumulator tile resident
+                    # across K-steps (the mpgemm scratch / spill plane) on
+                    # top of the streamed operands — charge it, or an OS
+                    # pick can exceed VMEM that WS/IS fit (gta-lint
+                    # Pass 1 `vmem-residency` verifies the same bound).
+                    if df is Dataflow.OS and ws + bm * bn * 4 > budget:
+                        continue
                     if df is Dataflow.WS:
                         # B blocks stationary while M-steps stream
                         a = M * K * gn * abytes
@@ -117,7 +125,7 @@ def choose_block_config(
     M: int, N: int, K: int, *, abytes: int = 2, bbytes: int = 2,
     obytes: int = 4, limb_factor: int = 1,
     budget: int = BLOCK_BUDGET_BYTES,
-    allowed: Optional[Iterable[Dataflow]] = None,
+    allowed: Iterable[Dataflow] | None = None,
 ) -> BlockConfig:
     """Paper's priority rule over the TPU candidate space."""
     cands = candidate_block_configs(M, N, K, abytes=abytes, bbytes=bbytes,

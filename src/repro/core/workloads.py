@@ -12,7 +12,7 @@ modular multiplication, etc.).  Precisions follow Table 2:
 
 from __future__ import annotations
 
-from typing import Dict, List, Sequence
+from collections.abc import Sequence
 
 from repro.core.pgemm import (Operator, PGEMM, VectorOp, bignum_mult_as_pgemm,
                               conv2d_as_pgemm, linear_as_pgemm)
@@ -20,7 +20,7 @@ from repro.core.precision import (BP16, FP32, FP64, INT8, INT16, INT32,
                                   INT64, Precision)
 
 
-def _alexnet_convs(precision: Precision, batch: int) -> List[PGEMM]:
+def _alexnet_convs(precision: Precision, batch: int) -> list[PGEMM]:
     """AlexNet's five conv layers as im2col p-GEMMs."""
     specs = [
         ("conv1", 3, 96, (227, 227), (11, 11), 4, 0),
@@ -37,7 +37,7 @@ def _alexnet_convs(precision: Precision, batch: int) -> List[PGEMM]:
     return ops
 
 
-def _alexnet_fcs(precision: Precision, batch: int) -> List[PGEMM]:
+def _alexnet_fcs(precision: Precision, batch: int) -> list[PGEMM]:
     return [
         linear_as_pgemm("alexnet.fc6", batch_tokens=batch, d_in=9216,
                         d_out=4096, precision=precision),
@@ -48,7 +48,7 @@ def _alexnet_fcs(precision: Precision, batch: int) -> List[PGEMM]:
     ]
 
 
-def bnm() -> List[Operator]:
+def bnm() -> list[Operator]:
     """Big-number multiplication: 2048-bit x 2048-bit modular multiplies
     (RSA/NTT-style), 4096 of them, on INT64 limb arithmetic."""
     return [
@@ -59,7 +59,7 @@ def bnm() -> List[Operator]:
     ]
 
 
-def rgb() -> List[Operator]:
+def rgb() -> list[Operator]:
     """sRGB->XYZ: a 3x3 color-space matrix applied per pixel of a 1080p
     frame (M = H*W, N = 3, K = 3) + gamma-decode vector pass."""
     return [
@@ -69,7 +69,7 @@ def rgb() -> List[Operator]:
     ]
 
 
-def ffe() -> List[Operator]:
+def ffe() -> list[Operator]:
     """Feed-forward equalizer: 128-tap FIR over 1 s of 48 kHz stereo audio,
     INT16 — a skinny p-GEMM (M=samples, N=channels, K=taps)."""
     return [
@@ -79,12 +79,12 @@ def ffe() -> List[Operator]:
     ]
 
 
-def md() -> List[Operator]:
+def md() -> list[Operator]:
     """Blocked LU decomposition of a 1024x1024 INT32 matrix: the trailing
     rank-b updates dominate — model the update sweep as shrinking GEMMs
     (block 64) plus pivoting/scaling vector work."""
     n, b = 1024, 64
-    ops: List[Operator] = []
+    ops: list[Operator] = []
     k = n
     while k > b:
         k -= b
@@ -94,7 +94,7 @@ def md() -> List[Operator]:
     return ops
 
 
-def pca() -> List[Operator]:
+def pca() -> list[Operator]:
     """PCA on a 8192-sample x 1024-feature FP64 matrix: covariance GEMM +
     a few power-iteration matvecs + mean-centering vector pass."""
     return [
@@ -105,11 +105,11 @@ def pca() -> List[Operator]:
     ]
 
 
-def alt() -> List[Operator]:
+def alt() -> list[Operator]:
     """AlexNet training step (batch 128, FP32): fwd + ~2x bwd GEMM volume
     (dgrad + wgrad), plus activation/loss vector work."""
     fwd = _alexnet_convs(FP32, 128) + _alexnet_fcs(FP32, 128)
-    ops: List[Operator] = []
+    ops: list[Operator] = []
     for g in fwd:
         ops.append(g)                                        # forward
         ops.append(g.scaled(g.name + ".dgrad"))              # data grad
@@ -121,7 +121,7 @@ def alt() -> List[Operator]:
     return ops
 
 
-def ffl() -> List[Operator]:
+def ffl() -> list[Operator]:
     """GPT-3 175B feed-forward layer, BP16: d=12288, ffn=49152, 2048 tokens
     (one layer fwd; up + down projections) + GeLU vector pass."""
     return [
@@ -134,9 +134,9 @@ def ffl() -> List[Operator]:
     ]
 
 
-def ali() -> List[Operator]:
+def ali() -> list[Operator]:
     """AlexNet INT8 inference, batch 32."""
-    ops: List[Operator] = list(_alexnet_convs(INT8, 32))
+    ops: list[Operator] = list(_alexnet_convs(INT8, 32))
     ops += _alexnet_fcs(INT8, 32)
     ops.append(VectorOp("ali.relu", n_elems=32 * 650_000, precision=INT8,
                         ops_per_elem=1))
@@ -145,10 +145,10 @@ def ali() -> List[Operator]:
     return ops
 
 
-def nerf() -> List[Operator]:
+def nerf() -> list[Operator]:
     """NeRF MLP, FP32: 8 hidden layers of width 256 over 65536 ray samples +
     positional-encoding and volume-rendering vector passes."""
-    ops: List[Operator] = [
+    ops: list[Operator] = [
         linear_as_pgemm("nerf.in", batch_tokens=65536, d_in=60, d_out=256,
                         precision=FP32)]
     for i in range(7):
@@ -164,7 +164,7 @@ def nerf() -> List[Operator]:
     return ops
 
 
-WORKLOADS: Dict[str, Sequence[Operator]] = {}
+WORKLOADS: dict[str, Sequence[Operator]] = {}
 
 
 def _register():
@@ -174,7 +174,7 @@ def _register():
 
 _register()
 
-WORKLOAD_PRECISION: Dict[str, Precision] = {
+WORKLOAD_PRECISION: dict[str, Precision] = {
     "BNM": INT64, "RGB": INT8, "FFE": INT16, "MD": INT32, "PCA": FP64,
     "ALT": FP32, "FFL": BP16, "ALI": INT8, "NERF": FP32,
 }

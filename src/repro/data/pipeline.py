@@ -14,7 +14,6 @@ inputs shifted by one with boundary masking.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
 
 import numpy as np
 
@@ -45,7 +44,7 @@ class SyntheticLM:
         return np.random.default_rng(
             np.random.SeedSequence([self.cfg.seed, step, row]))
 
-    def _row(self, step: int, row: int) -> Tuple[np.ndarray, np.ndarray]:
+    def _row(self, step: int, row: int) -> tuple[np.ndarray, np.ndarray]:
         c = self.cfg
         rng = self._rng(step, row)
         toks = np.empty(c.seq_len + 1, np.int32)
@@ -64,14 +63,14 @@ class SyntheticLM:
         labels = np.where(inputs == EOS, MASK_LABEL, labels)
         return inputs, labels
 
-    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+    def batch_at(self, step: int) -> dict[str, np.ndarray]:
         c = self.cfg
         rows = [self._row(step, r) for r in range(c.global_batch)]
         return {"tokens": np.stack([r[0] for r in rows]),
                 "labels": np.stack([r[1] for r in rows])}
 
     def host_batch_at(self, step: int, host_id: int, n_hosts: int
-                      ) -> Dict[str, np.ndarray]:
+                      ) -> dict[str, np.ndarray]:
         """Only this host's rows (row-contiguous sharding)."""
         c = self.cfg
         assert c.global_batch % n_hosts == 0, (c.global_batch, n_hosts)
@@ -82,8 +81,8 @@ class SyntheticLM:
 
 
 def make_batch(cfg: ModelConfig, data: DataConfig, step: int,
-               rng_frontend: Optional[np.random.Generator] = None
-               ) -> Dict[str, np.ndarray]:
+               rng_frontend: np.random.Generator | None = None
+               ) -> dict[str, np.ndarray]:
     """Arch-aware batch (adds stub frontend tensors where required)."""
     ds = SyntheticLM(data)
     rng = rng_frontend or np.random.default_rng(

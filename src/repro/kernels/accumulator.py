@@ -13,7 +13,6 @@ All functions are pure jnp (VPU path), shape-polymorphic, and work without
 
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -22,7 +21,7 @@ _U32 = jnp.uint32
 _MASK32 = jnp.uint32(0xFFFFFFFF)
 
 
-def _sext64(s: jax.Array) -> Tuple[jax.Array, jax.Array]:
+def _sext64(s: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Sign-extend int32 -> (hi, lo) uint32 pair."""
     lo = s.view(_U32) if s.dtype == jnp.int32 else s.astype(jnp.int32).view(_U32)
     hi = jnp.where(s < 0, _MASK32, _U32(0))
@@ -30,7 +29,7 @@ def _sext64(s: jax.Array) -> Tuple[jax.Array, jax.Array]:
 
 
 def _shl64(hi: jax.Array, lo: jax.Array, s: int
-           ) -> Tuple[jax.Array, jax.Array]:
+           ) -> tuple[jax.Array, jax.Array]:
     """Logical left shift of a uint32 pair by a static amount 0..63."""
     if s == 0:
         return hi, lo
@@ -41,7 +40,7 @@ def _shl64(hi: jax.Array, lo: jax.Array, s: int
     return lo << _U32(s - 32), jnp.zeros_like(lo)
 
 
-def _add64(h1, l1, h2, l2) -> Tuple[jax.Array, jax.Array]:
+def _add64(h1, l1, h2, l2) -> tuple[jax.Array, jax.Array]:
     """uint32-pair addition with carry (wrapping, mod 2^64)."""
     lo = l1 + l2
     carry = (lo < l1).astype(_U32)
@@ -49,7 +48,7 @@ def _add64(h1, l1, h2, l2) -> Tuple[jax.Array, jax.Array]:
 
 
 def combine_diagonals(diags: jax.Array, limb_bits: int
-                      ) -> Tuple[jax.Array, jax.Array]:
+                      ) -> tuple[jax.Array, jax.Array]:
     """Recombine anti-diagonal partial sums into the exact 64-bit result.
 
     diags: (D, ...) int32, D = la + lb - 1 anti-diagonals.

@@ -51,7 +51,6 @@ is how the TPU adaptation keeps the paper's scheduling space meaningful.
 from __future__ import annotations
 
 import functools
-from typing import Dict
 
 import jax
 import jax.numpy as jnp
@@ -361,7 +360,7 @@ def mpgemm(a: jax.Array, b: jax.Array, *, dataflow: Dataflow = Dataflow.OS,
 def dispatch_plan(M: int, N: int, K: int, *, dataflow: Dataflow,
                   bm: int, bn: int, bk: int, k_fold: int = 1,
                   epilogue: str = "fused",
-                  abytes: int = 4, bbytes: int = 4) -> Dict:
+                  abytes: int = 4, bbytes: int = 4) -> dict:
     """Structural model of one mpgemm dispatch (block-divisible shapes).
 
     Returns grid/fold facts plus the two telemetry terms the benchmark

@@ -35,7 +35,7 @@ off-TPU, where Pallas runs in interpret mode).
 from __future__ import annotations
 
 import functools
-from typing import Any, Optional, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -67,7 +67,7 @@ def _pad2(x: jax.Array, m0: int, m1: int) -> jax.Array:
 @functools.lru_cache(maxsize=4096)
 def cached_block_config(M: int, N: int, K: int, abytes: int, bbytes: int,
                         obytes: int, limb_factor: int,
-                        allowed: Optional[Tuple[Dataflow, ...]]
+                        allowed: tuple[Dataflow, ...] | None
                         ) -> BlockConfig:
     """Memoized :func:`repro.core.tiling.choose_block_config` on the static
     (M, N, K, operand bytes, allowed-dataflow) key: hot-path ``matmul`` /
@@ -89,10 +89,10 @@ def _auto_blocks(M: int, N: int, K: int, abytes: int, bbytes: int,
 # ---------------------------------------------------------------------------
 
 def limb_matmul(a: jax.Array, b: jax.Array, *,
-                in_bits: Optional[int] = None,
-                blocks: Optional[Tuple[int, int, int]] = None,
-                interpret: Optional[bool] = None
-                ) -> Tuple[jax.Array, jax.Array]:
+                in_bits: int | None = None,
+                blocks: tuple[int, int, int] | None = None,
+                interpret: bool | None = None
+                ) -> tuple[jax.Array, jax.Array]:
     """Exact integer GEMM via limb decomposition: returns (hi, lo) int32
     pairs = (a @ b) mod 2^64 in two's complement.
 
@@ -133,11 +133,11 @@ def limb_matmul_i32(a: jax.Array, b: jax.Array, **kw) -> jax.Array:
 
 def matmul(a: jax.Array, b: jax.Array, *, dataflow: Dataflow = Dataflow.OS,
            out_dtype=jnp.float32,
-           blocks: Optional[Tuple[int, int, int]] = None,
-           k_fold: Optional[int] = None,
-           schedule: Optional[ScheduleCache] = None,
+           blocks: tuple[int, int, int] | None = None,
+           k_fold: int | None = None,
+           schedule: ScheduleCache | None = None,
            epilogue: str = "fused",
-           interpret: Optional[bool] = None) -> jax.Array:
+           interpret: bool | None = None) -> jax.Array:
     """GEMM through the mpgemm kernel (pads to block multiples; already
     block-aligned shapes skip the pad/slice round-trip entirely).
 
@@ -208,7 +208,7 @@ def matmul(a: jax.Array, b: jax.Array, *, dataflow: Dataflow = Dataflow.OS,
 # int8-weight quantized matmul (serving fast path)
 # ---------------------------------------------------------------------------
 
-def quantize_weights(w: jax.Array) -> Tuple[jax.Array, jax.Array]:
+def quantize_weights(w: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Symmetric per-output-channel int8 quantization: w (K, N) ->
     (w_q int8 (K, N), scale f32 (N,))."""
     amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=0, keepdims=True)
@@ -219,9 +219,9 @@ def quantize_weights(w: jax.Array) -> Tuple[jax.Array, jax.Array]:
 
 def quant_matmul(x: jax.Array, w_q: jax.Array, scale: jax.Array, *,
                  out_dtype=jnp.float32,
-                 blocks: Optional[Tuple[int, int, int]] = None,
-                 schedule: Optional[ScheduleCache] = None,
-                 interpret: Optional[bool] = None) -> jax.Array:
+                 blocks: tuple[int, int, int] | None = None,
+                 schedule: ScheduleCache | None = None,
+                 interpret: bool | None = None) -> jax.Array:
     """x (M, K) @ dequant(w_q (K, N), scale (N,)) -> (M, N).
 
     With ``schedule`` the shape is resolved through the paper-§5
@@ -264,8 +264,8 @@ class GemmBackend:
     scheduling work happens at trace time against static shapes, so a
     compiled serving step contains only the chosen Pallas dispatches."""
 
-    def __init__(self, schedule: Optional[ScheduleCache] = None,
-                 interpret: Optional[bool] = None):
+    def __init__(self, schedule: ScheduleCache | None = None,
+                 interpret: bool | None = None):
         self.schedule = schedule or ScheduleCache()
         self.interpret = interpret
 
@@ -276,7 +276,7 @@ class GemmBackend:
                       interpret=self.interpret)
 
     def dense(self, x: jax.Array, w: Any,
-              b: Optional[jax.Array] = None) -> jax.Array:
+              b: jax.Array | None = None) -> jax.Array:
         """The scheduled analogue of ``models.layers.dense``: x (..., K)
         against a float weight (K, N) or a QuantTensor.  Leading dims
         collapse to ONE (B*S, K) GEMM (batched/stacked LHS — no per-row
@@ -309,7 +309,7 @@ def _backend_for_key(key: Any) -> GemmBackend:
     return GemmBackend()
 
 
-def backend_for(cfg) -> Optional[GemmBackend]:
+def backend_for(cfg) -> GemmBackend | None:
     """The process-wide backend for a model config, or None when the config
     keeps projections on XLA (``gemm_backend != "scheduled"``).  Memoized
     by config equality so every engine/trace/benchmark over the same model

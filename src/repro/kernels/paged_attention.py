@@ -41,7 +41,6 @@ caveat as the other kernels in this package).
 from __future__ import annotations
 
 import functools
-from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -51,7 +50,7 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+def _softcap(x: jax.Array, cap: float | None) -> jax.Array:
     return x if cap is None else jnp.tanh(x / cap) * cap
 
 
@@ -61,8 +60,8 @@ def _softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
 
 def _paged_decode_body(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
                        m_ref, l_ref, acc_ref, *, block_size: int,
-                       scale: float, window: Optional[int],
-                       logit_cap: Optional[float], out_dtype):
+                       scale: float, window: int | None,
+                       logit_cap: float | None, out_dtype):
     b, j = pl.program_id(0), pl.program_id(1)
     nbs = pl.num_programs(1)
 
@@ -112,8 +111,8 @@ def _paged_decode_body(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
                                              "interpret"))
 def paged_decode_kernel(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                         block_table: jax.Array, lengths: jax.Array, *,
-                        scale: float, window: Optional[int] = None,
-                        logit_cap: Optional[float] = None,
+                        scale: float, window: int | None = None,
+                        logit_cap: float | None = None,
                         interpret: bool = False) -> jax.Array:
     """Pallas paged-decode attention.
 
@@ -172,8 +171,8 @@ def gather_pool_blocks(buf: jax.Array, block_table: jax.Array) -> jax.Array:
 
 def gather_fallback(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                     block_table: jax.Array, lengths: jax.Array, *,
-                    scale: float, window: Optional[int] = None,
-                    logit_cap: Optional[float] = None) -> jax.Array:
+                    scale: float, window: int | None = None,
+                    logit_cap: float | None = None) -> jax.Array:
     """Same contract as :func:`paged_decode_kernel`, dense-math reference:
     gathers each row's blocks into a contiguous (B, T, KV, hd) view and
     runs one masked softmax over the valid prefix."""
@@ -199,10 +198,10 @@ def gather_fallback(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
 
 def decode_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                      block_table: jax.Array, lengths: jax.Array, *,
-                     scale: float, window: Optional[int] = None,
-                     logit_cap: Optional[float] = None,
-                     use_kernel: Optional[bool] = None,
-                     interpret: Optional[bool] = None) -> jax.Array:
+                     scale: float, window: int | None = None,
+                     logit_cap: float | None = None,
+                     use_kernel: bool | None = None,
+                     interpret: bool | None = None) -> jax.Array:
     """Paged-decode dispatch: the Pallas kernel on TPU, the pure-JAX
     gather path elsewhere (``use_kernel``/``interpret`` override for
     tests — the kernel runs anywhere under interpret mode)."""
@@ -223,7 +222,7 @@ def decode_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
 # Schedule-space registration (paper §5 over the gather-GEMM shapes)
 # ---------------------------------------------------------------------------
 
-def gather_gemm_shapes(cfg, block_size: int) -> List[Tuple[int, int, int]]:
+def gather_gemm_shapes(cfg, block_size: int) -> list[tuple[int, int, int]]:
     """The two per-block p-GEMMs of the paged-decode chain, per KV head:
     scores (G, block_size, hd) and weighted-value (G, hd_v, block_size).
     MLA decodes in latent space (absorbed path), so its shapes contract

@@ -8,7 +8,6 @@ modulo 2^64 via numpy uint64 wraparound — exactly the semantics of the
 
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -57,7 +56,7 @@ def limb_recompose_ref(digits: np.ndarray, limb_bits: int = LIMB_BITS
 
 
 def int_matmul_mod64_ref(a: np.ndarray, b: np.ndarray
-                         ) -> Tuple[np.ndarray, np.ndarray]:
+                         ) -> tuple[np.ndarray, np.ndarray]:
     """Exact integer matmul modulo 2^64, returned as (hi, lo) int32 pairs
     (two's complement), the multi-precision accumulator's output format."""
     au = a.astype(np.int64).astype(np.uint64)
@@ -106,7 +105,7 @@ def quant_matmul_ref(x: jax.Array, w_q: jax.Array, scale: jax.Array,
     return (acc * scale[None, :].astype(jnp.float32)).astype(out_dtype)
 
 
-def quantize_ref(w: jax.Array, axis: int = 0) -> Tuple[jax.Array, jax.Array]:
+def quantize_ref(w: jax.Array, axis: int = 0) -> tuple[jax.Array, jax.Array]:
     """Symmetric per-channel int8 quantization oracle (channel = last dim)."""
     amax = jnp.max(jnp.abs(w), axis=axis, keepdims=True)
     scale = jnp.where(amax > 0, amax / 127.0, 1.0)

@@ -27,7 +27,7 @@ import json
 import subprocess
 import sys
 import time
-from typing import Any, Dict, Optional, Tuple
+from typing import Any
 
 # TPU v5e-class hardware constants (targets; this container is CPU-only)
 PEAK_FLOPS = 197e12          # bf16 / chip
@@ -37,7 +37,7 @@ ICI_BW = 50e9                # bytes/s / link
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                            "experiments", "dryrun")
 
-def _active_param_counts(cfg, params_sds) -> Tuple[int, int]:
+def _active_param_counts(cfg, params_sds) -> tuple[int, int]:
     """(total_params, active_params) from the eval_shape tree; active
     discounts routed-expert weights by top_k / n_experts (MoE)."""
     import jax
@@ -64,7 +64,7 @@ def _active_param_counts(cfg, params_sds) -> Tuple[int, int]:
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str,
              verbose: bool = True, serve_opt: bool = False
-             ) -> Dict[str, Any]:
+             ) -> dict[str, Any]:
     import jax
     import jax.numpy as jnp
 
@@ -263,7 +263,7 @@ def _result_path(arch: str, shape: str, mesh: str,
 
 
 def run_all(force: bool = False, meshes=("single", "multi"),
-            archs: Optional[list] = None, timeout_s: int = 3000):
+            archs: list | None = None, timeout_s: int = 3000):
     """Full matrix via one subprocess per cell (fresh XLA, resumable)."""
     from repro import configs as CONFIGS
     from repro.configs import shapes as SHP

@@ -18,7 +18,7 @@ cost_analysis on loop-free programs (tests/test_hloanalysis.py).
 from __future__ import annotations
 
 import re
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any
 
 _DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1,
                 "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
@@ -48,7 +48,7 @@ def _numel(dims: str) -> int:
     return n
 
 
-def _first_shape(line: str) -> Optional[Tuple[str, int]]:
+def _first_shape(line: str) -> tuple[str, int] | None:
     m = _SHAPE_RE.search(line)
     if not m:
         return None
@@ -64,15 +64,15 @@ class HloModule:
 
     def __init__(self, text: str, n_devices: int = 1):
         self.n_devices = n_devices
-        self.computations: Dict[str, List[str]] = {}
-        self.entry: Optional[str] = None
+        self.computations: dict[str, list[str]] = {}
+        self.entry: str | None = None
         self._parse(text)
         self.trip_counts = {}
         self._find_trips()
         self.multipliers = self._propagate()
 
     def _parse(self, text: str):
-        cur: Optional[str] = None
+        cur: str | None = None
         for raw in text.splitlines():
             line = raw.strip()
             if not line:
@@ -103,7 +103,7 @@ class HloModule:
     def _find_trips(self):
         """trip(body) from the companion condition computation: the largest
         integer constant compared against the induction variable."""
-        self.whiles: List[Tuple[str, str, str]] = []  # (caller, cond, body)
+        self.whiles: list[tuple[str, str, str]] = []  # (caller, cond, body)
         for name, lines in self.computations.items():
             for ln in lines:
                 m = _WHILE_RE.search(ln)
@@ -122,7 +122,7 @@ class HloModule:
             self.trip_counts[cond] = trips
 
     # -- multiplier propagation ---------------------------------------------------
-    def _edges(self, name: str) -> List[Tuple[str, int]]:
+    def _edges(self, name: str) -> list[tuple[str, int]]:
         """(callee, extra multiplier) edges out of a computation."""
         out = []
         for ln in self.computations.get(name, []):
@@ -137,7 +137,7 @@ class HloModule:
                 out.append((callee, 1))
         return out
 
-    def _propagate(self) -> Dict[str, int]:
+    def _propagate(self) -> dict[str, int]:
         mult = {self.entry: 1}
         stack = [self.entry]
         seen_edges = set()
@@ -157,9 +157,9 @@ class HloModule:
         return mult
 
     # -- accounting ------------------------------------------------------------
-    def _symbols(self, lines: List[str]) -> Dict[str, Tuple[str, List[int]]]:
+    def _symbols(self, lines: list[str]) -> dict[str, tuple[str, list[int]]]:
         """instruction name -> (dtype, dims) from each line's assignment."""
-        table: Dict[str, Tuple[str, List[int]]] = {}
+        table: dict[str, tuple[str, list[int]]] = {}
         for ln in lines:
             mm = re.match(r"(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*"
                           r"([a-z][0-9a-z]*)\[([\d,]*)\]", ln)
@@ -170,7 +170,7 @@ class HloModule:
         return table
 
     @staticmethod
-    def _dot_lhs_dims(line: str, table) -> Optional[List[int]]:
+    def _dot_lhs_dims(line: str, table) -> list[int] | None:
         """LHS operand dims of a ``dot(...)`` instruction.  Optimized HLO
         prints operands either with an inline typed shape
         (``dot(f32[256,512]{1,0} %call, ...)``) or as a bare name
@@ -187,12 +187,12 @@ class HloModule:
             return table[name][1]
         return None
 
-    def dot_flops(self) -> Tuple[float, Dict[str, float]]:
+    def dot_flops(self) -> tuple[float, dict[str, float]]:
         """2*numel(result)*K per dot, times loop multipliers.  Operand
         shapes resolve through the per-computation symbol table (optimized
         HLO references operands by name, not inline shape)."""
         total = 0.0
-        per_comp: Dict[str, float] = {}
+        per_comp: dict[str, float] = {}
         for name, lines in self.computations.items():
             m = self.multipliers.get(name, 0)
             if m == 0:
@@ -219,10 +219,10 @@ class HloModule:
                 total += sub * m
         return total, per_comp
 
-    def collective_bytes(self) -> Dict[str, Any]:
+    def collective_bytes(self) -> dict[str, Any]:
         """Per-device transfer bytes (ring model), loop-aware."""
-        per_op: Dict[str, float] = {}
-        counts: Dict[str, int] = {}
+        per_op: dict[str, float] = {}
+        counts: dict[str, int] = {}
         total = 0.0
         for name, lines in self.computations.items():
             mlt = self.multipliers.get(name, 0)
@@ -262,11 +262,11 @@ class HloModule:
         return {"per_device_bytes": total, "per_op_bytes": per_op,
                 "counts": counts}
 
-    def loop_summary(self) -> List[Tuple[str, int]]:
+    def loop_summary(self) -> list[tuple[str, int]]:
         return sorted(self.trip_counts.items(), key=lambda kv: -kv[1])
 
 
-def analyze(hlo_text: str, n_devices: int = 1) -> Dict[str, Any]:
+def analyze(hlo_text: str, n_devices: int = 1) -> dict[str, Any]:
     mod = HloModule(hlo_text, n_devices)
     flops, per_comp = mod.dot_flops()
     coll = mod.collective_bytes()

@@ -20,7 +20,7 @@ records the convention.
 
 from __future__ import annotations
 
-from typing import Callable, Dict
+from collections.abc import Callable
 
 import jax
 import numpy as np
@@ -132,6 +132,29 @@ def _jaxpr_cost(jaxpr) -> Cost:
             if sub is not None:
                 inner = sub.jaxpr if hasattr(sub, "jaxpr") else sub
                 total += _jaxpr_cost(inner)
+        elif prim == "pallas_call":
+            # the kernel body is a jaxpr over one BLOCK; it runs once per
+            # grid point, so scale by the grid size.  Without this branch
+            # every scheduled mpgemm dispatch costed ZERO flops and the
+            # engine-level roofline silently dropped its dominant GEMMs
+            # (gta-lint Pass 2 `zero-cost-dispatch` guards the fix).
+            sub = eqn.params.get("jaxpr")
+            gm = eqn.params.get("grid_mapping")
+            steps = 1
+            if gm is not None:
+                for g in getattr(gm, "grid", ()):
+                    try:
+                        steps *= int(g)
+                    except (TypeError, ValueError):
+                        pass        # symbolic grid dim: count once
+            if sub is not None:
+                inner = sub.jaxpr if hasattr(sub, "jaxpr") else sub
+                total += _jaxpr_cost(inner).scaled(float(steps))
+            # operands stream HBM<->VMEM once per dispatch (same
+            # convention as the dot branch: read ins, write outs)
+            byts = sum(_bytes(v.aval) for v in eqn.invars)
+            byts += sum(_bytes(v.aval) for v in eqn.outvars)
+            total += Cost(0.0, float(byts))
         elif prim in ("reduce_sum", "reduce_max", "reduce_min",
                       "reduce_prod", "cumsum", "argmax", "argmin"):
             total += Cost(float(_numel(eqn.invars[0].aval)),
@@ -146,7 +169,7 @@ def _jaxpr_cost(jaxpr) -> Cost:
     return total
 
 
-def step_cost(fn: Callable, *args, **kwargs) -> Dict[str, float]:
+def step_cost(fn: Callable, *args, **kwargs) -> dict[str, float]:
     """Exact loop-aware (flops, bytes) of ``fn(*args)`` at global shapes.
 
     args may be ShapeDtypeStructs.  Returns {"flops": ..., "bytes": ...} —

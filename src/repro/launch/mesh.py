@@ -12,7 +12,6 @@ exist) so examples/tests run the identical code path at toy scale.
 
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import numpy as np
@@ -42,7 +41,7 @@ def make_elastic_mesh(n_chips: int, model_parallel: int):
     return jax.sharding.Mesh(devs, ("data", "model"))
 
 
-def dp_axes(mesh) -> Tuple[str, ...]:
+def dp_axes(mesh) -> tuple[str, ...]:
     """The data-parallel axes of a mesh (everything but 'model')."""
     return tuple(a for a in mesh.axis_names if a != "model")
 

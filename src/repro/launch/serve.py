@@ -31,7 +31,6 @@ from __future__ import annotations
 
 import argparse
 import time
-from typing import List
 
 import jax
 import numpy as np
@@ -45,7 +44,7 @@ from repro.serving.engine import (ContinuousEngine, Request, Result,
 from repro.serving.policy import POLICY_NAMES
 
 
-def _percentile(xs: List[float], q: float) -> float:
+def _percentile(xs: list[float], q: float) -> float:
     return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
 
 
@@ -165,7 +164,7 @@ def main(argv=None):
         if spec is not None:
             raise SystemExit("--spec needs the continuous paged engine")
         eng = WaveEngine(cfg, params, slots=args.slots, max_len=args.max_len)
-        results: List[Result] = eng.run(reqs)
+        results: list[Result] = eng.run(reqs)
     else:
         if spec is not None and args.engine == "dense":
             raise SystemExit("--spec needs the paged engine (KV rollback "

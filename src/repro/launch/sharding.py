@@ -16,7 +16,7 @@ annotation helper used inside model code boundaries.
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
@@ -29,7 +29,7 @@ PyTree = Any
 MODEL_AXIS = "model"
 
 
-def default_rules(mesh, *, fsdp: bool = True) -> Dict[str, Any]:
+def default_rules(mesh, *, fsdp: bool = True) -> dict[str, Any]:
     dp = dp_axes(mesh)
     return {
         "embed": dp if fsdp else None,
@@ -57,8 +57,8 @@ def _axis_divisible(dim: int, mesh, axis) -> bool:
     return dim % total == 0
 
 
-def spec_for(axes: Tuple[Optional[str], ...], shape: Tuple[int, ...],
-             mesh, rules: Dict[str, Any]) -> P:
+def spec_for(axes: tuple[str | None, ...], shape: tuple[int, ...],
+             mesh, rules: dict[str, Any]) -> P:
     """PartitionSpec for one param from its logical axes; axes whose dim is
     not divisible by the assigned mesh extent fall back to replication
     (GSPMD would pad, but memory analysis is cleaner without)."""
@@ -79,7 +79,7 @@ def spec_for(axes: Tuple[Optional[str], ...], shape: Tuple[int, ...],
 
 
 def shardings_for_params(cfg: ModelConfig, mesh, *, fsdp: bool = True,
-                         rules: Optional[Dict] = None) -> PyTree:
+                         rules: dict | None = None) -> PyTree:
     """NamedSharding tree parallel to network.param_defs(cfg)."""
     from repro.models import network as N
     rules = rules or default_rules(mesh, fsdp=fsdp)
@@ -94,7 +94,7 @@ def shardings_for_params(cfg: ModelConfig, mesh, *, fsdp: bool = True,
 
 
 def quantized_param_shardings(cfg: ModelConfig, mesh, *, fsdp: bool = False,
-                              rules: Optional[Dict] = None) -> PyTree:
+                              rules: dict | None = None) -> PyTree:
     """Sharding tree matching ``quantize_params(network.init(cfg))`` —
     QuantTensor leaves get (q: the weight's spec, scale: the spec's last
     entry).  Default fsdp=False: the int8 serving path keeps weights

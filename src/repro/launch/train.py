@@ -18,7 +18,8 @@ import argparse
 import dataclasses
 import functools
 import time
-from typing import Any, Callable, Dict, Optional
+from collections.abc import Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -43,7 +44,7 @@ class TrainConfig:
     steps: int = 100
     global_batch: int = 8
     seq_len: int = 256
-    ckpt_dir: Optional[str] = None
+    ckpt_dir: str | None = None
     ckpt_every: int = 50
     log_every: int = 10
     accum: int = 1                     # gradient-accumulation microbatches
@@ -88,7 +89,7 @@ def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig, mesh, *,
             (gsum, lsum), _ = jax.lax.scan(micro, (zeros, 0.0), mbs)
             grads = jax.tree.map(lambda g: g / accum, gsum)
             lossv = lsum / accum
-            metrics: Dict[str, jax.Array] = {}
+            metrics: dict[str, jax.Array] = {}
         else:
             (lossv, metrics), grads = jax.value_and_grad(
                 loss, has_aux=True)(params, batch)
@@ -157,8 +158,8 @@ def make_eval_step(cfg: ModelConfig, mesh, fsdp: bool = True):
 # ---------------------------------------------------------------------------
 
 def train(cfg: ModelConfig, tc: TrainConfig, *, mesh=None,
-          injector: Optional[FailureInjector] = None,
-          log: Callable[[str], None] = print) -> Dict[str, float]:
+          injector: FailureInjector | None = None,
+          log: Callable[[str], None] = print) -> dict[str, float]:
     mesh = mesh or make_local_mesh()
     opt_cfg = adamw.AdamWConfig(total_steps=tc.steps)
     data_cfg = DataConfig(vocab=cfg.vocab, seq_len=tc.seq_len,
@@ -169,7 +170,7 @@ def train(cfg: ModelConfig, tc: TrainConfig, *, mesh=None,
     mgr = CheckpointManager(tc.ckpt_dir) if tc.ckpt_dir else None
     monitor = HeartbeatMonitor(n_hosts=jax.process_count())
 
-    state: Dict[str, Any] = {}
+    state: dict[str, Any] = {}
 
     def fresh_state():
         with jax.default_device(jax.devices()[0]):
@@ -194,7 +195,7 @@ def train(cfg: ModelConfig, tc: TrainConfig, *, mesh=None,
         log(f"[restore] resumed from step {latest}")
         return latest
 
-    last_metrics: Dict[str, float] = {}
+    last_metrics: dict[str, float] = {}
 
     def loop(start_step: int) -> int:
         for step in range(start_step, tc.steps):

@@ -16,7 +16,6 @@ attention calls; decode then routes through the paged-decode kernel).
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,7 +31,7 @@ NEG_INF = -1e30
 # Parameter definitions
 # ---------------------------------------------------------------------------
 
-def attn_defs(cfg: ModelConfig) -> Dict:
+def attn_defs(cfg: ModelConfig) -> dict:
     d, hd = cfg.d_model, cfg.hd
     H, KV = cfg.n_heads, cfg.n_kv_heads
     defs = {
@@ -48,7 +47,7 @@ def attn_defs(cfg: ModelConfig) -> Dict:
     return defs
 
 
-def mla_defs(cfg: ModelConfig) -> Dict:
+def mla_defs(cfg: ModelConfig) -> dict:
     assert cfg.mla is not None
     m: MLAConfig = cfg.mla
     d, H = cfg.d_model, cfg.n_heads
@@ -144,9 +143,9 @@ def _flash_triangular(q, k, v, *, scale, window, logit_cap, block):
 
 
 def _flash(q: jax.Array, k: jax.Array, v: jax.Array, *,
-           scale: float, causal: bool, window: Optional[int],
-           q_offset: jax.Array | int, kv_valid: Optional[jax.Array],
-           logit_cap: Optional[float], block: int) -> jax.Array:
+           scale: float, causal: bool, window: int | None,
+           q_offset: jax.Array | int, kv_valid: jax.Array | None,
+           logit_cap: float | None, block: int) -> jax.Array:
     """q (B,Sq,KV,G,hd); k/v (B,T,KV,hd) -> out (B,Sq,KV,G,hd).
 
     Scans KV blocks with the online-softmax carry; masks causality, sliding
@@ -311,14 +310,14 @@ def _paged_gather(buf: jax.Array, block_table: jax.Array) -> jax.Array:
     return PA.gather_pool_blocks(buf, block_table)
 
 
-def gqa_attention(p: Dict, x: jax.Array, cfg: ModelConfig, *,
+def gqa_attention(p: dict, x: jax.Array, cfg: ModelConfig, *,
                   kind: BlockKind,
                   pos_offset: jax.Array | int = 0,
-                  cache: Optional[Dict] = None,
-                  block_table: Optional[jax.Array] = None,
-                  pos_advance: Optional[jax.Array] = None,
+                  cache: dict | None = None,
+                  block_table: jax.Array | None = None,
+                  pos_advance: jax.Array | None = None,
                   backend=None,
-                  ) -> Tuple[jax.Array, Optional[Dict]]:
+                  ) -> tuple[jax.Array, dict | None]:
     """Full-sequence (cache=None) or cached (prefill/decode) GQA attention.
 
     With a cache dict {"k","v","pos"}: writes k/v at ``pos`` and attends over
@@ -389,13 +388,13 @@ def gqa_attention(p: Dict, x: jax.Array, cfg: ModelConfig, *,
 # MLA (DeepSeek-V2): low-rank q, compressed kv cache
 # ---------------------------------------------------------------------------
 
-def mla_attention(p: Dict, x: jax.Array, cfg: ModelConfig, *,
+def mla_attention(p: dict, x: jax.Array, cfg: ModelConfig, *,
                   pos_offset: jax.Array | int = 0,
-                  cache: Optional[Dict] = None,
-                  block_table: Optional[jax.Array] = None,
-                  pos_advance: Optional[jax.Array] = None,
+                  cache: dict | None = None,
+                  block_table: jax.Array | None = None,
+                  pos_advance: jax.Array | None = None,
                   backend=None,
-                  ) -> Tuple[jax.Array, Optional[Dict]]:
+                  ) -> tuple[jax.Array, dict | None]:
     """Multi-head latent attention.  Cache stores only (c_kv, k_pe):
     kv_lora_rank + rope_head_dim floats per token (the paper-relevant
     'skinny p-GEMM' decompression happens per block).
@@ -497,7 +496,7 @@ def mla_attention(p: Dict, x: jax.Array, cfg: ModelConfig, *,
 
 
 def make_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype
-                  ) -> Dict:
+                  ) -> dict:
     """Empty per-layer cache for one attention block."""
     if cfg.mla is not None:
         return {
@@ -514,7 +513,7 @@ def make_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype
 
 
 def make_paged_kv_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
-                        dtype) -> Dict:
+                        dtype) -> dict:
     """Empty per-layer BLOCK-PAGED cache pool for one attention block
     (``serving.kv_pool`` layout: no batch dim — slots map logical
     positions onto pool blocks through the shared block table).  ``pos``

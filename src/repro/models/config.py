@@ -10,7 +10,6 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Optional, Tuple
 
 
 class BlockKind(enum.Enum):
@@ -68,27 +67,27 @@ class ModelConfig:
     n_kv_heads: int
     d_ff: int
     vocab: int
-    head_dim: Optional[int] = None         # default d_model // n_heads
+    head_dim: int | None = None         # default d_model // n_heads
     # --- block pattern -----------------------------------------------------
     #: the repeating unit scanned over; e.g. gemma2 = (ATTN_LOCAL, ATTN)
-    pattern: Tuple[BlockKind, ...] = (BlockKind.ATTN,)
+    pattern: tuple[BlockKind, ...] = (BlockKind.ATTN,)
     #: extra non-repeating tail blocks (e.g. zamba2's trailing mamba layers)
-    tail: Tuple[BlockKind, ...] = ()
+    tail: tuple[BlockKind, ...] = ()
     # --- attention flavor ---------------------------------------------------
     qkv_bias: bool = False
     rope_mode: RopeMode = RopeMode.FULL
     rope_theta: float = 10_000.0
     local_window: int = 4096               # for ATTN_LOCAL blocks
-    attn_logit_softcap: Optional[float] = None   # gemma2: 50.0
-    final_logit_softcap: Optional[float] = None  # gemma2: 30.0
+    attn_logit_softcap: float | None = None   # gemma2: 50.0
+    final_logit_softcap: float | None = None  # gemma2: 30.0
     causal: bool = True                    # False => encoder (hubert)
     post_norms: bool = False               # gemma2 sandwich norms
     # --- families -----------------------------------------------------------
-    moe: Optional[MoEConfig] = None
+    moe: MoEConfig | None = None
     moe_every: int = 1                     # apply MoE on every k-th ATTN block
-    first_layer_dense_ff: Optional[int] = None   # deepseek-v2 layer-0 dense
-    ssm: Optional[SSMConfig] = None
-    mla: Optional[MLAConfig] = None
+    first_layer_dense_ff: int | None = None   # deepseek-v2 layer-0 dense
+    ssm: SSMConfig | None = None
+    mla: MLAConfig | None = None
     n_shared_attn_sets: int = 2            # zamba2 alternating shared blocks
     # --- embedding/head -----------------------------------------------------
     tie_embeddings: bool = False

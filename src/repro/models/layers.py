@@ -19,7 +19,7 @@ Logical axis vocabulary (mapped to mesh axes by launch.sharding):
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -35,8 +35,8 @@ PyTree = Any
 # ---------------------------------------------------------------------------
 
 _ACT_MESH = None          # jax.sharding.Mesh or None
-_DP_AXES: Tuple[str, ...] = ()
-_MP_AXIS: Optional[str] = None
+_DP_AXES: tuple[str, ...] = ()
+_MP_AXIS: str | None = None
 
 
 def set_activation_mesh(mesh) -> None:
@@ -84,8 +84,8 @@ def shard_act(x: jax.Array, dims: str) -> jax.Array:
 
 @dataclasses.dataclass(frozen=True)
 class ParamDef:
-    shape: Tuple[int, ...]
-    axes: Tuple[Optional[str], ...]
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
     init: str = "normal"          # normal | zeros | ones | small_normal
     scale: float = 0.02
 
@@ -135,14 +135,14 @@ def rms_norm(x: jax.Array, gamma: jax.Array, eps: float) -> jax.Array:
     return out.astype(dt)
 
 
-def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
     if cap is None:
         return x
     return jnp.tanh(x / cap) * cap
 
 
 def rope_tables(seq: int, dim: int, theta: float,
-                offset: int | jax.Array = 0) -> Tuple[jax.Array, jax.Array]:
+                offset: int | jax.Array = 0) -> tuple[jax.Array, jax.Array]:
     """cos/sin tables, fp32.  Scalar ``offset`` -> (seq, dim/2); vector
     ``offset`` (B,) (continuous-batching decode, per-slot positions) ->
     (B, seq, dim/2)."""
@@ -175,7 +175,7 @@ def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array,
     return jnp.concatenate([rot, xp], axis=-1) if rd < d else rot
 
 
-def dense(x: jax.Array, w, b: Optional[jax.Array] = None, *,
+def dense(x: jax.Array, w, b: jax.Array | None = None, *,
           backend=None) -> jax.Array:
     """x (..., K) @ w (K, N) in the compute dtype with fp32 accumulation.
 
@@ -223,7 +223,7 @@ def activation(x: jax.Array, kind: str) -> jax.Array:
 # Gated MLP (SwiGLU / GeGLU)
 # ---------------------------------------------------------------------------
 
-def mlp_defs(d_model: int, d_ff: int, scale: float = 0.02) -> Dict:
+def mlp_defs(d_model: int, d_ff: int, scale: float = 0.02) -> dict:
     return {
         "wi_gate": ParamDef((d_model, d_ff), ("embed", "ff"), scale=scale),
         "wi_up": ParamDef((d_model, d_ff), ("embed", "ff"), scale=scale),
@@ -231,7 +231,7 @@ def mlp_defs(d_model: int, d_ff: int, scale: float = 0.02) -> Dict:
     }
 
 
-def mlp_apply(p: Dict, x: jax.Array, act: str, *, backend=None) -> jax.Array:
+def mlp_apply(p: dict, x: jax.Array, act: str, *, backend=None) -> jax.Array:
     g = activation(dense(x, p["wi_gate"], backend=backend), act)
     u = dense(x, p["wi_up"], backend=backend)
     return dense(g * u, p["wo"], backend=backend)
@@ -241,17 +241,17 @@ def mlp_apply(p: Dict, x: jax.Array, act: str, *, backend=None) -> jax.Array:
 # Embedding / head
 # ---------------------------------------------------------------------------
 
-def embed_defs(vocab: int, d_model: int) -> Dict:
+def embed_defs(vocab: int, d_model: int) -> dict:
     return {"table": ParamDef((vocab, d_model), ("vocab", "embed"),
                               scale=0.02)}
 
 
-def embed_apply(p: Dict, tokens: jax.Array, dtype) -> jax.Array:
+def embed_apply(p: dict, tokens: jax.Array, dtype) -> jax.Array:
     return jnp.take(p["table"].astype(dtype), tokens, axis=0)
 
 
 def head_apply(table_or_w: jax.Array, x: jax.Array,
-               cap: Optional[float] = None, *, backend=None) -> jax.Array:
+               cap: float | None = None, *, backend=None) -> jax.Array:
     """Logits: x (B,S,D) @ w (V,D)^T -> fp32 (B,S,V), with optional softcap.
 
     ``backend`` (``kernels.ops.GemmBackend``) routes the (rows, vocab, d)

@@ -13,7 +13,6 @@ utilization-vs-drop tradeoff and the aux loss keeps the router balanced.
 
 from __future__ import annotations
 
-from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +22,7 @@ from repro.models.config import ModelConfig, MoEConfig
 from repro.models.layers import ParamDef, activation, dense, shard_act
 
 
-def moe_defs(cfg: ModelConfig) -> Dict:
+def moe_defs(cfg: ModelConfig) -> dict:
     m: MoEConfig = cfg.moe
     d = cfg.d_model
     e, f = m.n_experts, m.d_ff_expert
@@ -48,9 +47,9 @@ def _capacity(n_tokens: int, m: MoEConfig) -> int:
     return max(8, -(-c // 8) * 8)  # multiple of 8, floor 8
 
 
-def _moe_compute(p: Dict, x: jax.Array, cfg: ModelConfig, *,
+def _moe_compute(p: dict, x: jax.Array, cfg: ModelConfig, *,
                  constrain: bool = True,
-                 backend=None) -> Tuple[jax.Array, jax.Array]:
+                 backend=None) -> tuple[jax.Array, jax.Array]:
     """Dispatch + expert GEMMs + combine on whatever token set ``x``
     carries (global under GSPMD, shard-local under shard_map)."""
     m: MoEConfig = cfg.moe
@@ -124,8 +123,8 @@ def _moe_compute(p: Dict, x: jax.Array, cfg: ModelConfig, *,
     return out.reshape(B, S, D).astype(x.dtype), aux
 
 
-def moe_apply(p: Dict, x: jax.Array, cfg: ModelConfig, *,
-              backend=None) -> Tuple[jax.Array, jax.Array]:
+def moe_apply(p: dict, x: jax.Array, cfg: ModelConfig, *,
+              backend=None) -> tuple[jax.Array, jax.Array]:
     """x (B, S, D) -> (out (B, S, D), aux_loss scalar fp32).
 
     §Perf H3: under a distributed activation policy the whole MoE layer runs
@@ -155,8 +154,8 @@ def moe_apply(p: Dict, x: jax.Array, cfg: ModelConfig, *,
     return _moe_compute(p, x, cfg, backend=backend)
 
 
-def _moe_shardmap(p: Dict, x: jax.Array, cfg: ModelConfig, mesh, dp,
-                  mp: int) -> Tuple[jax.Array, jax.Array]:
+def _moe_shardmap(p: dict, x: jax.Array, cfg: ModelConfig, mesh, dp,
+                  mp: int) -> tuple[jax.Array, jax.Array]:
     from jax.sharding import PartitionSpec as P
     m: MoEConfig = cfg.moe
     dspec = dp if len(dp) > 1 else dp[0]

@@ -19,7 +19,7 @@ Public API (all pure functions):
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -46,14 +46,14 @@ def _norm_def(d: int) -> ParamDef:
 
 
 def _block_defs(cfg: ModelConfig, kind: BlockKind, *, dense_ff: int = 0
-                ) -> Dict:
+                ) -> dict:
     d = cfg.d_model
     if kind is BlockKind.MAMBA2:
         return {"ln1": _norm_def(d), "mamba": S.mamba2_defs(cfg)}
     if kind is BlockKind.SHARED_ATTN:
         return {"ln1": _norm_def(d)}   # weights live in the shared stack
     # ATTN / ATTN_LOCAL
-    defs: Dict = {"ln1": _norm_def(d), "ln2": _norm_def(d)}
+    defs: dict = {"ln1": _norm_def(d), "ln2": _norm_def(d)}
     defs["attn"] = A.mla_defs(cfg) if cfg.mla is not None else A.attn_defs(cfg)
     if cfg.post_norms:
         defs["post_ln1"] = _norm_def(d)
@@ -67,9 +67,9 @@ def _block_defs(cfg: ModelConfig, kind: BlockKind, *, dense_ff: int = 0
     return defs
 
 
-def param_defs(cfg: ModelConfig) -> Dict:
+def param_defs(cfg: ModelConfig) -> dict:
     d = cfg.d_model
-    defs: Dict = {"final_norm": _norm_def(d)}
+    defs: dict = {"final_norm": _norm_def(d)}
     if cfg.frontend != "frames":
         defs["embed"] = embed_defs(cfg.vocab, d)
         if not cfg.tie_embeddings:
@@ -117,11 +117,11 @@ def param_logical_axes(cfg: ModelConfig) -> PyTree:
 # Block application
 # ---------------------------------------------------------------------------
 
-def _apply_block(cfg: ModelConfig, kind: BlockKind, p: Dict, x: jax.Array, *,
-                 pos_offset, cache: Optional[Dict], shared: Optional[Dict],
+def _apply_block(cfg: ModelConfig, kind: BlockKind, p: dict, x: jax.Array, *,
+                 pos_offset, cache: dict | None, shared: dict | None,
                  dense_ff: bool = False, block_table=None, pos_advance=None,
                  seq_lens=None, backend=None
-                 ) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
+                 ) -> tuple[jax.Array, dict | None, jax.Array]:
     """Returns (x, new_cache, aux_loss).
 
     ``block_table`` (B, nbs) switches attention caches to the block-paged
@@ -211,14 +211,14 @@ def _group_fn(cfg: ModelConfig, shared_stack, pos_offset, block_table,
 
 
 def _run_blocks(params: PyTree, cfg: ModelConfig, x: jax.Array, *,
-                pos_offset, caches: Optional[PyTree], block_table=None,
+                pos_offset, caches: PyTree | None, block_table=None,
                 pos_advance=None, seq_lens=None
-                ) -> Tuple[jax.Array, Optional[PyTree], jax.Array]:
+                ) -> tuple[jax.Array, PyTree | None, jax.Array]:
     """Applies first_block (if any), the scanned pattern groups, and tail
     blocks.  caches: {"first":..., "groups": stacked, "tail": tuple}."""
     aux = jnp.zeros((), jnp.float32)
     with_cache = caches is not None
-    new_caches: Dict[str, Any] = {}
+    new_caches: dict[str, Any] = {}
     backend = gemm_backend(cfg)
 
     if "first_block" in params:
@@ -268,7 +268,7 @@ def _run_blocks(params: PyTree, cfg: ModelConfig, x: jax.Array, *,
 # Embedding / forward / loss
 # ---------------------------------------------------------------------------
 
-def _embed_inputs(params: PyTree, cfg: ModelConfig, batch: Dict
+def _embed_inputs(params: PyTree, cfg: ModelConfig, batch: dict
                   ) -> jax.Array:
     dt = jnp.dtype(cfg.compute_dtype)
     backend = gemm_backend(cfg)
@@ -289,8 +289,8 @@ def _embed_inputs(params: PyTree, cfg: ModelConfig, batch: Dict
     return shard_act(tok, "b..")
 
 
-def forward(params: PyTree, cfg: ModelConfig, batch: Dict
-            ) -> Tuple[jax.Array, jax.Array]:
+def forward(params: PyTree, cfg: ModelConfig, batch: dict
+            ) -> tuple[jax.Array, jax.Array]:
     """Full-sequence forward.  Returns (logits fp32 (B,S,V), aux_loss)."""
     x = _embed_inputs(params, cfg, batch)
     x, _, aux = _run_blocks(params, cfg, x, pos_offset=0, caches=None)
@@ -302,8 +302,8 @@ def forward(params: PyTree, cfg: ModelConfig, batch: Dict
     return logits, aux
 
 
-def loss_fn(params: PyTree, cfg: ModelConfig, batch: Dict
-            ) -> Tuple[jax.Array, Dict]:
+def loss_fn(params: PyTree, cfg: ModelConfig, batch: dict
+            ) -> tuple[jax.Array, dict]:
     """Token-level CE (labels == -1 masked) + MoE aux loss."""
     logits, aux = forward(params, cfg, batch)
     labels = batch["labels"]
@@ -335,7 +335,7 @@ def _block_cache(cfg: ModelConfig, kind: BlockKind, batch: int, max_len: int,
 def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype=None
                 ) -> PyTree:
     dtype = dtype or jnp.dtype(cfg.compute_dtype)
-    caches: Dict[str, Any] = {}
+    caches: dict[str, Any] = {}
     if cfg.first_layer_dense_ff:
         caches["first"] = _block_cache(cfg, BlockKind.ATTN, batch, max_len,
                                        dtype)
@@ -355,14 +355,28 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype=None
     return caches
 
 
-def _serve(params: PyTree, cfg: ModelConfig, batch: Dict, caches: PyTree,
+def _carry_free_cursor(caches, new_caches, pos_advance):
+    """Attention-free paged trees carry a synthetic top-level ``pos``
+    cursor (see :func:`init_paged_caches`): `_run_blocks` rebuilds the
+    cache dict from block keys only, so the cursor is re-attached — and
+    advanced — here."""
+    if new_caches is None or not isinstance(caches, dict) \
+            or "pos" not in caches:
+        return new_caches
+    adv = 0 if pos_advance is None else jnp.asarray(pos_advance, jnp.int32)
+    new_caches["pos"] = caches["pos"] + adv
+    return new_caches
+
+
+def _serve(params: PyTree, cfg: ModelConfig, batch: dict, caches: PyTree,
            pos_offset, block_table=None, pos_advance=None, seq_lens=None,
-           last_index=None) -> Tuple[jax.Array, PyTree]:
+           last_index=None) -> tuple[jax.Array, PyTree]:
     x = _embed_inputs(params, cfg, batch)
     x, new_caches, _ = _run_blocks(params, cfg, x, pos_offset=pos_offset,
                                    caches=caches, block_table=block_table,
                                    pos_advance=pos_advance,
                                    seq_lens=seq_lens)
+    new_caches = _carry_free_cursor(caches, new_caches, pos_advance)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     head = (params["embed"]["table"] if cfg.tie_embeddings
             else params["lm_head"])
@@ -378,15 +392,15 @@ def _serve(params: PyTree, cfg: ModelConfig, batch: Dict, caches: PyTree,
     return logits[:, 0], new_caches
 
 
-def prefill(params: PyTree, cfg: ModelConfig, batch: Dict, caches: PyTree
-            ) -> Tuple[jax.Array, PyTree]:
+def prefill(params: PyTree, cfg: ModelConfig, batch: dict, caches: PyTree
+            ) -> tuple[jax.Array, PyTree]:
     """Processes the prompt; returns (next-token logits (B,V), caches)."""
     return _serve(params, cfg, batch, caches, pos_offset=0)
 
 
-def prefill_ragged(params: PyTree, cfg: ModelConfig, batch: Dict,
+def prefill_ragged(params: PyTree, cfg: ModelConfig, batch: dict,
                    caches: PyTree, last_index: jax.Array
-                   ) -> Tuple[jax.Array, PyTree]:
+                   ) -> tuple[jax.Array, PyTree]:
     """Prefill for right-padded prompts (real tokens first, pad after):
     returns logits gathered at per-row ``last_index`` (the final REAL
     token) instead of the last position.
@@ -406,7 +420,7 @@ def prefill_ragged(params: PyTree, cfg: ModelConfig, batch: Dict,
 
 def decode_step(params: PyTree, cfg: ModelConfig, tokens: jax.Array,
                 caches: PyTree, pos: jax.Array, block_table=None,
-                pos_advance=None) -> Tuple[jax.Array, PyTree]:
+                pos_advance=None) -> tuple[jax.Array, PyTree]:
     """One autoregressive step.  tokens (B, 1); pos int32 — scalar for a
     uniform wave (the seed engine's max-pos convention) or (B,) for
     per-slot ragged positions (continuous batching; caches must then carry
@@ -427,7 +441,7 @@ def decode_step(params: PyTree, cfg: ModelConfig, tokens: jax.Array,
 # Continuous-batching cache utilities (slot-level admission)
 # ---------------------------------------------------------------------------
 
-def _path_keys(path) -> Tuple:
+def _path_keys(path) -> tuple:
     return tuple(getattr(p, "key", None) for p in path)
 
 
@@ -497,7 +511,7 @@ def init_paged_caches(cfg: ModelConfig, slots: int, num_blocks: int,
             return S.make_ssm_state(cfg, slots, dtype)
         return A.make_paged_kv_cache(cfg, num_blocks, block_size, dtype)
 
-    caches: Dict[str, Any] = {}
+    caches: dict[str, Any] = {}
     if cfg.first_layer_dense_ff:
         caches["first"] = blk(BlockKind.ATTN)
 
@@ -511,10 +525,16 @@ def init_paged_caches(cfg: ModelConfig, slots: int, num_blocks: int,
     caches["groups"] = stack(lambda: tuple(blk(k) for k in cfg.pattern))
     if cfg.tail:
         caches["tail"] = tuple(blk(k) for k in cfg.tail)
+    if cfg.attention_free:
+        # no attention block means no per-layer ``pos`` leaf, but the
+        # paged entry points derive each row's cursor from the cache view
+        # (`_first_pos_leaf`) — synthesize one top-level cursor, advanced
+        # by `_serve`/`verify_paged_chunk` since no layer will touch it.
+        caches["pos"] = jnp.zeros((), jnp.int32)
     return caches
 
 
-def _slot_state_axis(names: Tuple) -> int:
+def _slot_state_axis(names: tuple) -> int:
     return 1 if names and names[0] == "groups" else 0
 
 
@@ -561,7 +581,7 @@ def prefill_paged_chunk(params: PyTree, cfg: ModelConfig, tokens: jax.Array,
                         caches: PyTree, slot_ids: jax.Array,
                         block_rows: jax.Array, seq_lens: jax.Array,
                         last_index: jax.Array
-                        ) -> Tuple[jax.Array, PyTree]:
+                        ) -> tuple[jax.Array, PyTree]:
     """One decode-interleaved CHUNK of ragged prefill for B admission rows.
 
     tokens (B, L): right-padded chunk tokens (L fixed per engine, so one
@@ -593,7 +613,7 @@ def prefill_paged_chunk(params: PyTree, cfg: ModelConfig, tokens: jax.Array,
 def verify_paged_chunk(params: PyTree, cfg: ModelConfig, tokens: jax.Array,
                        caches: PyTree, slot_ids: jax.Array,
                        block_rows: jax.Array, seq_lens: jax.Array
-                       ) -> Tuple[jax.Array, PyTree]:
+                       ) -> tuple[jax.Array, PyTree]:
     """Speculative-decoding VERIFY step: score k+1 tokens per slot in one
     call and return logits at EVERY position.
 
@@ -623,6 +643,7 @@ def verify_paged_chunk(params: PyTree, cfg: ModelConfig, tokens: jax.Array,
     x, new_view, _ = _run_blocks(params, cfg, x, pos_offset=pos0,
                                  caches=view, block_table=block_rows,
                                  pos_advance=lens, seq_lens=lens)
+    new_view = _carry_free_cursor(view, new_view, lens)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     head = (params["embed"]["table"] if cfg.tie_embeddings
             else params["lm_head"])

@@ -13,7 +13,6 @@ d_conv on (x, B, C).
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -22,7 +21,7 @@ from repro.models.config import ModelConfig, SSMConfig
 from repro.models.layers import ParamDef, dense, rms_norm, shard_act
 
 
-def _dims(cfg: ModelConfig) -> Tuple[int, int, int, int, int]:
+def _dims(cfg: ModelConfig) -> tuple[int, int, int, int, int]:
     s: SSMConfig = cfg.ssm
     d_inner = s.expand * cfg.d_model
     n_heads = d_inner // s.head_dim
@@ -30,7 +29,7 @@ def _dims(cfg: ModelConfig) -> Tuple[int, int, int, int, int]:
     return d_inner, n_heads, s.d_state, s.n_groups, conv_dim
 
 
-def mamba2_defs(cfg: ModelConfig) -> Dict:
+def mamba2_defs(cfg: ModelConfig) -> dict:
     s: SSMConfig = cfg.ssm
     d = cfg.d_model
     d_inner, n_heads, d_state, n_groups, conv_dim = _dims(cfg)
@@ -58,9 +57,9 @@ def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
 
 
 def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
-                 state: Optional[jax.Array] = None,
-                 seq_len: Optional[jax.Array] = None
-                 ) -> Tuple[jax.Array, jax.Array]:
+                 state: jax.Array | None = None,
+                 seq_len: jax.Array | None = None
+                 ) -> tuple[jax.Array, jax.Array]:
     """Depthwise causal conv1d.  x (B,S,C); w (K,C); returns (y, new_state)
     where state carries the trailing K-1 inputs for decode.
 
@@ -93,8 +92,8 @@ def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
 
 def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
                 Cm: jax.Array, chunk: int,
-                h0: Optional[jax.Array] = None
-                ) -> Tuple[jax.Array, jax.Array]:
+                h0: jax.Array | None = None
+                ) -> tuple[jax.Array, jax.Array]:
     """SSD scan in chunked/dual form.
 
     x  (B, S, H, P)   — inputs per head (P = head_dim)
@@ -176,7 +175,7 @@ def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
 
 
 def ssd_step(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
-             Cm: jax.Array, h: jax.Array) -> Tuple[jax.Array, jax.Array]:
+             Cm: jax.Array, h: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Single-token recurrent step (decode): O(1) state update.
 
     x (B,H,P); dt (B,H); Bm/Cm (B,G,N); h (B,H,P,N)."""
@@ -192,11 +191,11 @@ def ssd_step(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
     return y, h_new
 
 
-def mamba2_block(p: Dict, x: jax.Array, cfg: ModelConfig, *,
-                 state: Optional[Dict] = None,
-                 seq_len: Optional[jax.Array] = None,
+def mamba2_block(p: dict, x: jax.Array, cfg: ModelConfig, *,
+                 state: dict | None = None,
+                 seq_len: jax.Array | None = None,
                  backend=None
-                 ) -> Tuple[jax.Array, Optional[Dict]]:
+                 ) -> tuple[jax.Array, dict | None]:
     """Full Mamba2 block.  state (decode): {"conv": (B,K-1,conv_dim),
     "ssm": (B,H,P,N)}; None for training/prefill-from-scratch.
 
@@ -263,7 +262,7 @@ def mamba2_block(p: Dict, x: jax.Array, cfg: ModelConfig, *,
     return out, new_state
 
 
-def make_ssm_state(cfg: ModelConfig, batch: int, dtype) -> Dict:
+def make_ssm_state(cfg: ModelConfig, batch: int, dtype) -> dict:
     s: SSMConfig = cfg.ssm
     d_inner, n_heads, d_state, n_groups, conv_dim = _dims(cfg)
     return {

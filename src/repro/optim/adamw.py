@@ -11,7 +11,7 @@ Weight decay is masked off norms/biases/scalars (ndim < 2), the usual rule.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -37,7 +37,7 @@ class AdamWState(NamedTuple):
     step: jax.Array
     m: PyTree
     v: PyTree
-    master: Optional[PyTree]
+    master: PyTree | None
 
 
 def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
@@ -67,14 +67,14 @@ def global_norm(tree: PyTree) -> jax.Array:
 
 
 def clip_by_global_norm(grads: PyTree, max_norm: float
-                        ) -> Tuple[PyTree, jax.Array]:
+                        ) -> tuple[PyTree, jax.Array]:
     gn = global_norm(grads)
     scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
     return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gn
 
 
 def update(cfg: AdamWConfig, grads: PyTree, state: AdamWState,
-           params: PyTree) -> Tuple[PyTree, AdamWState, Dict[str, jax.Array]]:
+           params: PyTree) -> tuple[PyTree, AdamWState, dict[str, jax.Array]]:
     grads32, gn = clip_by_global_norm(grads, cfg.clip_norm)
     step = state.step + 1
     lr = schedule(cfg, step)

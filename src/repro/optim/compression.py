@@ -18,7 +18,7 @@ Plain-pjit flows use ``compress_tree``/``decompress_tree`` around psum.
 
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -27,7 +27,7 @@ PyTree = Any
 
 
 def compress(x: jax.Array, key: jax.Array
-             ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+             ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Stochastic-rounding int8 quantization.
 
     Returns (q int8, scale f32 scalar, err f32 = x - dequant(q)).
@@ -50,7 +50,7 @@ def decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
 
 
 def compress_tree(grads: PyTree, err: PyTree, key: jax.Array
-                  ) -> Tuple[PyTree, PyTree, PyTree]:
+                  ) -> tuple[PyTree, PyTree, PyTree]:
     """Apply error-feedback compression leaf-wise.  Returns
     (q_tree int8, scale_tree, new_err_tree)."""
     leaves, treedef = jax.tree.flatten(grads)
@@ -75,7 +75,7 @@ def init_error(params: PyTree) -> PyTree:
     return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
 
 
-def wire_bytes(grads: PyTree) -> Dict[str, float]:
+def wire_bytes(grads: PyTree) -> dict[str, float]:
     """Diagnostic: fp32 vs int8 payload for the DP reduction."""
     n = sum(x.size for x in jax.tree.leaves(grads))
     return {"fp32_bytes": 4.0 * n, "int8_bytes": 1.0 * n,

@@ -16,7 +16,8 @@ scheduling of precision and dataflow" (Fig. 9) as a library call.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Sequence
+from collections.abc import Sequence
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -115,7 +116,7 @@ def quant_fraction(params: PyTree) -> float:
 
 def choose_precision(op: PGEMM,
                      candidates: Sequence[Precision] = (INT8, BP16, INT16),
-                     config: Optional[GTAConfig] = None,
+                     config: GTAConfig | None = None,
                      quality_floor_bits: int = 8) -> Precision:
     """Pick the cheapest precision whose GTA schedule minimizes the paper's
     Σ-squares objective, subject to a minimum width (accuracy floor)."""

@@ -16,7 +16,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import time
-from typing import Callable, Dict, Optional, Tuple
+from collections.abc import Callable
 
 
 class HostState(enum.Enum):
@@ -36,19 +36,19 @@ class HeartbeatConfig:
 class HeartbeatMonitor:
     """Tracks per-host liveness + step latency; classifies hosts."""
 
-    def __init__(self, n_hosts: int, cfg: HeartbeatConfig = HeartbeatConfig(),
+    def __init__(self, n_hosts: int, cfg: HeartbeatConfig | None = None,
                  clock: Callable[[], float] = time.monotonic):
-        self.cfg = cfg
+        self.cfg = cfg or HeartbeatConfig()
         self.clock = clock
-        self.last_seen: Dict[int, float] = {h: clock() for h in range(n_hosts)}
-        self.step_times: Dict[int, float] = {}
+        self.last_seen: dict[int, float] = {h: clock() for h in range(n_hosts)}
+        self.step_times: dict[int, float] = {}
 
-    def beat(self, host: int, step_time_s: Optional[float] = None):
+    def beat(self, host: int, step_time_s: float | None = None):
         self.last_seen[host] = self.clock()
         if step_time_s is not None:
             self.step_times[host] = step_time_s
 
-    def classify(self) -> Dict[int, HostState]:
+    def classify(self) -> dict[int, HostState]:
         now = self.clock()
         med = (sorted(self.step_times.values())[len(self.step_times) // 2]
                if self.step_times else None)
@@ -83,7 +83,7 @@ class HeartbeatMonitor:
 # ---------------------------------------------------------------------------
 
 def plan_elastic_mesh(n_chips: int, model_parallel: int
-                      ) -> Tuple[int, int]:
+                      ) -> tuple[int, int]:
     """Largest (data, model) grid fitting the surviving chips: model
     parallelism is fixed by the architecture (must divide weights), the data
     axis absorbs the shrink.  Returns (data, model); chips beyond
@@ -105,7 +105,7 @@ class FailureInjector:
     """Deterministic failure schedule for tests/drills: raises at the
     configured steps (simulating a lost collective / dead host)."""
 
-    def __init__(self, fail_at_steps: Tuple[int, ...] = ()):
+    def __init__(self, fail_at_steps: tuple[int, ...] = ()):
         self.fail_at = set(fail_at_steps)
         self.fired = set()
 
@@ -118,12 +118,13 @@ class FailureInjector:
 def run_with_restarts(train_loop: Callable[[int], int], *,
                       start_step: int,
                       final_step: int,
-                      policy: RestartPolicy = RestartPolicy(),
-                      on_restart: Optional[Callable[[int, Exception], int]]
+                      policy: RestartPolicy | None = None,
+                      on_restart: Callable[[int, Exception], int] | None
                       = None) -> int:
     """Drives ``train_loop(start) -> reached_step`` under the restart policy.
     ``on_restart(step, exc) -> resume_step`` typically restores the latest
     checkpoint and returns its step.  Returns the final step reached."""
+    policy = policy or RestartPolicy()
     step = start_step
     restarts = 0
     while step < final_step:

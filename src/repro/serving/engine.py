@@ -119,7 +119,8 @@ import dataclasses
 import queue as _queue
 import threading
 import time
-from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+from collections.abc import Sequence
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -155,12 +156,12 @@ def _sample_traced(key, logits, temps):
 #: (id(cfg), max_len) -> (cfg strong-ref, {name: jitted fn}); the strong
 #: ref pins the id so the cache key stays valid.  LRU-bounded: a process
 #: sweeping many configs must not accumulate compiled executables forever.
-_FN_CACHE: "collections.OrderedDict[Tuple[int, int], Tuple[ModelConfig, Dict[str, Any]]]" = (
+_FN_CACHE: "collections.OrderedDict[tuple[int, int], tuple[ModelConfig, dict[str, Any]]]" = (
     collections.OrderedDict())
 _FN_CACHE_MAX = 8
 
 
-def _engine_fns(cfg: ModelConfig, max_len: int) -> Dict[str, Any]:
+def _engine_fns(cfg: ModelConfig, max_len: int) -> dict[str, Any]:
     ent = _FN_CACHE.get((id(cfg), max_len))
     if ent is not None and ent[0] is cfg:
         _FN_CACHE.move_to_end((id(cfg), max_len))
@@ -230,7 +231,7 @@ class Request:
     #: TTFT deadline in seconds (None = best effort).  Only the
     #: ``slo_preempt`` policy acts on it — a request at risk of missing
     #: its deadline may evict a decoding victim to get admitted.
-    ttft_slo: Optional[float] = None
+    ttft_slo: float | None = None
     #: policy hint: higher-priority requests admit first under
     #: ``best_fit`` and are never preempted for a lower-priority one.
     priority: int = 0
@@ -269,7 +270,7 @@ class _Pending:
     #: sequence a (re-)admission actually prefills (the resume tail's KV
     #: usually skip-prefills via the prefix cache).
     full_prompt: np.ndarray = None  # type: ignore[assignment]
-    resume_tokens: List[int] = dataclasses.field(default_factory=list)
+    resume_tokens: list[int] = dataclasses.field(default_factory=list)
     t_first: float = 0.0            # preserved across preemptions
     ttft_steps: int = -1            # -1 = first token not yet produced
     preemptions: int = 0
@@ -285,7 +286,7 @@ class _Slot:
     """Host-side state of one in-flight request."""
 
     req: Request
-    produced: List[int]
+    produced: list[int]
     cur_tok: int
     t_submit: float
     t_admit: float
@@ -294,7 +295,7 @@ class _Slot:
     #: paged path: "prefill" while chunks remain, then "decode"
     phase: str = "decode"
     #: pending chunk token arrays (paged chunked prefill), consumed in order
-    chunks: List[np.ndarray] = dataclasses.field(default_factory=list)
+    chunks: list[np.ndarray] = dataclasses.field(default_factory=list)
     #: the admission prompt (original prompt + resume tokens) — what
     #: prefix registration must content-address
     full_prompt: np.ndarray = None  # type: ignore[assignment]
@@ -314,19 +315,19 @@ class ContinuousEngine:
 
     def __init__(self, cfg: ModelConfig, params: PyTree, *, slots: int = 8,
                  max_len: int = 2048, seed: int = 0,
-                 prefill_buckets: Optional[Sequence[int]] = None,
-                 schedule_cache: Optional[ScheduleCache] = None,
+                 prefill_buckets: Sequence[int] | None = None,
+                 schedule_cache: ScheduleCache | None = None,
                  paged: bool = True, block_size: int = 16,
-                 kv_blocks: Optional[int] = None,
-                 prefill_chunk: Optional[int] = None,
+                 kv_blocks: int | None = None,
+                 prefill_chunk: int | None = None,
                  share_prefixes: bool = True,
-                 policy: Union[str, SchedulerPolicy] = "fifo",
-                 spec: Union[str, DraftProvider, None] = None,
+                 policy: str | SchedulerPolicy = "fifo",
+                 spec: str | DraftProvider | None = None,
                  spec_k: int = 4,
                  audit: bool = False):
         if cfg.is_encoder_only:
             raise ValueError(f"{cfg.name} is encoder-only: no decode serving")
-        self.spec: Optional[DraftProvider] = None
+        self.spec: DraftProvider | None = None
         if spec is not None:
             if not paged:
                 raise ValueError(
@@ -421,7 +422,7 @@ class ContinuousEngine:
             # silently drop the prefix from the SSM recurrence.  Disable.
             share_prefixes = (share_prefixes
                               and not cfg.has_recurrent_state)
-            self.pool: Optional[KVPool] = KVPool(
+            self.pool: KVPool | None = KVPool(
                 kv_blocks, block_size, slots=slots, max_len=max_len,
                 share_prefixes=share_prefixes)
             self.caches = N.expand_cache_pos(
@@ -433,15 +434,15 @@ class ContinuousEngine:
             self.pool = None
             self.caches = N.expand_cache_pos(
                 N.init_caches(cfg, slots, max_len), slots)
-        self._slots: List[Optional[_Slot]] = [None] * slots
+        self._slots: list[_Slot | None] = [None] * slots
         self._pos = np.zeros(slots, np.int32)   # mirror of cache pos leaves
 
         self._pending: "collections.deque[_Pending]" = collections.deque()
         self._results: "_queue.Queue[Result]" = _queue.Queue()
         self._cv = threading.Condition()
         self._stop = False
-        self._thread: Optional[threading.Thread] = None
-        self._loop_error: Optional[BaseException] = None
+        self._thread: threading.Thread | None = None
+        self._loop_error: BaseException | None = None
         self.steps = 0          # decode steps executed (benchmark metric)
         self.prefills = 0
         self.chunk_steps = 0    # prefill-chunk batches executed (paged)
@@ -505,7 +506,7 @@ class ContinuousEngine:
                                           t_submit=time.perf_counter()))
             self._cv.notify()
 
-    def get_result(self, timeout: Optional[float] = None) -> Result:
+    def get_result(self, timeout: float | None = None) -> Result:
         """Blocks until the next finished request (completion order).
         Raises RuntimeError if the serve loop died instead of hanging —
         but drains already-finished results first."""
@@ -577,12 +578,19 @@ class ContinuousEngine:
             shapes.append((m_tokens, d, cfg.d_ff))
         shapes.append((head_rows, cfg.vocab, d))
         for M, Nn, K in shapes:
+            # attention-free archs legitimately zero out dims (mamba2:
+            # d_ff == 0 — no MLP); a degenerate GEMM has no schedule and
+            # crashes the §5 cost model (K == 0 -> zero reduction chunks),
+            # so skip rather than resolve.  gta-lint Pass 1 flags any
+            # degenerate shape that would reach the cache.
+            if M <= 0 or Nn <= 0 or K <= 0:
+                continue
             self.schedule.resolve(M, Nn, K, prec)
 
     # -- policy views ---------------------------------------------------------
 
     def _pending_view(self, index: int, ent: _Pending, now: float,
-                      evictable_hint: Optional[int] = None) -> PendingView:
+                      evictable_hint: int | None = None) -> PendingView:
         remaining = ent.req.max_new_tokens - len(ent.resume_tokens)
         probe = (self.pool.probe([int(t) for t in ent.full_prompt],
                                  self._reserve_horizon(remaining),
@@ -597,7 +605,7 @@ class ContinuousEngine:
                            resumed=bool(ent.resume_tokens),
                            preemptions=ent.preemptions, probe=probe)
 
-    def _slot_view(self, index: int) -> Optional[SlotView]:
+    def _slot_view(self, index: int) -> SlotView | None:
         st = self._slots[index]
         if st is None:
             return None
@@ -617,7 +625,7 @@ class ContinuousEngine:
 
     # -- memory accounting ----------------------------------------------------
 
-    def kv_bytes(self) -> Dict[str, int]:
+    def kv_bytes(self) -> dict[str, int]:
         """Attention-KV memory: ``allocated`` = bytes of the KV leaves
         (pool or dense stripes); ``peak`` = high-watermark of bytes holding
         live data (paged: peak used blocks x per-block bytes across all
@@ -639,7 +647,7 @@ class ContinuousEngine:
         rollback return real blocks)."""
         return 1 if self.spec is not None else remaining_new
 
-    def _free_slot(self) -> Optional[int]:
+    def _free_slot(self) -> int | None:
         for i, s in enumerate(self._slots):
             if s is None:
                 return i
@@ -840,7 +848,7 @@ class ContinuousEngine:
                 self.spec.on_apply_cow(self, src, dst)
             self._bt = jnp.asarray(self.pool.tables)
 
-    def _prefill_chunk_step(self, pre: List[int]) -> None:
+    def _prefill_chunk_step(self, pre: list[int]) -> None:
         """One decode-interleaved chunk for EVERY admitting slot (batched
         admission): a single jitted call advances them all; rows not mid-
         prefill ride along masked (len 0 — recurrent state untouched,
@@ -911,14 +919,34 @@ class ContinuousEngine:
 
     def _end_step(self) -> int:
         """Common step epilogue: pool-utilization sample + optional
-        consistency audit; returns the active-slot count."""
+        consistency audit; returns the active-slot count.  An audit
+        failure raises :class:`~repro.serving.kv_pool.PoolAuditError`
+        carrying the serialized pool state plus the slot states below —
+        the same reproducer format ``analysis.pool_model``
+        counterexamples use, so runtime failures replay offline."""
         if self.paged:
             self._util_sum += self.pool.used_blocks / (self.pool.num_blocks
                                                        - 1)
             self._util_steps += 1
             if self._audit:
-                self.pool.check()
+                self.pool.check(pending_op=self._audit_context())
         return sum(s is not None for s in self._slots)
+
+    def _audit_context(self) -> dict:
+        """Engine-side half of a :class:`PoolAuditError` reproducer:
+        which requests occupy which slots, and where each one is."""
+        slots = []
+        for i, st in enumerate(self._slots):
+            if st is None:
+                slots.append(None)
+            else:
+                slots.append({"rid": st.req.rid, "phase": st.phase,
+                              "pos": int(self._pos[i]),
+                              "produced": len(st.produced),
+                              "pool_blocks": int(self.pool.n_slot_blocks[i])
+                              if self.paged else 0})
+        return {"op": "end_step", "spec": self.spec is not None,
+                "slots": slots}
 
     def step(self) -> int:
         """Admit what the policy picks, preempt if it names a victim, run
@@ -943,7 +971,7 @@ class ContinuousEngine:
         self._admit()
         return self._end_step()
 
-    def _decode_step(self, active: List[int]) -> None:
+    def _decode_step(self, active: list[int]) -> None:
         """ONE batched single-token decode dispatch over ``active``."""
         self._register_gemms(self.slots, self.slots)
         toks = np.zeros((self.slots, 1), np.int32)
@@ -991,7 +1019,7 @@ class ContinuousEngine:
 
     # -- the speculative verify step ------------------------------------------
 
-    def _spec_step(self, active: List[int]) -> None:
+    def _spec_step(self, active: list[int]) -> None:
         """One DRAFT/VERIFY round over the decoding slots.
 
         Per slot: extend the block table one speculative span ahead
@@ -1008,8 +1036,8 @@ class ContinuousEngine:
         k = 0 is preempted (re-queued with produced tokens; the freed
         blocks guarantee its lone re-admission succeeds)."""
         L = self.spec_k + 1
-        ks: Dict[int, int] = {}
-        run: List[int] = []
+        ks: dict[int, int] = {}
+        run: list[int] = []
         grew = False
         for i in active:
             st = self._slots[i]
@@ -1065,7 +1093,7 @@ class ContinuousEngine:
         for i in run:
             st = self._slots[i]
             d = drafts[i]
-            emit: List[int] = []
+            emit: list[int] = []
             j = 0
             while True:
                 # emitting tok[j] is valid iff inputs 0..j were correct:
@@ -1111,7 +1139,7 @@ class ContinuousEngine:
         — the deterministic speculation metric serve_bench gates on."""
         return self.spec_emitted / max(self.spec_slot_verifies, 1)
 
-    def spec_stats(self) -> Dict[str, Any]:
+    def spec_stats(self) -> dict[str, Any]:
         """Speculation telemetry (zeros when spec is off)."""
         return {
             "provider": self.spec.name if self.spec else None,
@@ -1130,7 +1158,7 @@ class ContinuousEngine:
 
     # -- synchronous convenience ----------------------------------------------
 
-    def run(self, requests: Sequence[Request]) -> List[Result]:
+    def run(self, requests: Sequence[Request]) -> list[Result]:
         """Serve all requests; returns results in COMPLETION order (rid
         identifies the request — short requests admitted late legitimately
         finish before long early ones).  Mutually exclusive with the
@@ -1141,7 +1169,7 @@ class ContinuousEngine:
                 "submit()/get_result() instead (or stop() first)")
         for r in requests:
             self.submit(r)
-        out: List[Result] = []
+        out: list[Result] = []
         while len(out) < len(requests):
             self.step()
             while True:
@@ -1173,9 +1201,9 @@ class WaveEngine:
                                        jnp.asarray(temps, jnp.float32))
         return tok
 
-    def run(self, requests: Sequence[Request]) -> List[Result]:
+    def run(self, requests: Sequence[Request]) -> list[Result]:
         """Serve all requests in waves of ``slots``."""
-        out: List[Result] = []
+        out: list[Result] = []
         queue = list(requests)
         t_start = time.perf_counter()
         while queue:
@@ -1184,7 +1212,7 @@ class WaveEngine:
         return out
 
     def _run_wave(self, wave: Sequence[Request], t_start: float
-                  ) -> List[Result]:
+                  ) -> list[Result]:
         B = len(wave)
         plen = max(len(r.prompt) for r in wave)
         toks = np.zeros((B, plen), np.int32)
@@ -1201,7 +1229,7 @@ class WaveEngine:
         t1 = time.perf_counter()
 
         done = np.zeros(B, bool)
-        produced: List[List[int]] = [[] for _ in range(B)]
+        produced: list[list[int]] = [[] for _ in range(B)]
         tok = self._sample(logits, temps)
         for step in range(max_new):
             tok_np = np.asarray(tok)

@@ -71,12 +71,35 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from collections.abc import Sequence
 
 import numpy as np
 
 #: the reserved null/trash block id (see module docstring)
 NULL_BLOCK = 0
+
+
+class PoolAuditError(AssertionError):
+    """A pool invariant audit failed.
+
+    Carries a machine-readable ``report`` — the full serialized pool
+    state (:meth:`KVPool.snapshot_state`), the violated invariants, and
+    the operation in flight — in the same shape the static model checker
+    (``analysis.pool_model``) emits for counterexample traces, so a
+    runtime ``audit=True`` failure is directly replayable offline.
+    """
+
+    def __init__(self, violations: Sequence[str], pool_state: dict,
+                 pending_op: dict | None = None):
+        self.violations = list(violations)
+        self.report = {"violations": self.violations,
+                       "pool": pool_state,
+                       "pending_op": pending_op}
+        lines = "\n  ".join(self.violations)
+        op = f"\nduring op: {pending_op!r}" if pending_op else ""
+        super().__init__(
+            f"KV pool audit failed ({len(self.violations)} violation(s)):"
+            f"\n  {lines}{op}\nreproducer: {self.report!r}")
 
 
 def blocks_for(n_tokens: int, block_size: int) -> int:
@@ -90,11 +113,11 @@ class AdmitPlan:
 
     slot: int
     shared_tokens: int          # prefix length already resident (block-aligned)
-    shared_blocks: Tuple[int, ...]
-    new_blocks: Tuple[int, ...]
+    shared_blocks: tuple[int, ...]
+    new_blocks: tuple[int, ...]
 
     @property
-    def blocks(self) -> Tuple[int, ...]:
+    def blocks(self) -> tuple[int, ...]:
         return self.shared_blocks + self.new_blocks
 
 
@@ -155,12 +178,12 @@ class KVPool:
         self.n_slot_blocks = np.zeros(slots, np.int32)
 
         # prefix cache: chained hash -> block id, LRU-ordered for eviction
-        self._prefix: "collections.OrderedDict[Tuple, int]" = (
+        self._prefix: collections.OrderedDict[tuple, int] = (
             collections.OrderedDict())
-        self._hash_of: Dict[int, Tuple] = {}           # reverse map
+        self._hash_of: dict[int, tuple] = {}           # reverse map
 
         #: (src, dst) copies the engine must apply on-device (COW forks)
-        self.pending_copies: List[Tuple[int, int]] = []
+        self.pending_copies: list[tuple[int, int]] = []
 
         # telemetry
         self.peak_used = 0
@@ -181,7 +204,7 @@ class KVPool:
 
     # -- raw allocation ------------------------------------------------------
 
-    def _alloc_one(self) -> Optional[int]:
+    def _alloc_one(self) -> int | None:
         if not self._free:
             return None
         bid = self._free.popleft()
@@ -215,7 +238,7 @@ class KVPool:
                 if len(self._free) >= need:
                     return
 
-    def reserve(self, n: int) -> Optional[List[int]]:
+    def reserve(self, n: int) -> list[int] | None:
         """Allocate ``n`` blocks atomically (evicting cached prefix blocks
         if needed); None (and a recorded backoff) when the pool cannot
         satisfy the reservation — the caller must retry later."""
@@ -232,22 +255,22 @@ class KVPool:
 
     @staticmethod
     def _chain_hashes(tokens: Sequence[int], block_size: int,
-                      n_blocks: int) -> List[Tuple]:
+                      n_blocks: int) -> list[tuple]:
         """Chained content keys, one per full block: block j's key is
         (parent key, block-j tokens) — the FULL chain, not a collapsed
         hash(), so two different prefixes can never alias a block (a
         64-bit hash collision here would silently serve another prompt's
         KV).  Dict lookups still hash the tuple internally; equality
         checks make collisions harmless."""
-        hs: List[Tuple] = []
-        h: Tuple = ()
+        hs: list[tuple] = []
+        h: tuple = ()
         toks = [int(t) for t in tokens[:n_blocks * block_size]]
         for j in range(n_blocks):
             h = (h, tuple(toks[j * block_size:(j + 1) * block_size]))
             hs.append(h)
         return hs
 
-    def match_prefix(self, prompt: Sequence[int]) -> List[int]:
+    def match_prefix(self, prompt: Sequence[int]) -> list[int]:
         """Longest run of cached full prompt blocks; each returned block
         gets a ref for the caller.  Sharing only ever covers FULL blocks,
         so the shared length is always block-aligned and strictly shorter
@@ -256,7 +279,7 @@ class KVPool:
         if not self.share_prefixes:
             return []
         nfull = (len(prompt) - 1) // self.block_size   # keep >= 1 tail token
-        out: List[int] = []
+        out: list[int] = []
         for h in self._chain_hashes(prompt, self.block_size, nfull):
             bid = self._prefix.get(h)
             if bid is None:
@@ -293,7 +316,7 @@ class KVPool:
         return sum(1 for bid in self._hash_of if self.ref[bid] == 1)
 
     def probe(self, prompt: Sequence[int], max_new_tokens: int,
-              evictable_hint: Optional[int] = None) -> ProbeReport:
+              evictable_hint: int | None = None) -> ProbeReport:
         """Answer "would ``admit(prompt, max_new_tokens)`` succeed right
         now?" WITHOUT mutating anything: no refs taken, no LRU touch, no
         backoff recorded.  Scheduling policies call this once per queued
@@ -303,7 +326,7 @@ class KVPool:
         plen = len(prompt)
         total = min(blocks_for(plen + max_new_tokens, self.block_size),
                     self.blocks_per_slot)
-        matched: List[int] = []
+        matched: list[int] = []
         if self.share_prefixes and plen > 0:
             nfull = (plen - 1) // self.block_size
             for h in self._chain_hashes(prompt, self.block_size, nfull):
@@ -339,7 +362,7 @@ class KVPool:
     # -- admission / release -------------------------------------------------
 
     def admit(self, slot: int, prompt: Sequence[int],
-              max_new_tokens: int) -> Optional[AdmitPlan]:
+              max_new_tokens: int) -> AdmitPlan | None:
         """Reserve everything request ``(prompt, max_new_tokens)`` can ever
         touch in slot ``slot``: shared prefix blocks are mapped in, the
         rest is allocated up front so decode can never fail mid-flight.
@@ -413,17 +436,14 @@ class KVPool:
         if keep >= cur:
             return 0
         dropped = [int(b) for b in self.tables[slot, keep:cur]]
-        dropped_set = set(dropped)
-        if self.pending_copies:
-            self.pending_copies = [(s, d) for (s, d) in self.pending_copies
-                                   if d not in dropped_set]
+        self._scrub_pending(set(dropped))
         for bid in dropped:
             self._release_one(bid)
         self.tables[slot, keep:cur] = NULL_BLOCK
         self.n_slot_blocks[slot] = keep
         return cur - keep
 
-    def release_slot(self, slot: int, *, prompt: Optional[Sequence[int]]
+    def release_slot(self, slot: int, *, prompt: Sequence[int] | None
                      = None) -> None:
         """Drop the slot's refs.  With ``prompt`` given, its full blocks are
         first registered in the prefix cache (so they survive the release
@@ -433,6 +453,10 @@ class KVPool:
         row = [int(b) for b in self.tables[slot, :n]]
         if prompt is not None:
             self.register_prefix(prompt, row)
+        # pending COW copies into the released row die with it (same
+        # hazard truncate scrubs: a freed destination must never be
+        # re-allocated with a stale device copy still queued against it)
+        self._scrub_pending(set(row))
         for bid in row:
             self._release_one(bid)
         self.tables[slot, :] = NULL_BLOCK
@@ -444,7 +468,17 @@ class KVPool:
                         ) -> None:
         """Fork any shared block the write span [first_pos, last_pos]
         touches (COW).  Device copies are queued on ``pending_copies`` for
-        the engine to apply BEFORE the write executes."""
+        the engine to apply BEFORE the write executes.
+
+        The slot's ref on the forked source is NOT dropped here — it
+        transfers to the pending-copy entry and is released by
+        :meth:`take_copies` once the engine owns the device copy.  An
+        unpinned pending source could be freed and re-allocated (via a
+        concurrent release/evict) before the copy executes, so the copy
+        would read another request's KV bytes.  The bounded model checker
+        (``analysis.pool_model``) finds that race in four ops against the
+        eager-release variant; ``BuggyPoolEagerCOWRelease`` keeps it as a
+        seeded mutant."""
         j0 = first_pos // self.block_size
         j1 = min(last_pos // self.block_size, self.blocks_per_slot - 1)
         for j in range(j0, j1 + 1):
@@ -460,18 +494,37 @@ class KVPool:
                 fresh = self._alloc_one()
                 if fresh is None:
                     raise MemoryError("KV pool exhausted during COW fork")
+            # the slot's ref on ``bid`` now backs the pending entry
             self.pending_copies.append((bid, fresh))
             self.cow_forks += 1
-            self._release_one(bid)
             self.tables[slot, j] = fresh
 
-    def take_copies(self) -> List[Tuple[int, int]]:
+    def take_copies(self) -> list[tuple[int, int]]:
+        """Pop the queued (src, dst) COW copies for on-device execution,
+        releasing each source's pending pin (the engine holds the bytes
+        from here on)."""
         out, self.pending_copies = self.pending_copies, []
+        for src, _dst in out:
+            self._release_one(src)
         return out
+
+    def _scrub_pending(self, dropped: "set[int]") -> None:
+        """Drop queued COW copies whose destination is being released and
+        release their sources' pending pins — the fork never materializes
+        on device, so neither side of the pair may stay pinned by it."""
+        if not self.pending_copies:
+            return
+        keep: list[tuple[int, int]] = []
+        for src, dst in self.pending_copies:
+            if dst in dropped:
+                self._release_one(src)
+            else:
+                keep.append((src, dst))
+        self.pending_copies = keep
 
     # -- introspection -------------------------------------------------------
 
-    def stats(self) -> Dict[str, int]:
+    def stats(self) -> dict[str, int]:
         return {"num_blocks": self.num_blocks - 1,
                 "block_size": self.block_size,
                 "used": self.used_blocks,
@@ -482,8 +535,39 @@ class KVPool:
                 "evictions": self.evictions,
                 "backoffs": self.backoffs}
 
-    def check(self) -> None:
-        """Internal-consistency audit (tests): every ref accounted for."""
+    def snapshot_state(self) -> dict:
+        """JSON-serializable dump of the complete pool state — the
+        ``pool`` field of :class:`PoolAuditError` reproducers and of
+        model-checker counterexamples."""
+        return {
+            "num_blocks": int(self.num_blocks),
+            "block_size": int(self.block_size),
+            "slots": int(self.slots),
+            "max_len": int(self.max_len),
+            "free": [int(b) for b in self._free],
+            "ref": [int(r) for r in self.ref],
+            "tables": self.tables.tolist(),
+            "n_slot_blocks": [int(n) for n in self.n_slot_blocks],
+            "prefix_blocks": sorted(int(b) for b in self._hash_of),
+            "pending_copies": [[int(s), int(d)]
+                               for s, d in self.pending_copies],
+        }
+
+    def audit_violations(self) -> list[str]:
+        """Every broken invariant, as human-readable strings; empty when
+        the pool is consistent.  Non-raising — both the runtime audit
+        (:meth:`check`) and the bounded model checker
+        (``analysis.pool_model``) judge states through this one
+        predicate, so they can never disagree on what counts as a bug.
+
+        Invariants: (1) ref conservation — ``ref[b]`` equals the slot
+        table mappings of ``b`` plus its prefix-map pin, its pending-COW
+        source pins, and the null block's permanent pin; (2) the free
+        list holds exactly the ref==0 blocks, each once (a duplicate is a
+        double free, a ref>0 entry is a use-after-free window, a missing
+        ref==0 block is a leak); (3) pending copies reference live
+        blocks with a mapped, exclusively-owned destination."""
+        out: list[str] = []
         counts = np.zeros(self.num_blocks, np.int64)
         counts[NULL_BLOCK] += 1
         for s in range(self.slots):
@@ -491,8 +575,50 @@ class KVPool:
                 counts[int(b)] += 1
         for bid in self._hash_of:
             counts[bid] += 1
-        free = set(self._free)
+        for src, _dst in self.pending_copies:
+            counts[int(src)] += 1          # pending pin until take_copies
+        free_list = [int(b) for b in self._free]
+        free = set(free_list)
+        if len(free) != len(free_list):
+            dupes = sorted(b for b in free
+                           if free_list.count(b) > 1)
+            out.append(f"double free: blocks {dupes} appear more than "
+                       f"once on the free list")
+        if NULL_BLOCK in free:
+            out.append("null block on the free list")
         for bid in range(self.num_blocks):
-            assert counts[bid] == self.ref[bid], (
-                f"block {bid}: counted {counts[bid]} != ref {self.ref[bid]}")
-            assert (self.ref[bid] == 0) == (bid in free), bid
+            c, r = int(counts[bid]), int(self.ref[bid])
+            if c != r:
+                kind = "leak (ref outlives users)" if r > c else \
+                    "dangling use (users outnumber ref)"
+            else:
+                kind = None
+            if kind:
+                out.append(f"refcount: block {bid} has {c} user(s) but "
+                           f"ref {r} — {kind}")
+            if r > 0 and bid in free:
+                out.append(f"block {bid} on the free list with ref {r} "
+                           f"(use-after-free window)")
+            if r == 0 and bid not in free:
+                out.append(f"block {bid} has ref 0 but is not on the "
+                           f"free list (leaked)")
+            if r == 0 and bid in self._hash_of:
+                out.append(f"prefix cache maps freed block {bid}")
+        for src, dst in self.pending_copies:
+            if self.ref[int(src)] <= 0:
+                out.append(f"pending COW copy reads freed source block "
+                           f"{int(src)}")
+            if self.ref[int(dst)] <= 0:
+                out.append(f"pending COW copy writes freed destination "
+                           f"block {int(dst)}")
+        return out
+
+    def check(self, pending_op: dict | None = None) -> None:
+        """Internal-consistency audit (``audit=True`` engines, tests):
+        raises :class:`PoolAuditError` with a serialized reproducer —
+        full pool state plus the operation in flight — when any
+        :meth:`audit_violations` invariant is broken."""
+        violations = self.audit_violations()
+        if violations:
+            raise PoolAuditError(violations, self.snapshot_state(),
+                                 pending_op)

@@ -42,7 +42,7 @@ through :func:`make_policy`.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+from collections.abc import Callable
 
 from repro.serving.kv_pool import ProbeReport
 
@@ -56,11 +56,11 @@ class PendingView:
     prompt_len: int             # tokens still to prefill (incl. resume tail)
     new_tokens: int             # remaining decode budget
     priority: int
-    ttft_slo: Optional[float]   # seconds, None = no deadline
+    ttft_slo: float | None   # seconds, None = no deadline
     waited_s: float             # now - submit time
     resumed: bool               # True once the request has produced tokens
     preemptions: int            # times this request was preempted
-    probe: Optional[ProbeReport]  # pool reservation probe (None on dense)
+    probe: ProbeReport | None  # pool reservation probe (None on dense)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,13 +99,13 @@ class SchedulerPolicy:
     #: the engine skips the preemption hook entirely otherwise
     preempts = False
 
-    def select_admission(self, pending: List[PendingView],
-                         now: float) -> Optional[int]:
+    def select_admission(self, pending: list[PendingView],
+                         now: float) -> int | None:
         raise NotImplementedError
 
-    def select_victim(self, pending: List[PendingView],
-                      slots: List[Optional[SlotView]],
-                      now: float) -> Optional[int]:
+    def select_victim(self, pending: list[PendingView],
+                      slots: list[SlotView | None],
+                      now: float) -> int | None:
         return None
 
 
@@ -216,7 +216,7 @@ class SloPreemptPolicy(SchedulerPolicy):
         return victim.index
 
 
-_REGISTRY: Dict[str, Callable[..., SchedulerPolicy]] = {}
+_REGISTRY: dict[str, Callable[..., SchedulerPolicy]] = {}
 
 
 def register_policy(name: str,

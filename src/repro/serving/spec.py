@@ -44,7 +44,6 @@ made exact (ROADMAP: "SSM state checkpointing" is the missing half;
 
 from __future__ import annotations
 
-from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
@@ -70,8 +69,8 @@ class DraftProvider:
     def bind(self, engine) -> None:
         """Called once at engine construction (pool + caches exist)."""
 
-    def propose(self, engine, slots: List[int],
-                ks: Dict[int, int]) -> Dict[int, List[int]]:
+    def propose(self, engine, slots: list[int],
+                ks: dict[int, int]) -> dict[int, list[int]]:
         """Draft up to ``ks[i]`` next tokens for each decoding slot in
         ``slots``; fewer (or none) is always legal — the verify step
         shrinks to what was proposed."""
@@ -108,7 +107,7 @@ class NgramDraft(DraftProvider):
         self.window = window
 
     def propose(self, engine, slots, ks):
-        out: Dict[int, List[int]] = {}
+        out: dict[int, list[int]] = {}
         for i in slots:
             st = engine._slots[i]
             hist = ([int(t) for t in st.req.prompt]
@@ -116,7 +115,7 @@ class NgramDraft(DraftProvider):
             out[i] = self.lookup(hist[-self.window:], ks[i])
         return out
 
-    def lookup(self, hist: List[int], k: int) -> List[int]:
+    def lookup(self, hist: list[int], k: int) -> list[int]:
         L = len(hist)
         if k <= 0 or L < 2:
             return []
@@ -196,7 +195,7 @@ class ModelDraft(DraftProvider):
                                            jnp.asarray(pos, jnp.int32))
 
     def propose(self, engine, slots, ks):
-        out: Dict[int, List[int]] = {i: [] for i in slots}
+        out: dict[int, list[int]] = {i: [] for i in slots}
         if not slots:
             return out
         kmax = max(ks[i] for i in slots)

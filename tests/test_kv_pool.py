@@ -353,3 +353,117 @@ def test_null_block_is_pinned():
         assert bid != NULL_BLOCK
         seen.add(bid)
     assert len(seen) == pool.num_blocks - 1
+
+
+# ---------------------------------------------------------------------------
+# gta-lint Pass 3 seeded regressions: op sequences the model checker
+# (analysis.pool_model) found as minimal counterexamples against the
+# seeded-bug mutants, replayed against the REAL pool.  Each must audit
+# clean — if one starts failing, the checker will find it first, and
+# these traces localize the regression instantly.
+# ---------------------------------------------------------------------------
+
+def _run_trace(pool, prompts, trace):
+    """Mini interpreter for model-checker trace vocabulary (mirrors
+    analysis.pool_model._apply, MemoryError = legal backoff)."""
+    owners = [None] * pool.slots
+    for op in trace:
+        try:
+            if op[0] == "admit":
+                if pool.admit(op[1], list(prompts[op[2]]), 2) is not None:
+                    owners[op[1]] = op[2]
+            elif op[0] == "extend":
+                pool.extend(op[1], op[2])
+            elif op[0] == "truncate":
+                pool.truncate(op[1], op[2])
+            elif op[0] == "cow":
+                pool.ensure_writable(op[1], op[2], op[3])
+            elif op[0] == "release":
+                pr = (list(prompts[owners[op[1]]])
+                      if op[2] and owners[op[1]] is not None else None)
+                pool.release_slot(op[1], prompt=pr)
+                owners[op[1]] = None
+            elif op[0] == "take":
+                pool.take_copies()
+        except MemoryError:
+            pass
+        pool.check()                     # audit EVERY transition
+
+
+_MC_PROMPTS = ((1, 2, 3, 4, 5), (1, 2, 3, 9, 9), (7, 8, 9))
+
+
+def _mc_pool():
+    return KVPool(8, 2, slots=2, max_len=8, share_prefixes=True)
+
+
+def test_trace_cow_after_shared_readmit():
+    """Minimal counterexample of the eager-COW-release mutant: admit,
+    release with registration, re-admit the shared prefix, then fork the
+    whole span.  On the fixed pool the forked sources stay pinned by the
+    pending copies until take_copies()."""
+    pool = _mc_pool()
+    _run_trace(pool, _MC_PROMPTS, [
+        ("admit", 0, 0), ("release", 0, True),
+        ("admit", 0, 0), ("cow", 0, 0, 7)])
+    assert pool.pending_copies          # forks queued, sources pinned
+    for src, _dst in pool.pending_copies:
+        assert pool.ref[src] >= 1
+    pool.take_copies()
+    pool.check()
+
+
+def test_trace_truncate_to_zero_with_pending_cow():
+    """Minimal counterexample of the no-scrub mutant: fork a shared span
+    then reject everything (spec-mode rollback to 0).  The fixed pool
+    scrubs the pending copies with the dropped destinations."""
+    pool = _mc_pool()
+    _run_trace(pool, _MC_PROMPTS, [
+        ("admit", 0, 0), ("release", 0, True),
+        ("admit", 0, 1), ("cow", 0, 0, 5), ("truncate", 0, 0)])
+    assert pool.pending_copies == []
+    pool.check()
+
+
+def test_trace_eviction_under_pressure_with_live_sharer():
+    """Counterexample family of the evict-shared mutant: cached prefix
+    blocks are also mapped by a live slot; filling the pool forces
+    eviction, which must skip every block with ref > 1."""
+    pool = _mc_pool()
+    _run_trace(pool, _MC_PROMPTS, [
+        ("admit", 0, 0), ("release", 0, True),      # cache P0's blocks
+        ("admit", 0, 1),                            # shares block 0
+        ("admit", 1, 2), ("extend", 1, 6),          # pressure
+        ("extend", 1, 8)])                          # forces eviction try
+    pool.check()
+
+
+def test_trace_release_register_release_cycles_leak_free():
+    """Counterexample of the leaky-release mutant, cycled: every admit/
+    release round trip must return the pool to an exactly-conserved
+    state (the leak showed up in 2 ops)."""
+    pool = _mc_pool()
+    for _ in range(4):
+        _run_trace(pool, _MC_PROMPTS, [
+            ("admit", 0, 2), ("release", 0, False)])
+    assert pool.used_blocks == 0
+    pool.check()
+
+
+def test_spec_mode_truncate_x_eviction_interleaving():
+    """truncate x eviction under spec mode: verify-extend, partial
+    rollback, COW against a cached prefix, and eviction pressure all
+    interleaved — the steady state speculative serving drives the pool
+    through.  Audited at every transition by _run_trace."""
+    pool = _mc_pool()
+    _run_trace(pool, _MC_PROMPTS, [
+        ("admit", 0, 0), ("release", 0, True),
+        ("admit", 0, 1), ("extend", 0, 6),          # speculate
+        ("cow", 0, 0, 5),                           # write into shared
+        ("truncate", 0, 3),                         # reject tail
+        ("take",),
+        ("admit", 1, 2), ("extend", 1, 6),          # evict pressure
+        ("truncate", 0, 0), ("release", 0, False),
+        ("release", 1, False)])
+    assert pool.n_slot_blocks.sum() == 0    # both slots fully released
+    pool.check()
