@@ -14,6 +14,14 @@ through three engines with identical params/sampling:
               Pallas GEMMs (kernels.ops.GemmBackend), sharing ONE
               paper-§5 ScheduleCache with the engine
 
+A TELEMETRY row (``paged_telemetry``) A/Bs the paged engine with the
+full observability stack enabled (lifecycle tracer, metrics registry,
+Chrome-trace export — see ``repro.obs``) against the default-off engine
+on the same trace: output must stay token-identical, the exported trace
+must validate as Chrome trace-event JSON, the registry must agree with
+the results, and the enabled run must stay within 5% of the untraced
+wall (min-of-3 alternating runs).
+
 A second OVERLOAD trace exercises the scheduling-policy subsystem
 (``serving.policy``): two long-decode hogs seize the slots, an oversized
 reservation blocks the queue head, and short TTFT-SLO chat turns pile up
@@ -252,8 +260,14 @@ def run_bench(n_requests: int, slots: int, max_len: int,
 
     rows, tokens_by_engine, paged_eng = [], {}, None
     for name, eng in engines().items():
-        sched_before = (eng.schedule.stats()
-                        if hasattr(eng, "schedule") else None)
+        if name == "paged_sched":
+            # construction pre-resolves every steady-state shape into the
+            # (shared, already-warm) cache; zeroing the hit/miss counts
+            # here makes the 100%-hit gate below count ONLY the timed run
+            # — warmup and construction misses are excluded by
+            # construction, not by a before/after delta dance.  Entries
+            # and the applied log survive a reset (ScheduleCache.reset).
+            eng.schedule.reset()
         t0 = time.perf_counter()
         res = eng.run(reqs)
         rows.append(_summarize(name, res, time.perf_counter() - t0, eng))
@@ -270,13 +284,12 @@ def run_bench(n_requests: int, slots: int, max_len: int,
         if name in ("dense", "paged_sched"):
             rows[-1]["schedule_cache"] = eng.schedule.stats()
         if name == "paged_sched":
-            after = eng.schedule.stats()
-            hits = after["hits"] - sched_before["hits"]
-            misses = after["misses"] - sched_before["misses"]
-            rows[-1]["schedule_hits_run"] = hits
-            rows[-1]["schedule_misses_run"] = misses
+            st = eng.schedule.stats()
+            rows[-1]["schedule_hits_run"] = st["hits"]
+            rows[-1]["schedule_misses_run"] = st["misses"]
             rows[-1]["schedule_hit_rate_run"] = round(
-                hits / max(hits + misses, 1), 4)
+                st["hits"] / max(st["hits"] + st["misses"], 1), 4)
+            rows[-1]["schedule_keys_hit_run"] = len(eng.schedule.key_stats())
 
     # ---- gates --------------------------------------------------------------
     by = {r["engine"]: r for r in rows}
@@ -325,9 +338,102 @@ def run_bench(n_requests: int, slots: int, max_len: int,
                         f"application log: {missing}")
     by["paged"]["gather_gemms_in_applied_log"] = not missing
 
+    trows, tfail = run_telemetry_bench(cfg, params, slots, max_len, reqs,
+                                       tokens_by_engine["paged"])
     prows, pfail = run_policy_bench(cfg, params, slots, n_requests=12)
     srows, sfail = run_spec_bench(cfg, params, slots)
-    return rows + prows + srows, failures + pfail + sfail
+    return rows + trows + prows + srows, failures + tfail + pfail + sfail
+
+
+#: enabled-tracing slowdown bound: the lifecycle tracer + registry must
+#: cost at most this fraction of untraced paged throughput (min-of-N
+#: alternating walls — the gate is on the telemetry design, not on one
+#: noisy CI sample).
+TELEMETRY_OVERHEAD_BOUND = 0.05
+
+
+def run_telemetry_bench(cfg, params, slots: int, max_len: int, reqs,
+                        ref_tokens):
+    """A/B the paged engine with full telemetry (lifecycle tracer on,
+    metrics registry + exporters) against the default-off engine on the
+    same trace.  Tracing must be effectively free — every hot-path hook
+    hides behind ``tracer.enabled`` and registry recording is one
+    attribute op — so the row gates the enabled run within
+    ``TELEMETRY_OVERHEAD_BOUND`` of the untraced wall.
+
+    Timing: min over alternating fresh-engine runs.  At bench size the
+    walls are a few hundred ms, where host jitter alone swings a
+    min-of-3 ratio by ±10%, so reps accumulate in rounds of 3 pairs (up
+    to 3 rounds) and the gate stops as soon as the min-ratio is within
+    bound — real hook overhead is systematic and fails every round,
+    while a noise spike on one round gets floored out by the next."""
+    from repro.obs import Telemetry, validate_chrome_trace
+    from repro.serving.engine import ContinuousEngine
+
+    def make(on: bool):
+        return ContinuousEngine(
+            cfg, params, slots=slots, max_len=max_len, paged=True,
+            telemetry=Telemetry.on() if on else None)
+
+    walls = {False: [], True: []}
+    eng_on = res_on = None
+    for _round in range(3):
+        for _ in range(3):
+            for on in (False, True):
+                eng = make(on)
+                t0 = time.perf_counter()
+                res = eng.run(reqs)
+                walls[on].append(time.perf_counter() - t0)
+                if on:
+                    eng_on, res_on = eng, res
+        off_w, on_w = min(walls[False]), min(walls[True])
+        frac = on_w / max(off_w, 1e-9) - 1.0
+        if frac <= TELEMETRY_OVERHEAD_BOUND:
+            break
+    row = _summarize("paged_telemetry", res_on, on_w, eng_on)
+    row["pool"] = eng_on.pool.stats()
+    row["wall_s_untraced"] = round(off_w, 3)
+    row["telemetry_overhead_frac"] = round(frac, 4)
+    row["telemetry_overhead_ok"] = frac <= TELEMETRY_OVERHEAD_BOUND
+    row["trace_events"] = len(eng_on.obs.tracer)
+    row["trace_dropped"] = eng_on.obs.tracer.dropped
+    # the row's serving figures come back OUT of the registry — the
+    # snapshot is the public read path serve.py's report uses too
+    snap = eng_on.metrics.snapshot()
+    c = snap["counters"]
+    row["registry"] = {
+        "engine.steps": c.get("engine.steps", 0),
+        "engine.chunk_steps": c.get("engine.chunk_steps", 0),
+        "engine.tokens_emitted": c.get("engine.tokens_emitted", 0),
+        "engine.requests_finished": c.get("engine.requests_finished", 0),
+        "kv_pool.shared_token_hits": c.get("kv_pool.shared_token_hits", 0),
+        "schedule.hits": c.get("schedule.hits", 0),
+        "schedule.misses": c.get("schedule.misses", 0),
+    }
+
+    failures = []
+    tokens = {r.rid: list(map(int, r.tokens)) for r in res_on}
+    if tokens != ref_tokens:
+        failures.append("telemetry-on output != paged output (greedy) — "
+                        "instrumentation changed the tokens")
+    if row["registry"]["engine.tokens_emitted"] != row["new_tokens"]:
+        failures.append(
+            f"registry counted {row['registry']['engine.tokens_emitted']} "
+            f"tokens but the run emitted {row['new_tokens']} — the metrics "
+            f"registry disagrees with the results")
+    trace_errs = validate_chrome_trace(eng_on.obs.tracer.chrome_trace())
+    if trace_errs:
+        failures.append(f"trace failed Chrome trace-event validation: "
+                        f"{trace_errs[:3]}")
+    if eng_on.obs.tracer.dropped:
+        failures.append(f"tracer dropped {eng_on.obs.tracer.dropped} "
+                        f"events on a bench-sized run — ring too small")
+    if not row["telemetry_overhead_ok"]:
+        failures.append(
+            f"enabled tracing cost {frac*100:.1f}% wall vs untraced "
+            f"(bound {TELEMETRY_OVERHEAD_BOUND*100:.0f}%) — hot-path "
+            f"hooks are not cheap enough")
+    return [row], failures
 
 
 #: the overload trace's sizes (100-token blocker, hog decode budgets) and
@@ -444,16 +550,17 @@ def run_spec_bench(cfg, params, slots: int, n_requests: int = 8):
 
     rows, tokens, failures = [], {}, []
     for name, eng in engines().items():
-        before = eng.schedule.stats()
+        # verify/draft shapes are pre-registered at construction — zero
+        # the counts so the 100%-hit gate sees the timed run alone
+        eng.schedule.reset()
         t0 = time.perf_counter()
         res = eng.run([dataclasses.replace(r) for r in reqs])
         row = _summarize(name, res, time.perf_counter() - t0, eng)
         row["pool"] = eng.pool.stats()
         row["chunk_steps"] = eng.chunk_steps
-        after = eng.schedule.stats()
-        hits = after["hits"] - before["hits"]
-        misses = after["misses"] - before["misses"]
-        row["schedule_hit_rate_run"] = round(hits / max(hits + misses, 1), 4)
+        st = eng.schedule.stats()
+        row["schedule_hit_rate_run"] = round(
+            st["hits"] / max(st["hits"] + st["misses"], 1), 4)
         if eng.spec is not None:
             row["spec"] = eng.spec_stats()
         rows.append(row)
@@ -533,6 +640,12 @@ def main(argv=None) -> int:
           f"run ({ss['schedule_hits_run']} hits / "
           f"{ss['schedule_misses_run']} misses), "
           f"{ss['schedule_cache']['applied']} applications logged")
+    tl = by["paged_telemetry"]
+    print(f"telemetry overhead: {tl['telemetry_overhead_frac']*100:+.1f}% "
+          f"wall vs untraced paged (bound "
+          f"{TELEMETRY_OVERHEAD_BOUND*100:.0f}%; {tl['trace_events']} "
+          f"trace events, {tl['trace_dropped']} dropped; registry counted "
+          f"{tl['registry']['engine.tokens_emitted']:.0f} tokens)")
     pf, pb, ps = (by["policy_fifo"], by["policy_best_fit"],
                   by["policy_slo_preempt"])
     print(f"policy overload: pool util fifo {pf['avg_pool_util']:.2f} -> "

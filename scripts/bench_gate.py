@@ -50,6 +50,10 @@ CHECKS = [
     ("serve", "engine=paged_spec_model.decode_steps", "lower", 0.10),
     ("serve", "engine=paged_spec_ngram.spec.avg_accept_len", "higher", 0.10),
     ("serve", "engine=paged_spec_model.spec.avg_accept_len", "higher", 0.05),
+    # telemetry: enabled tracing must stay within the serve_bench bound
+    # (the row computes the A/B in-process from min-of-N alternating
+    # walls; the boolean is what gets gated, never the raw wall numbers)
+    ("serve", "engine=paged_telemetry.telemetry_overhead_ok", "true", 0.0),
 ]
 
 

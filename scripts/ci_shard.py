@@ -31,6 +31,7 @@ WEIGHTS = {
     "test_system.py": 58,
     "test_kernels.py": 53,
     "test_spec.py": 40,
+    "test_obs.py": 40,
     "test_gemm_backend.py": 34,
     "test_substrates.py": 24,
     "test_paged_attention.py": 21,

@@ -26,6 +26,18 @@ python -m pytest -x -q -m "not slow"
 python -m benchmarks.kernels_bench --smoke
 python -m benchmarks.serve_bench --dry
 
+# telemetry smoke: a profiled serve run exports a Chrome trace + metrics
+# snapshot (experiments/obs/, uploaded as CI artifacts), then
+# trace_report validates the trace and asserts the drift table covers
+# all four hot dispatches (docs/OBSERVABILITY.md).
+mkdir -p experiments/obs
+python -m repro.launch.serve --arch qwen2-0.5b --scaled-down \
+    --requests 6 --max-new 12 --slots 2 --max-len 96 --spec ngram \
+    --profile --trace-out experiments/obs/trace_smoke.json \
+    --metrics-out experiments/obs/metrics_smoke.json
+python scripts/trace_report.py experiments/obs/trace_smoke.json \
+    --metrics experiments/obs/metrics_smoke.json --validate
+
 python - << 'EOF'
 import numpy as np, jax
 from repro import configs as CONFIGS

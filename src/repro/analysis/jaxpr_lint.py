@@ -26,6 +26,11 @@ runtime tests cannot see until they burn a step:
   ``peak_intermediate_bytes`` gate to whole dispatches: no equation may
   produce a value materially larger than the dispatch's own largest
   input/output leaf (a partial-plane-style blowup).
+
+Every dispatch is additionally re-traced through the observability
+profiler's wrapper (``obs.profile.profiled_dispatch``, subject suffix
+``+profiled``) and held to the same rules plus an equation-count
+identity check — instrumentation must never cross the jit boundary.
 """
 
 from __future__ import annotations
@@ -175,12 +180,47 @@ def hot_dispatches(cfg: ModelConfig, *, slots: int = SLOTS,
     return out
 
 
-def trace_dispatches(cfg: ModelConfig, **geometry) -> list[TracedDispatch]:
+def trace_dispatches(cfg: ModelConfig, *, include_profiled: bool = False,
+                     **geometry) -> list[TracedDispatch]:
+    """Trace every hot dispatch; with ``include_profiled`` each is ALSO
+    traced through ``obs.profile.profiled_dispatch`` (subject suffix
+    ``+profiled``) — the profiler's timing hooks run at Python level, so
+    the wrapped jaxpr must be equation-for-equation identical to the
+    bare one (in particular: no new host-transfer primitives)."""
     out = []
+    if include_profiled:
+        from repro.obs.profile import profiled_dispatch
     for name, fn, args in hot_dispatches(cfg, **geometry):
         closed = jax.make_jaxpr(fn)(*args)
         out.append(TracedDispatch(name, closed, step_cost(fn, *args)))
+        if include_profiled:
+            closed_p = jax.make_jaxpr(profiled_dispatch(fn))(*args)
+            # cost is carried over, not re-walked: the identity check in
+            # lint_profiled_pair is what guarantees it still applies
+            out.append(TracedDispatch(name + "+profiled", closed_p,
+                                      out[-1].cost))
     return out
+
+
+def _eqn_count(jaxpr) -> int:
+    return sum(1 for _ in _walk(jaxpr))
+
+
+def lint_profiled_pair(cfg: ModelConfig, base: TracedDispatch,
+                       profiled: TracedDispatch) -> list[Finding]:
+    """The profiled wrapper must leave the program untouched — timing
+    runs outside the trace.  A structural mismatch means the wrapper
+    leaked something (a callback, an extra convert) INTO the jaxpr."""
+    nb = _eqn_count(base.closed.jaxpr)
+    np_ = _eqn_count(profiled.closed.jaxpr)
+    if nb != np_:
+        return [Finding(
+            "jaxpr", "profiled-wrapper-changed-jaxpr",
+            f"{cfg.name}/{profiled.name}",
+            f"profiling wrapper changed the traced program: {np_} "
+            f"equations vs {nb} bare — instrumentation crossed the jit "
+            f"boundary")]
+    return []
 
 
 # ---------------------------------------------------------------------------
@@ -270,9 +310,22 @@ def lint_dispatch(cfg: ModelConfig, td: TracedDispatch) -> list[Finding]:
     return out
 
 
-def check_config(cfg: ModelConfig, **geometry) -> list[Finding]:
-    """Pass 2 over every hot dispatch of ``cfg``'s serving engine."""
+def check_config(cfg: ModelConfig, *, include_profiled: bool = True,
+                 **geometry) -> list[Finding]:
+    """Pass 2 over every hot dispatch of ``cfg``'s serving engine.
+
+    With ``include_profiled`` (the default — gta-lint runs it), each
+    dispatch is re-screened through the obs profiler's wrapper: the
+    full rule set runs on the wrapped jaxpr too (host transfers above
+    all), plus the wrapper-identity check."""
     findings: list[Finding] = []
-    for td in trace_dispatches(cfg, **geometry):
+    by_name: dict[str, TracedDispatch] = {}
+    for td in trace_dispatches(cfg, include_profiled=include_profiled,
+                               **geometry):
         findings += lint_dispatch(cfg, td)
+        if td.name.endswith("+profiled"):
+            findings += lint_profiled_pair(
+                cfg, by_name[td.name[:-len("+profiled")]], td)
+        else:
+            by_name[td.name] = td
     return findings

@@ -30,6 +30,7 @@ from repro.core.dataflow import (ArrayShape, CostReport, Dataflow, Direction,
 from repro.core.pgemm import PGEMM
 from repro.core.precision import BY_NAME, Precision
 from repro.core.tiling import MXU_DIM
+from repro.obs.metrics import NULL_METRIC
 
 MPRA_DIM = 8  # each lane carries one 8x8 MPRA (paper §4.1)
 
@@ -166,12 +167,31 @@ class ScheduleCache:
         self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
+        #: per-key [hits, misses] — which shape paid the exploration and
+        #: which ones ride the memo (``key_stats``/``reset`` let
+        #: serve_bench gate 100% post-warmup hits by construction)
+        self._key_stats: dict[GemmKey, list[int]] = {}
         #: bounded tail of (key, CachedChoice) kernel applications — enough
         #: for tests/benchmarks to assert the choice landed without growing
         #: forever on a long-running serving hot path.
         self.applied: "collections.deque[tuple[GemmKey, CachedChoice]]" = (
             collections.deque(maxlen=1024))
         self.applied_total = 0
+        # mirrored registry counters (no-ops until bind_metrics)
+        self._m_hits = self._m_misses = self._m_applied = NULL_METRIC
+
+    def bind_metrics(self, registry) -> None:
+        """Mirror hit/miss/applied events into a
+        :class:`repro.obs.metrics.MetricsRegistry` (``schedule.*``
+        counters).  Counts events AFTER binding — the cache's own
+        ``hits``/``misses`` ints remain the lifetime aggregate (a shared
+        per-config cache may be re-bound by each engine that adopts it)."""
+        self._m_hits = registry.counter(
+            "schedule.hits", "ScheduleCache memo hits since bind")
+        self._m_misses = registry.counter(
+            "schedule.misses", "ScheduleCache explorations since bind")
+        self._m_applied = registry.counter(
+            "schedule.applied", "kernel applications since bind")
 
     @staticmethod
     def key_of(M: int, N: int, K: int,
@@ -201,6 +221,8 @@ class ScheduleCache:
             hit = self._entries.get(key)
             if hit is not None:
                 self.hits += 1
+                self._key_stats.setdefault(key, [0, 0])[0] += 1
+                self._m_hits.inc()
                 return hit
         # explore outside the lock (it is pure and may be slow); a racing
         # duplicate exploration just recomputes the same deterministic entry.
@@ -214,6 +236,8 @@ class ScheduleCache:
                              traffic_bytes=choice.best.traffic_bytes)
         with self._lock:
             self.misses += 1
+            self._key_stats.setdefault(key, [0, 0])[1] += 1
+            self._m_misses.inc()
             self._entries.setdefault(key, entry)
             return self._entries[key]
 
@@ -242,6 +266,7 @@ class ScheduleCache:
         with self._lock:
             self.applied.append((self.key_of(M, N, K, precision), choice))
             self.applied_total += 1
+            self._m_applied.inc()
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -251,6 +276,24 @@ class ScheduleCache:
             return {"hits": self.hits, "misses": self.misses,
                     "entries": len(self._entries),
                     "applied": self.applied_total}
+
+    def key_stats(self) -> dict[GemmKey, dict[str, int]]:
+        """Per-shape hit/miss breakdown: which (M, N, K, precision) paid
+        an exploration and which are pure memo traffic."""
+        with self._lock:
+            return {k: {"hits": v[0], "misses": v[1]}
+                    for k, v in self._key_stats.items()}
+
+    def reset(self) -> None:
+        """Zero the hit/miss counters (aggregate and per-key) WITHOUT
+        dropping entries or the applied log.  Call after warmup so a
+        post-warmup 100%-hit gate holds by construction: every shape the
+        warmed run resolves is already memoized, so any post-reset miss
+        is a genuinely new shape."""
+        with self._lock:
+            self.hits = 0
+            self.misses = 0
+            self._key_stats.clear()
 
     def summary(self) -> list[tuple[GemmKey, CachedChoice]]:
         """Entries sorted by modeled cycles, heaviest first."""

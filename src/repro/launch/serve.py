@@ -38,6 +38,7 @@ import numpy as np
 from repro import configs as CONFIGS
 from repro.checkpoint.manager import CheckpointManager
 from repro.models import network as N
+from repro.obs import Telemetry, render_report
 from repro.quant.policy import quantize_params
 from repro.serving.engine import (ContinuousEngine, Request, Result,
                                   WaveEngine)
@@ -100,6 +101,17 @@ def main(argv=None):
                          "paper-§5 schedule cache picks dataflow/fold per "
                          "shape); xla = native XLA dot fusions (default)")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome trace-event JSON of the run "
+                         "(open in Perfetto / chrome://tracing); enables "
+                         "the lifecycle tracer")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write a metrics-registry snapshot (.prom suffix "
+                         "= Prometheus text exposition, else JSON)")
+    ap.add_argument("--profile", action="store_true",
+                    help="wrap the four hot dispatches with synced timing "
+                         "and modeled-cost cross-checks (see "
+                         "scripts/trace_report.py); implies tracing")
     args = ap.parse_args(argv)
 
     cfg = CONFIGS.get(args.arch)
@@ -159,6 +171,18 @@ def main(argv=None):
         if args.temperature > 0:
             raise SystemExit("--spec is greedy-only: drop --temperature")
 
+    want_telemetry = bool(args.trace_out or args.metrics_out
+                          or args.profile)
+    if want_telemetry and args.engine == "wave":
+        raise SystemExit("--trace-out/--metrics-out/--profile need the "
+                         "continuous engine (the wave baseline is "
+                         "uninstrumented)")
+    if args.profile and args.engine == "dense":
+        raise SystemExit("--profile wraps the paged dispatches: use the "
+                         "continuous (paged) engine")
+    obs = (Telemetry.on(profile=args.profile) if want_telemetry
+           else None)
+
     t0 = time.perf_counter()
     if args.engine == "wave":
         if spec is not None:
@@ -173,7 +197,8 @@ def main(argv=None):
                                max_len=args.max_len,
                                paged=args.engine != "dense",
                                policy=args.policy,
-                               spec=spec, spec_k=args.spec_k)
+                               spec=spec, spec_k=args.spec_k,
+                               telemetry=obs)
         eng.start()
         for r in reqs:
             if args.arrival_ms > 0:
@@ -213,6 +238,17 @@ def main(argv=None):
     for r in sorted(results, key=lambda r: r.rid)[:4]:
         print(f"  rid={r.rid} new_tokens={len(r.tokens)} "
               f"prefill={r.prefill_s*1e3:.0f}ms decode={r.decode_s*1e3:.0f}ms")
+
+    if args.engine != "wave" and want_telemetry:
+        print(render_report(eng.metrics, wall_s=dt))
+        if args.trace_out:
+            eng.obs.export_trace(args.trace_out)
+            print(f"[serve] trace -> {args.trace_out} "
+                  f"({len(eng.obs.tracer)} events, "
+                  f"{eng.obs.tracer.dropped} dropped)")
+        if args.metrics_out:
+            eng.obs.export_metrics(args.metrics_out)
+            print(f"[serve] metrics -> {args.metrics_out}")
 
 
 if __name__ == "__main__":

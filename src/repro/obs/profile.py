@@ -1,0 +1,280 @@
+"""Opt-in dispatch profiling with modeled-vs-measured cross-check.
+
+``DispatchProfiler.attach(engine)`` instruments the four pre-resolved
+hot dispatches of the paged serving engine — ``decode_step``,
+``prefill_paged_chunk``, ``verify_paged_chunk``, ``head_apply`` — with
+``jax.block_until_ready`` wall-clock timing, and attaches the paper-§5
+model's view of each dispatch to every span:
+
+  * ``modeled_cycles`` / ``modeled_traffic``: the ScheduleCache cycle
+    and HBM-traffic estimates summed over the GEMM shapes the dispatch
+    executes (interior projections × ``cfg.n_layers``, the LM head
+    once, the paged-gather p-GEMMs × layers on the decode step) — every
+    shape is pre-resolved by the engine, so attribution is pure cache
+    hits;
+  * ``flops`` / ``bytes``: the exact jaxpr-walk cost of the whole
+    dispatch from ``launch.jaxpr_cost.step_cost`` (via the gta-lint
+    Pass-2 dispatch builders, traced abstractly at engine geometry).
+
+``scripts/trace_report.py`` turns the spans into the modeled-vs-
+measured drift table per GEMM shape.
+
+Two kinds of span:
+
+  * ``calibration`` — ``attach`` runs each dispatch standalone on the
+    live engine arrays (zero tokens, outputs discarded; jit is
+    functional so engine state is untouched): one compile call, then
+    ``reps`` timed repetitions.  This is what guarantees drift coverage
+    of ALL four dispatches — ``head_apply`` is fused into the decode
+    program at serve time, and a spec-mode run executes no vanilla
+    decode step.
+  * ``serve`` — the engine's live jitted programs are wrapped with
+    :func:`profiled_dispatch`, so real serving steps produce spans too
+    (forcing a sync per dispatch: that is the cost of opting in, which
+    is why the serve_bench overhead gate measures tracing+metrics
+    WITHOUT the profiler).
+
+All instrumentation executes OUTSIDE the jit boundary: the wrapper
+times around the traced call, so the jaxpr of a profiled dispatch is
+identical to the bare one — the gta-lint jaxpr pass re-screens the
+wrapped form (``include_profiled``) to enforce exactly that.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any
+
+#: the four dispatch names the drift table must cover (gta-lint Pass 2
+#: traces the same names)
+DISPATCH_NAMES = ("decode_step", "prefill_paged_chunk",
+                  "verify_paged_chunk", "head_apply")
+
+
+def profiled_dispatch(fn, record=None):
+    """Wrap a jitted dispatch with host-side wall-clock timing.
+
+    The timing calls run at Python level around the dispatch — under a
+    ``jax.make_jaxpr`` trace they execute once at trace time and leave
+    the jaxpr untouched (``jax.block_until_ready`` is a no-op on
+    tracers), which is the property the gta-lint re-screen pins down.
+    ``record(t0, dur_s)`` is called after the output is ready.
+    """
+    import jax
+
+    def wrapped(*args, **kwargs):
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+        if record is not None:
+            record(t0, time.perf_counter() - t0)
+        return out
+    return wrapped
+
+
+def dispatch_gemm_shapes(cfg, *, slots: int, prefill_chunk: int,
+                         spec_k: int, block_size: int
+                         ) -> dict[str, list[tuple[int, int, int, int]]]:
+    """Per-dispatch GEMM attribution: name -> [(M, N, K, count)].
+
+    Mirrors ``analysis.schedule_check.engine_gemm_shapes`` (the shapes
+    the engine pre-resolves) but keeps per-dispatch multiplicity:
+    block-interior projections run once per layer, the LM head once per
+    dispatch, and the paged-gather p-GEMMs ride on the decode step
+    (where the engine marks them applied).  Hybrid (SSM) configs skip
+    ``verify_paged_chunk`` — spec is attention-only.
+    """
+    from repro.kernels.paged_attention import gather_gemm_shapes
+
+    d = cfg.d_model
+    nl = cfg.n_layers
+
+    def family(m: int, head_rows: int) -> list[tuple[int, int, int, int]]:
+        shapes = [(m, cfg.n_heads * cfg.hd, d, nl),
+                  (m, cfg.n_kv_heads * cfg.hd, d, nl),
+                  (m, d, cfg.n_heads * cfg.hd, nl)]
+        if cfg.moe is not None:
+            shapes += [(m, cfg.moe.d_ff_expert, d, nl),
+                       (m, d, cfg.moe.d_ff_expert, nl)]
+        else:
+            shapes += [(m, cfg.d_ff, d, nl), (m, d, cfg.d_ff, nl)]
+        shapes.append((head_rows, cfg.vocab, d, 1))
+        return [(M, Nn, K, c) for M, Nn, K, c in shapes
+                if M > 0 and Nn > 0 and K > 0]
+
+    out = {"decode_step": family(slots, slots)
+           + [(M, Nn, K, nl)
+              for M, Nn, K in gather_gemm_shapes(cfg, block_size)],
+           "prefill_paged_chunk": family(slots * prefill_chunk, slots),
+           "head_apply": [(slots, cfg.vocab, d, 1)]}
+    if not cfg.has_recurrent_state:
+        L = spec_k + 1
+        out["verify_paged_chunk"] = family(slots * L, slots * L)
+    return out
+
+
+class DispatchProfiler:
+    """Measured-vs-modeled profiler for the engine's hot dispatches.
+
+    Construct one, pass it to the engine via
+    ``Telemetry(profiler=DispatchProfiler())`` — the engine calls
+    :meth:`attach` at the end of its constructor.  ``spans`` then
+    accumulates dicts ``{name, kind, ts, dur_s, step, ...model args}``;
+    every span is also emitted as a ``dispatch`` trace event and an
+    observation in the ``profile.<name>_us`` histogram.
+    """
+
+    def __init__(self, reps: int = 3, calibrate: bool = True):
+        self.reps = reps
+        self.calibrate = calibrate
+        self.spans: list[dict[str, Any]] = []
+        self.model: dict[str, dict[str, Any]] = {}
+        self._engine = None
+
+    # -- model attribution ----------------------------------------------------
+
+    def _build_model(self, eng) -> None:
+        """ScheduleCache cycles/traffic + jaxpr flops/bytes per dispatch
+        at the live engine's geometry (pure cache hits: the engine
+        pre-resolved every shape at construction)."""
+        from repro.analysis.jaxpr_lint import hot_dispatches
+        from repro.launch.jaxpr_cost import step_cost
+
+        cfg = eng.cfg
+        shapes = dispatch_gemm_shapes(
+            cfg, slots=eng.slots, prefill_chunk=eng.prefill_chunk,
+            spec_k=eng.spec_k, block_size=eng.pool.block_size)
+        for name, lst in shapes.items():
+            cyc = traffic = 0.0
+            rows = []
+            for M, Nn, K, count in lst:
+                ch = eng.schedule.resolve(M, Nn, K, eng._prec)
+                cyc += count * ch.cycles
+                traffic += count * ch.traffic_bytes
+                rows.append([M, Nn, K, count, ch.cycles])
+            self.model[name] = {"modeled_cycles": cyc,
+                                "modeled_traffic": traffic,
+                                "shape_cycles": rows}
+        for name, fn, args in hot_dispatches(
+                cfg, slots=eng.slots, max_len=eng.max_len,
+                block_size=eng.pool.block_size,
+                prefill_chunk=eng.prefill_chunk, spec_k=eng.spec_k):
+            if name in self.model:
+                self.model[name].update(step_cost(fn, *args))
+
+    # -- recording ------------------------------------------------------------
+
+    def _record(self, name: str, kind: str, t0: float, dur_s: float
+                ) -> None:
+        eng = self._engine
+        step = eng.steps + eng.chunk_steps if eng is not None else -1
+        span = {"name": name, "kind": kind, "ts": t0, "dur_s": dur_s,
+                "step": step}
+        span.update(self.model.get(name, {}))
+        self.spans.append(span)
+        if eng is not None:
+            eng.metrics.histogram(
+                f"profile.{name}_us",
+                help=f"wall time of the {name} dispatch (us)",
+                buckets=(50, 100, 250, 500, 1000, 2500, 5000, 10000,
+                         25000, 50000, 100000)).observe(dur_s * 1e6)
+            tr = eng.obs.tracer
+            if tr.enabled:
+                tr.event("dispatch", step=step, ts=t0, dur=dur_s,
+                         dispatch=name, kind=kind,
+                         **self.model.get(name, {}))
+
+    def _recorder(self, name: str, kind: str):
+        return lambda t0, dur: self._record(name, kind, t0, dur)
+
+    # -- engine hookup --------------------------------------------------------
+
+    def attach(self, eng) -> None:
+        """Wrap the live engine's hot dispatches and (optionally) run
+        the calibration pass.  Paged engines only — the four profiled
+        dispatches are the paged serving programs."""
+        if not eng.paged:
+            raise ValueError(
+                "DispatchProfiler profiles the paged serving dispatches "
+                "(decode_step / prefill_paged_chunk / verify_paged_chunk "
+                "/ head_apply); construct the engine with paged=True")
+        self._engine = eng
+        self._build_model(eng)
+        # _engine_fns dicts are shared per config across engine
+        # instances — copy before wrapping, never mutate the cache entry
+        eng._fns = dict(eng._fns)
+        wrap = [("decode_sample_paged", "decode_step"),
+                ("prefill_chunk", "prefill_paged_chunk"),
+                ("verify_chunk", "verify_paged_chunk")]
+        for key, name in wrap:
+            if name in self.model:
+                eng._fns[key] = profiled_dispatch(
+                    eng._fns[key], self._recorder(name, "serve"))
+        if self.calibrate:
+            self.run_calibration(eng)
+
+    def run_calibration(self, eng) -> None:
+        """Time each hot dispatch standalone on the live engine arrays.
+
+        Inputs are the engine's real params/caches/tables with zero
+        token ids and zero lengths (every row masked), so the run is
+        shape-exact; outputs are discarded and the jitted programs are
+        pure, so engine state is untouched.  One warm-up call compiles,
+        then ``reps`` timed calls produce ``calibration`` spans — this
+        is what puts ``head_apply`` (fused into the serve-time decode
+        program) and ``verify_paged_chunk`` (absent from non-spec runs)
+        into the drift table.
+        """
+        import jax
+        import jax.numpy as jnp
+
+        from repro.models import network as N
+        from repro.models.layers import head_apply
+
+        cfg = eng.cfg
+        i32 = jnp.int32
+        slots = eng.slots
+        zeros_tok = jnp.zeros((slots, 1), i32)
+        zeros_vec = jnp.zeros((slots,), i32)
+        temps = jnp.zeros((slots,), jnp.float32)
+        L = eng.prefill_chunk
+        K1 = eng.spec_k + 1
+        head = (eng.params["embed"]["table"] if cfg.tie_embeddings
+                else eng.params["lm_head"])
+        backend = N.gemm_backend(cfg)
+        head_jit = jax.jit(lambda w, x: head_apply(
+            w, x, cfg.final_logit_softcap, backend=backend))
+
+        # raw (unwrapped) fns: calibration does its own timing
+        fns = _engine_fns_raw(eng)
+        calls = {
+            "decode_step": lambda: fns["decode_sample_paged"](
+                eng.params, zeros_tok, eng.caches,
+                jnp.asarray(eng._pos), eng._bt, zeros_vec, eng.key,
+                temps),
+            "prefill_paged_chunk": lambda: fns["prefill_chunk"](
+                eng.params, jnp.zeros((slots, L), i32), eng.caches,
+                eng._slot_ids, eng._bt, zeros_vec, zeros_vec, eng.key,
+                temps),
+            "head_apply": lambda: head_jit(
+                head, jnp.zeros((slots, 1, cfg.d_model),
+                                jnp.dtype(cfg.compute_dtype))),
+        }
+        if "verify_paged_chunk" in self.model:
+            calls["verify_paged_chunk"] = lambda: fns["verify_chunk"](
+                eng.params, jnp.zeros((slots, K1), i32), eng.caches,
+                eng._slot_ids, eng._bt, zeros_vec)
+        for name, call in calls.items():
+            jax.block_until_ready(call())          # compile
+            for _ in range(self.reps):
+                t0 = time.perf_counter()
+                jax.block_until_ready(call())
+                self._record(name, "calibration", t0,
+                             time.perf_counter() - t0)
+
+
+def _engine_fns_raw(eng) -> dict:
+    """The engine's jitted programs with any profiling wrappers peeled
+    off (fresh lookup from the per-config cache)."""
+    from repro.serving.engine import _engine_fns
+    return _engine_fns(eng.cfg, eng.max_len)

@@ -131,12 +131,17 @@ from repro.core.scheduler import ScheduleCache
 from repro.kernels import paged_attention as PA
 from repro.models import network as N
 from repro.models.config import ModelConfig
+from repro.obs import Telemetry
 from repro.serving.kv_pool import KVPool, blocks_for
 from repro.serving.policy import (PendingView, SchedulerPolicy, SlotView,
                                   make_policy)
 from repro.serving.spec import DraftProvider, make_provider
 
 PyTree = Any
+
+#: histogram bucket bounds for wall-clock request latencies (seconds)
+_LATENCY_BUCKETS = (0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25,
+                    0.5, 1.0, 2.5, 5.0, 10.0, 30.0, 60.0)
 
 
 # ---------------------------------------------------------------------------
@@ -324,9 +329,17 @@ class ContinuousEngine:
                  policy: str | SchedulerPolicy = "fifo",
                  spec: str | DraftProvider | None = None,
                  spec_k: int = 4,
-                 audit: bool = False):
+                 audit: bool = False,
+                 telemetry: Telemetry | None = None):
         if cfg.is_encoder_only:
             raise ValueError(f"{cfg.name} is encoder-only: no decode serving")
+        # telemetry bundle: the metrics registry is ALWAYS real — its
+        # counters back engine.steps & co. (the old attributes live on as
+        # property shims below); the tracer ring and the dispatch
+        # profiler are the opt-in parts (Telemetry.on()).
+        self.obs = telemetry if telemetry is not None else Telemetry.off()
+        self.metrics = self.obs.metrics
+        self._tr = self.obs.tracer
         self.spec: DraftProvider | None = None
         if spec is not None:
             if not paged:
@@ -346,12 +359,18 @@ class ContinuousEngine:
                 raise ValueError(f"spec_k must be >= 1, got {spec_k}")
             self.spec = make_provider(spec)
         self.spec_k = spec_k
-        #: speculative telemetry: tokens emitted by verify steps, draft
-        #: tokens proposed, draft tokens accepted (emitted - verify steps)
-        self.spec_emitted = 0
-        self.spec_drafted = 0
-        self.spec_accepted = 0
-        self.spec_slot_verifies = 0   # (slot, verify-step) events
+        # speculative telemetry (spec_emitted & co. are property shims):
+        # tokens emitted by verify steps, draft tokens proposed, draft
+        # tokens accepted (emitted - verify steps), (slot, verify) events
+        m = self.metrics
+        self._c_spec_emitted = m.counter(
+            "spec.tokens_emitted", "tokens emitted by verify steps")
+        self._c_spec_drafted = m.counter(
+            "spec.drafted", "draft tokens proposed")
+        self._c_spec_accepted = m.counter(
+            "spec.accepted", "draft tokens accepted")
+        self._c_spec_verifies = m.counter(
+            "spec.slot_verifies", "(slot, verify-step) events")
         self.cfg = cfg
         self.policy = (make_policy(policy) if isinstance(policy, str)
                        else policy)
@@ -383,6 +402,7 @@ class ContinuousEngine:
             self.schedule = backend.schedule
         else:
             self.schedule = schedule_cache or ScheduleCache()
+        self.schedule.bind_metrics(m)
         self.paged = paged
         self._prec = precision_for_dtype(cfg.compute_dtype,
                                          default="FP32").name
@@ -424,7 +444,7 @@ class ContinuousEngine:
                               and not cfg.has_recurrent_state)
             self.pool: KVPool | None = KVPool(
                 kv_blocks, block_size, slots=slots, max_len=max_len,
-                share_prefixes=share_prefixes)
+                share_prefixes=share_prefixes, metrics=m)
             self.caches = N.expand_cache_pos(
                 N.init_paged_caches(cfg, slots, kv_blocks, block_size),
                 slots)
@@ -443,28 +463,60 @@ class ContinuousEngine:
         self._stop = False
         self._thread: threading.Thread | None = None
         self._loop_error: BaseException | None = None
-        self.steps = 0          # decode steps executed (benchmark metric)
-        self.prefills = 0
-        self.chunk_steps = 0    # prefill-chunk batches executed (paged)
-        self.preemptions = 0    # victim evictions (slo_preempt policy)
-        #: per-step pool-utilization samples (used/usable blocks) — the
-        #: block-aware admission win serve_bench gates on
-        self._util_sum = 0.0
-        self._util_steps = 0
+        # step/lifecycle telemetry — registry-backed; the old attributes
+        # (engine.steps, .prefills, .chunk_steps, .preemptions,
+        # .decode_times, .chunk_durations) remain readable as property
+        # shims over these metrics
+        self._c_steps = m.counter(
+            "engine.steps", "decode/verify dispatches executed")
+        self._c_prefills = m.counter(
+            "engine.prefills", "prompts fully prefilled")
+        self._c_chunk_steps = m.counter(
+            "engine.chunk_steps", "prefill-chunk batches executed")
+        self._c_preemptions = m.counter(
+            "engine.preemptions", "victim evictions (slo_preempt)")
+        self._c_admissions = m.counter(
+            "engine.admissions", "slot admissions (fresh + resumed)")
+        self._c_resumes = m.counter(
+            "engine.resumes", "re-admissions of preempted requests")
+        self._c_tokens = m.counter(
+            "engine.tokens_emitted", "tokens delivered in Results")
+        self._c_finished = m.counter(
+            "engine.requests_finished", "Results emitted")
+        # per-step pool-utilization samples (used/usable blocks) — the
+        # block-aware admission win serve_bench gates on
+        self._c_util_sum = m.counter(
+            "engine.pool_util_sum", "sum of per-step pool-util samples")
+        self._c_util_samples = m.counter(
+            "engine.pool_util_samples", "pool-util samples taken")
+        self._g_pool_util = m.gauge(
+            "engine.pool_util", "pool utilization at the last step")
+        self._g_occupancy = m.gauge(
+            "engine.batch_occupancy", "active slots at the last step")
+        self._h_ttft_steps = m.histogram(
+            "engine.ttft_steps",
+            "engine dispatches before each request's first token")
+        self._h_ttft_s = m.histogram(
+            "engine.ttft_s", "submit -> first token (s)",
+            buckets=_LATENCY_BUCKETS)
+        self._h_latency = m.histogram(
+            "engine.request_latency_s", "submit -> finish (s)",
+            buckets=_LATENCY_BUCKETS)
         #: deterministic interleave bound: max chunk batches run between
         #: two decode steps while some slot was decoding.  The chunked-
         #: prefill construction guarantees <= 1 (one chunk batch per
         #: engine step, decode follows); serve_bench gates on it.
         self.max_chunk_gap = 0
         self._chunks_since_decode = 0
-        #: perf_counter stamps of decode-step completions — serve_bench
-        #: derives the max decode gap from these to verify chunked prefill
-        #: bounds the admission stall; chunk_durations are the wall times
-        #: of the chunk batches (the bound itself).
-        self.decode_times: "collections.deque[float]" = (
-            collections.deque(maxlen=65536))
-        self.chunk_durations: "collections.deque[float]" = (
-            collections.deque(maxlen=65536))
+        # perf_counter stamps of decode-step completions — serve_bench
+        # derives the max decode gap from these to verify chunked prefill
+        # bounds the admission stall; chunk durations are the wall times
+        # of the chunk batches (the bound itself).
+        self._s_decode = m.series(
+            "engine.decode_step_stamps",
+            "perf_counter stamps of decode-step completions")
+        self._s_chunk = m.series(
+            "engine.chunk_duration_s", "prefill-chunk batch wall times")
 
         # Pre-resolve the steady-state serving shapes (decode step with
         # M = active slots, the prefill-chunk batch, and the paged-decode
@@ -483,6 +535,56 @@ class ContinuousEngine:
             L = self.spec_k + 1
             self._register_gemms(self.slots * L, self.slots * L)
             self.spec.bind(self)
+        if self.obs.profiler is not None:
+            # wraps the hot dispatches with block_until_ready timing and
+            # runs the calibration pass (all four drift-table dispatches)
+            self.obs.profiler.attach(self)
+
+    # -- property shims over the metrics registry -----------------------------
+    # One-PR deprecation surface: these keep the pre-registry attribute
+    # API alive (tests, serve_bench, smoke asserts) while the registry
+    # is the single backing store.  Read the ``engine.*``/``spec.*``
+    # metrics directly in new code.
+
+    @property
+    def steps(self) -> int:
+        return int(self._c_steps.value)
+
+    @property
+    def prefills(self) -> int:
+        return int(self._c_prefills.value)
+
+    @property
+    def chunk_steps(self) -> int:
+        return int(self._c_chunk_steps.value)
+
+    @property
+    def preemptions(self) -> int:
+        return int(self._c_preemptions.value)
+
+    @property
+    def spec_emitted(self) -> int:
+        return int(self._c_spec_emitted.value)
+
+    @property
+    def spec_drafted(self) -> int:
+        return int(self._c_spec_drafted.value)
+
+    @property
+    def spec_accepted(self) -> int:
+        return int(self._c_spec_accepted.value)
+
+    @property
+    def spec_slot_verifies(self) -> int:
+        return int(self._c_spec_verifies.value)
+
+    @property
+    def decode_times(self) -> "collections.deque[float]":
+        return self._s_decode.values
+
+    @property
+    def chunk_durations(self) -> "collections.deque[float]":
+        return self._s_chunk.values
 
     # -- async request/result API -------------------------------------------
 
@@ -505,6 +607,11 @@ class ContinuousEngine:
             self._pending.append(_Pending(req=req,
                                           t_submit=time.perf_counter()))
             self._cv.notify()
+        if self._tr.enabled:
+            self._tr.event("submit", rid=req.rid,
+                           step=self.steps + self.chunk_steps,
+                           prompt_len=len(req.prompt),
+                           max_new=req.max_new_tokens)
 
     def get_result(self, timeout: float | None = None) -> Result:
         """Blocks until the next finished request (completion order).
@@ -621,7 +728,8 @@ class ContinuousEngine:
     def avg_pool_util(self) -> float:
         """Mean fraction of usable pool blocks in use, one sample per
         engine step (0.0 on the dense path / before the first step)."""
-        return self._util_sum / max(self._util_steps, 1)
+        return (self._c_util_sum.value
+                / max(self._c_util_samples.value, 1))
 
     # -- memory accounting ----------------------------------------------------
 
@@ -673,7 +781,8 @@ class ContinuousEngine:
             jnp.asarray([plen - 1], jnp.int32), self.key,
             jnp.asarray(req.temperature, jnp.float32))
         self._pos[slot] = pos0
-        self.prefills += 1
+        self._c_prefills.inc()
+        self._c_admissions.inc()
 
         tok0 = int(np.asarray(tok))
         t1 = time.perf_counter()
@@ -681,6 +790,11 @@ class ContinuousEngine:
                    t_submit=ent.t_submit, t_admit=t0, t_prefill_done=t1,
                    t_first=t1, ttft_steps=self.steps + self.chunk_steps)
         self._slots[slot] = st
+        if self._tr.enabled:
+            self._tr.event("admit", rid=req.rid, slot=slot,
+                           step=st.ttft_steps, ts=t0, prompt_len=plen)
+            self._tr.event("first_token", rid=req.rid, slot=slot,
+                           step=st.ttft_steps, ts=t1)
         # pos0 == max_len means zero decode headroom: the next write would
         # clamp onto the last real token, so finish with the prefill token.
         if (st.cur_tok == req.eos
@@ -728,6 +842,17 @@ class ContinuousEngine:
             resume_len=len(ent.resume_tokens),
             preemptions=ent.preemptions, ttft_steps=ent.ttft_steps,
             prefill_s_prev=ent.prefill_s)
+        self._c_admissions.inc()
+        resumed = bool(ent.resume_tokens)
+        if resumed:
+            self._c_resumes.inc()
+        if self._tr.enabled:
+            self._tr.event("resume" if resumed else "admit",
+                           rid=req.rid, slot=slot,
+                           step=self.steps + self.chunk_steps, ts=t0,
+                           prompt_len=len(ent.full_prompt),
+                           shared_tokens=plan.shared_tokens,
+                           chunks=len(chunks))
         return True
 
     def _admit(self) -> None:
@@ -799,7 +924,11 @@ class ContinuousEngine:
         self.pool.release_slot(slot, prompt=full_seq)
         self._bt = jnp.asarray(self.pool.tables)
         self._slots[slot] = None
-        self.preemptions += 1
+        self._c_preemptions.inc()
+        if self._tr.enabled:
+            self._tr.event("preempt", rid=st.req.rid, slot=slot,
+                           step=self.steps + self.chunk_steps,
+                           produced=len(st.produced))
         ent = _Pending(
             req=st.req, t_submit=st.t_submit,
             full_prompt=np.asarray(full_seq, np.int32),
@@ -824,6 +953,16 @@ class ContinuousEngine:
             ttft_s=st.t_first - st.t_submit,
             ttft_steps=max(st.ttft_steps, 0),
             preemptions=st.preemptions))
+        self._c_finished.inc()
+        self._c_tokens.inc(len(st.produced))
+        self._h_ttft_steps.observe(max(st.ttft_steps, 0))
+        self._h_ttft_s.observe(st.t_first - st.t_submit)
+        self._h_latency.observe(now - st.t_submit)
+        if self._tr.enabled:
+            self._tr.event("finish", rid=st.req.rid, slot=slot,
+                           step=self.steps + self.chunk_steps, ts=now,
+                           tokens=len(st.produced),
+                           preemptions=st.preemptions)
         self._slots[slot] = None
         if self.paged:
             # release refs; full prompt blocks (of the ADMISSION prompt —
@@ -882,26 +1021,37 @@ class ContinuousEngine:
             # the target's (shared prefixes included — both models wrote
             # the cached blocks when they were first prefilled).
             self.spec.on_prefill_chunk(self, toks, lens, last_idx)
-        self.chunk_steps += 1
+        self._c_chunk_steps.inc()
         if any(s is not None and s.phase == "decode" for s in self._slots):
             self._chunks_since_decode += 1
             self.max_chunk_gap = max(self.max_chunk_gap,
                                      self._chunks_since_decode)
         tok_np = np.asarray(tok)
         now = time.perf_counter()
-        self.chunk_durations.append(now - t0)
+        self._s_chunk.append(now - t0)
+        if self._tr.enabled:
+            step = self.steps + self.chunk_steps
+            self._tr.event("chunk_batch", step=step, ts=t0, dur=now - t0,
+                           rows=len(pre))
+            for i in pre:
+                self._tr.event("prefill_chunk", rid=self._slots[i].req.rid,
+                               slot=i, step=step, ts=t0, dur=now - t0,
+                               tokens=int(lens[i]))
         for i in pre:
             st = self._slots[i]
             self._pos[i] += int(lens[i])
             if st.chunks:
                 continue                       # more chunks next step
-            self.prefills += 1
+            self._c_prefills.inc()
             st.phase = "decode"
             st.t_prefill_done = now
             if st.t_first == 0.0:              # resumed slots keep theirs
                 st.t_first = now
             if st.ttft_steps < 0:
                 st.ttft_steps = self.steps + self.chunk_steps
+                if self._tr.enabled:
+                    self._tr.event("first_token", rid=st.req.rid, slot=i,
+                                   step=st.ttft_steps, ts=now)
             # prompt KV is now fully resident: content-address its full
             # blocks so even a CONCURRENT identical prompt shares them
             # (release re-registers, which is a no-op).
@@ -924,13 +1074,22 @@ class ContinuousEngine:
         carrying the serialized pool state plus the slot states below —
         the same reproducer format ``analysis.pool_model``
         counterexamples use, so runtime failures replay offline."""
+        active = sum(s is not None for s in self._slots)
         if self.paged:
-            self._util_sum += self.pool.used_blocks / (self.pool.num_blocks
-                                                       - 1)
-            self._util_steps += 1
+            util = self.pool.used_blocks / (self.pool.num_blocks - 1)
+            self._c_util_sum.inc(util)
+            self._c_util_samples.inc()
+            self._g_pool_util.set(util)
             if self._audit:
                 self.pool.check(pending_op=self._audit_context())
-        return sum(s is not None for s in self._slots)
+        self._g_occupancy.set(active)
+        if self._tr.enabled:
+            step = self.steps + self.chunk_steps
+            if self.paged:
+                self._tr.counter("pool_util", util, step=step)
+            self._tr.counter("batch_occupancy", active, step=step)
+            self._tr.counter("pending_queue", len(self._pending), step=step)
+        return active
 
     def _audit_context(self) -> dict:
         """Engine-side half of a :class:`PoolAuditError` reproducer:
@@ -973,6 +1132,7 @@ class ContinuousEngine:
 
     def _decode_step(self, active: list[int]) -> None:
         """ONE batched single-token decode dispatch over ``active``."""
+        t0 = time.perf_counter()
         self._register_gemms(self.slots, self.slots)
         toks = np.zeros((self.slots, 1), np.int32)
         temps = np.zeros(self.slots, np.float32)
@@ -1004,10 +1164,14 @@ class ContinuousEngine:
             # every slot's cache pos advanced by 1 (inactive slots write
             # masked garbage in place); mirror it so the next step agrees.
             self._pos += 1
-        self.steps += 1
-        self.decode_times.append(time.perf_counter())
+        self._c_steps.inc()
+        self._s_decode.append(time.perf_counter())
 
         tok_np = np.asarray(tok)
+        if self._tr.enabled:
+            self._tr.event("decode", step=self.steps + self.chunk_steps,
+                           ts=t0, dur=time.perf_counter() - t0,
+                           rows=len(active))
         for i in active:
             st = self._slots[i]
             st.produced.append(int(tok_np[i]))
@@ -1081,14 +1245,19 @@ class ContinuousEngine:
             toks[i, 1:1 + len(d)] = d
             lens[i] = len(d) + 1
         self._register_gemms(self.slots * L, self.slots * L)
+        t0 = time.perf_counter()
         tok, self.caches = self._fns["verify_chunk"](
             self.params, jnp.asarray(toks), self.caches, self._slot_ids,
             self._bt, jnp.asarray(lens))
-        self.steps += 1
-        self.decode_times.append(time.perf_counter())
+        self._c_steps.inc()
+        self._s_decode.append(time.perf_counter())
         self._chunks_since_decode = 0
 
         tok_np = np.asarray(tok)
+        if self._tr.enabled:
+            self._tr.event("verify", step=self.steps + self.chunk_steps,
+                           ts=t0, dur=time.perf_counter() - t0,
+                           rows=len(run))
         rejected = False
         for i in run:
             st = self._slots[i]
@@ -1112,10 +1281,10 @@ class ContinuousEngine:
             st.cur_tok = emit[-1]
             self._pos[i] += len(emit)
             rejected |= len(emit) < int(lens[i])
-            self.spec_emitted += len(emit)
-            self.spec_drafted += len(d)
-            self.spec_accepted += len(emit) - 1
-            self.spec_slot_verifies += 1
+            self._c_spec_emitted.inc(len(emit))
+            self._c_spec_drafted.inc(len(d))
+            self._c_spec_accepted.inc(len(emit) - 1)
+            self._c_spec_verifies.inc()
         # KV rollback: cursors back to the accepted lengths, rejected
         # tail blocks back to the pool (ref-respecting truncate).  Full
         # acceptance everywhere means the cursors already sit at the

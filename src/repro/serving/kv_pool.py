@@ -75,6 +75,8 @@ from collections.abc import Sequence
 
 import numpy as np
 
+from repro.obs.metrics import NULL_METRIC, MetricsRegistry
+
 #: the reserved null/trash block id (see module docstring)
 NULL_BLOCK = 0
 
@@ -153,8 +155,15 @@ class KVPool:
     them into the device cache tree.
     """
 
+    # registry mirrors (class-level no-op defaults: pools constructed
+    # outside a telemetry scope — and ``pool_model``'s ``__init__``-
+    # bypassing clones — record nowhere)
+    _m_shared = _m_cow = _m_evict = _m_backoff = NULL_METRIC
+    _m_peak = _m_used = NULL_METRIC
+
     def __init__(self, num_blocks: int, block_size: int, *, slots: int,
-                 max_len: int, share_prefixes: bool = True):
+                 max_len: int, share_prefixes: bool = True,
+                 metrics: "MetricsRegistry | None" = None):
         if num_blocks < 2:
             raise ValueError("need >= 2 blocks (block 0 is reserved)")
         if block_size < 1:
@@ -185,12 +194,33 @@ class KVPool:
         #: (src, dst) copies the engine must apply on-device (COW forks)
         self.pending_copies: list[tuple[int, int]] = []
 
-        # telemetry
+        # telemetry: the plain ints stay authoritative (tests and
+        # ``stats()`` read them; ``pool_model`` clones copy them); a
+        # bound MetricsRegistry receives mirrored ``kv_pool.*`` counts
         self.peak_used = 0
         self.shared_token_hits = 0
         self.cow_forks = 0
         self.evictions = 0
         self.backoffs = 0
+        if metrics is not None:
+            self.bind_metrics(metrics)
+
+    def bind_metrics(self, metrics: "MetricsRegistry") -> None:
+        """Mirror pool telemetry into ``kv_pool.*`` registry metrics
+        (counts events AFTER binding; the ints are the lifetime truth)."""
+        self._m_shared = metrics.counter(
+            "kv_pool.shared_token_hits",
+            "prompt tokens skip-prefilled via the prefix cache")
+        self._m_cow = metrics.counter(
+            "kv_pool.cow_forks", "copy-on-write block forks")
+        self._m_evict = metrics.counter(
+            "kv_pool.evictions", "cached prefix blocks evicted")
+        self._m_backoff = metrics.counter(
+            "kv_pool.backoffs", "reservations denied (pool exhausted)")
+        self._m_peak = metrics.gauge(
+            "kv_pool.peak_used_blocks", "high-watermark of used blocks")
+        self._m_used = metrics.gauge(
+            "kv_pool.used_blocks", "blocks currently in use")
 
     # -- accounting ----------------------------------------------------------
 
@@ -201,6 +231,8 @@ class KVPool:
 
     def _note_usage(self) -> None:
         self.peak_used = max(self.peak_used, self.used_blocks)
+        self._m_peak.set(self.peak_used)
+        self._m_used.set(self.used_blocks)
 
     # -- raw allocation ------------------------------------------------------
 
@@ -235,6 +267,7 @@ class KVPool:
                 del self._hash_of[bid]
                 self._release_one(bid)
                 self.evictions += 1
+                self._m_evict.inc()
                 if len(self._free) >= need:
                     return
 
@@ -245,6 +278,7 @@ class KVPool:
         self._evict_cached(n)
         if len(self._free) < n:
             self.backoffs += 1
+            self._m_backoff.inc()
             return None
         out = []
         for _ in range(n):
@@ -388,6 +422,7 @@ class KVPool:
         # count reuse only for admissions that actually land: a backoff
         # releases the matched refs and retries, and must not double-count
         self.shared_token_hits += len(shared) * self.block_size
+        self._m_shared.inc(len(shared) * self.block_size)
         self._note_usage()
         return AdmitPlan(slot=slot,
                          shared_tokens=len(shared) * self.block_size,
@@ -497,6 +532,7 @@ class KVPool:
             # the slot's ref on ``bid`` now backs the pending entry
             self.pending_copies.append((bid, fresh))
             self.cow_forks += 1
+            self._m_cow.inc()
             self.tables[slot, j] = fresh
 
     def take_copies(self) -> list[tuple[int, int]]:

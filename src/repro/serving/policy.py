@@ -37,6 +37,14 @@ mutation, so a policy can never corrupt slot/pool bookkeeping.  Custom
 policies subclass :class:`SchedulerPolicy` and register via
 :func:`register_policy`; ``ContinuousEngine(policy="name")`` resolves
 through :func:`make_policy`.
+
+Observability rides on the same split: because every policy DECISION is
+executed by the engine, policy outcomes are recorded engine-side in the
+metrics registry (``engine.admissions`` / ``engine.resumes`` /
+``engine.preemptions``, ``engine.pool_util*``) and as ``admit`` /
+``resume`` / ``preempt`` lifecycle trace events (``repro.obs``,
+docs/OBSERVABILITY.md) — policies themselves stay pure and need no
+instrumentation hooks.
 """
 
 from __future__ import annotations

@@ -51,6 +51,7 @@ import numpy as np
 
 from repro.models import network as N
 from repro.models.config import ModelConfig
+from repro.obs.metrics import Counter
 
 PyTree = object
 
@@ -155,14 +156,41 @@ class ModelDraft(DraftProvider):
         self.cfg = cfg
         self.params = params
         self.caches: PyTree = None
-        self.steps = 0          # draft decode dispatches (telemetry)
-        self.chunk_steps = 0    # draft prefill-chunk dispatches
+        # draft-dispatch telemetry: standalone counters until bind()
+        # re-homes them in the engine's MetricsRegistry (spec.draft_*);
+        # ``steps``/``chunk_steps`` stay readable as properties
+        self._c_steps = Counter("spec.draft_steps")
+        self._c_chunks = Counter("spec.draft_chunk_steps")
+
+    @property
+    def steps(self) -> int:
+        """Draft decode dispatches (registry-backed; kept as a property
+        shim for one PR — read ``spec.draft_steps`` going forward)."""
+        return int(self._c_steps.value)
+
+    @property
+    def chunk_steps(self) -> int:
+        """Draft prefill-chunk dispatches (registry-backed shim — read
+        ``spec.draft_chunk_steps`` going forward)."""
+        return int(self._c_chunks.value)
 
     def bind(self, engine) -> None:
         if self.cfg.vocab != engine.cfg.vocab:
             raise ValueError(
                 f"draft vocab {self.cfg.vocab} != target vocab "
                 f"{engine.cfg.vocab}: drafted ids would be meaningless")
+        # re-home the dispatch counters in the engine's registry,
+        # carrying any pre-bind counts (a provider re-bound to a fresh
+        # engine keeps its lifetime totals)
+        prev_s, prev_c = self._c_steps.value, self._c_chunks.value
+        self._c_steps = engine.metrics.counter(
+            "spec.draft_steps", "draft-model decode dispatches")
+        self._c_chunks = engine.metrics.counter(
+            "spec.draft_chunk_steps", "draft-model prefill-chunk batches")
+        if prev_s:
+            self._c_steps.inc(prev_s)
+        if prev_c:
+            self._c_chunks.inc(prev_c)
         # the engine's per-config jitted-program cache: a restarted engine
         # over the same draft config must not recompile the draft either
         from repro.serving.engine import _engine_fns
@@ -180,7 +208,7 @@ class ModelDraft(DraftProvider):
             self.params, jnp.asarray(toks), self.caches, engine._slot_ids,
             engine._bt, jnp.asarray(lens), jnp.asarray(last_idx),
             self._key, self._zero_temps)
-        self.chunk_steps += 1
+        self._c_chunks.inc()
 
     def on_reset_slot(self, engine, slot, pos_value) -> None:
         self.caches = self._fns["reset_slot"](
@@ -216,7 +244,7 @@ class ModelDraft(DraftProvider):
                 self.params, jnp.asarray(toks), self.caches,
                 jnp.asarray(pos), engine._bt, jnp.asarray(adv),
                 self._key, self._zero_temps)
-            self.steps += 1
+            self._c_steps.inc()
             pos += adv
             tok_np = np.asarray(tok)
             for i in slots:

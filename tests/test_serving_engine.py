@@ -106,6 +106,44 @@ def test_schedule_cache_hit_miss():
     assert c1.k_fold >= 1 and c1.array.pes > 0
 
 
+def test_schedule_cache_key_stats_and_reset():
+    """Per-key hit/miss breakdown, and reset() zeroing counts while
+    keeping the memoized entries + applied log (the serve_bench
+    post-warmup gates count only what runs after the reset)."""
+    sc = ScheduleCache()
+    c1 = sc.resolve(64, 128, 256, "BP16")
+    sc.resolve(64, 128, 256, "BP16")
+    sc.resolve(32, 64, 128, "BP16")
+    ks = sc.key_stats()
+    assert ks[(64, 128, 256, "BP16")] == {"hits": 1, "misses": 1}
+    assert ks[(32, 64, 128, "BP16")] == {"hits": 0, "misses": 1}
+    sc.note_applied(64, 128, 256, "BP16", c1)
+
+    sc.reset()
+    st = sc.stats()
+    assert st["hits"] == 0 and st["misses"] == 0
+    assert st["entries"] == 2                  # memoized schedules survive
+    assert st["applied"] == 1                  # ...and so does the log
+    assert sc.key_stats() == {}
+    assert sc.resolve(64, 128, 256, "BP16") is c1   # still a pure hit
+    assert sc.stats()["hits"] == 1 and sc.stats()["misses"] == 0
+    assert sc.key_stats()[(64, 128, 256, "BP16")] == {"hits": 1,
+                                                      "misses": 0}
+
+
+def test_schedule_cache_bind_metrics_counts_post_bind():
+    from repro.obs.metrics import MetricsRegistry
+    sc = ScheduleCache()
+    sc.resolve(64, 128, 256, "BP16")           # pre-bind miss: not counted
+    m = MetricsRegistry()
+    sc.bind_metrics(m)
+    sc.resolve(64, 128, 256, "BP16")
+    sc.resolve(16, 32, 64, "BP16")
+    assert m.value("schedule.hits") == 1
+    assert m.value("schedule.misses") == 1
+    assert sc.stats()["hits"] == 1 and sc.stats()["misses"] == 2
+
+
 def test_matmul_applies_cached_choice(monkeypatch):
     """Second call with the same shape must hit the cache and forward the
     memoized (dataflow, k_fold) into the kernel dispatch."""
