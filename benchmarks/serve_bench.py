@@ -98,6 +98,7 @@ plus a human table, and writes experiments/bench/serve_bench.json.
 from __future__ import annotations
 
 import argparse
+import collections
 import json
 import os
 import sys
@@ -342,7 +343,9 @@ def run_bench(n_requests: int, slots: int, max_len: int,
                                        tokens_by_engine["paged"])
     prows, pfail = run_policy_bench(cfg, params, slots, n_requests=12)
     srows, sfail = run_spec_bench(cfg, params, slots)
-    return rows + trows + prows + srows, failures + tfail + pfail + sfail
+    crows, cfail = run_chaos_bench(cfg, params, slots)
+    return (rows + trows + prows + srows + crows,
+            failures + tfail + pfail + sfail + cfail)
 
 
 #: enabled-tracing slowdown bound: the lifecycle tracer + registry must
@@ -588,6 +591,114 @@ def run_spec_bench(cfg, params, slots: int, n_requests: int = 8):
     return rows, failures
 
 
+#: the chaos row's fixed fault schedule (docs/RELIABILITY.md): allocation
+#: denials into the overload trace's admission pressure, one transient
+#: dispatch failure (retried), one poisoned request (quarantined), and a
+#: mid-trace crash (warm restart).  Fixed, not random — the bench row is
+#: a regression gate, the randomized sweep lives in tests/test_chaos.py.
+CHAOS_SCHEDULE = [
+    {"kind": "reserve", "at": 2, "count": 2},
+    {"kind": "dispatch", "at": 9},
+    {"kind": "poison", "rid": 5, "count": 1},
+    {"kind": "crash", "at": 16},
+]
+
+#: recovery-overhead bound: the faulted run — retries, quarantine,
+#: restart, re-prefill of every in-flight request — must finish within
+#: this multiple of the fault-free wall on the same trace.  Generous
+#: because the trace is short (restart cost amortizes over ~nothing);
+#: the point is catching pathological recovery (unbounded retry spins,
+#: re-prefill from scratch every step), not micro-regressions.
+CHAOS_RECOVERY_BOUND = 5.0
+
+
+def run_chaos_bench(cfg, params, slots: int, n_requests: int = 12):
+    """Fault-tolerance row: the overload trace driven through
+    ``CHAOS_SCHEDULE`` under ``serve_with_restarts``, gated on the three
+    resilience invariants (every request terminal / fault-untouched
+    requests token-identical to the fault-free run / recovery overhead
+    bounded) — the serve-side counterpart of tests/test_chaos.py."""
+    import dataclasses
+
+    from repro.serving.engine import ContinuousEngine
+    from repro.serving.resilience import (RESULT_STATUSES, FaultPlane,
+                                          ResilienceConfig,
+                                          serve_with_restarts)
+
+    reqs = _overload_trace(n_requests, cfg.vocab)
+
+    def make(plane=None):
+        return ContinuousEngine(
+            cfg, params, slots=slots, max_len=POLICY_MAX_LEN,
+            kv_blocks=OVERLOAD_KV_BLOCKS, audit=True, faults=plane,
+            resilience=ResilienceConfig(max_admit_retries=200))
+
+    # warmup (jitted programs cached per config/max_len), then the
+    # fault-free reference: tokens AND the recovery-overhead baseline
+    make().run([dataclasses.replace(r) for r in reqs])
+    eng_ff = make()
+    t0 = time.perf_counter()
+    res_ff = eng_ff.run([dataclasses.replace(r) for r in reqs])
+    wall_ff = time.perf_counter() - t0
+    ref_tokens = {r.rid: list(map(int, r.tokens)) for r in res_ff}
+
+    plane = FaultPlane.from_schedule(CHAOS_SCHEDULE)
+    engines = []
+
+    def make_engine():
+        engines.append(make(plane))
+        return engines[-1]
+
+    t0 = time.perf_counter()
+    results = serve_with_restarts(
+        make_engine, [dataclasses.replace(r) for r in reqs],
+        max_steps=20_000)
+    wall = time.perf_counter() - t0
+
+    eng = engines[-1]
+    row = _summarize("paged_chaos", results, wall, eng)
+    row["pool"] = eng.pool.stats()
+    row["faults_fired"] = [f["kind"] for f in plane.fired]
+    row["engines_built"] = len(engines)
+    row["statuses"] = dict(collections.Counter(r.status for r in results))
+    row["wall_s_fault_free"] = round(wall_ff, 3)
+    row["recovery_overhead_x"] = round(wall / max(wall_ff, 1e-9), 2)
+
+    failures = []
+    all_terminal = (sorted(r.rid for r in results)
+                    == sorted(r.rid for r in reqs)
+                    and all(r.status in RESULT_STATUSES for r in results))
+    if not all_terminal:
+        failures.append(
+            f"chaos run lost requests or emitted illegal statuses: "
+            f"{row['statuses']} over {len(results)} results")
+    mismatched = [r.rid for r in results if r.status == "ok"
+                  and list(map(int, r.tokens)) != ref_tokens[r.rid]]
+    if mismatched:
+        failures.append(
+            f"fault-untouched requests {mismatched} not token-identical "
+            f"to the fault-free run — recovery changed greedy output")
+    row["all_terminal"] = all_terminal
+    row["unaffected_token_identical"] = not mismatched
+    row["recovery_overhead_ok"] = wall <= CHAOS_RECOVERY_BOUND * wall_ff
+    if not row["recovery_overhead_ok"]:
+        failures.append(
+            f"chaos run took {row['recovery_overhead_x']}x the fault-free "
+            f"wall (bound {CHAOS_RECOVERY_BOUND}x) — recovery is "
+            f"pathologically slow")
+    if len(engines) != 2:
+        failures.append(f"crash fault built {len(engines)} engines "
+                        f"(expected 2) — the warm restart did not happen")
+    if not any(f["kind"] == "poison" for f in plane.fired):
+        failures.append("poison fault never fired — the chaos schedule "
+                        "is not exercising quarantine")
+    try:
+        eng.pool.check()
+    except Exception as e:  # noqa: BLE001 - report, don't crash the bench
+        failures.append(f"final pool audit failed after chaos run: {e}")
+    return [row], failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--dry", action="store_true",
@@ -666,6 +777,13 @@ def main(argv=None) -> int:
           f"{sm['spec']['draft_steps']} draft dispatches); verify-shape "
           f"schedule hit rate {sn['schedule_hit_rate_run']*100:.0f}%/"
           f"{sm['schedule_hit_rate_run']*100:.0f}%")
+    ch = by["paged_chaos"]
+    print(f"chaos (fixed schedule): faults fired "
+          f"{ch['faults_fired']}, statuses {ch['statuses']}, "
+          f"{ch['engines_built']} engines (warm restart), recovery "
+          f"{ch['recovery_overhead_x']}x fault-free wall (bound "
+          f"{CHAOS_RECOVERY_BOUND}x); terminal={ch['all_terminal']}, "
+          f"token-identical={ch['unaffected_token_identical']}")
     for msg in failures:
         print(f"FAIL: {msg}")
     return 1 if failures else 0

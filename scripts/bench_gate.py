@@ -54,6 +54,13 @@ CHECKS = [
     # (the row computes the A/B in-process from min-of-N alternating
     # walls; the boolean is what gets gated, never the raw wall numbers)
     ("serve", "engine=paged_telemetry.telemetry_overhead_ok", "true", 0.0),
+    # resilience (fixed chaos schedule, docs/RELIABILITY.md): every
+    # request terminal, fault-untouched output token-identical, recovery
+    # within CHAOS_RECOVERY_BOUND of the fault-free wall — all computed
+    # in-process by serve_bench.run_chaos_bench, booleans gated here
+    ("serve", "engine=paged_chaos.all_terminal", "true", 0.0),
+    ("serve", "engine=paged_chaos.unaffected_token_identical", "true", 0.0),
+    ("serve", "engine=paged_chaos.recovery_overhead_ok", "true", 0.0),
 ]
 
 

@@ -28,6 +28,7 @@ import sys
 WEIGHTS = {
     "test_models.py": 470,
     "test_serving_engine.py": 180,
+    "test_chaos.py": 90,
     "test_system.py": 58,
     "test_kernels.py": 53,
     "test_spec.py": 40,

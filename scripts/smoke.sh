@@ -12,10 +12,16 @@
 # fifo with token-identical output and a clean pool.check() every step,
 # and the speculative gates on the repetition trace: ngram + model spec
 # rows token-identical to vanilla paged with >= 1.5x fewer decode
-# dispatches and 100% verify-shape schedule hits), then a paged-engine
+# dispatches and 100% verify-shape schedule hits, and the chaos gates on
+# the fixed fault schedule: every request terminal, fault-untouched
+# output token-identical across the warm restart, recovery overhead
+# bounded), then a paged-engine
 # smoke: tiny config, 4 requests sharing a prompt prefix — asserts block
 # reuse actually happened, plus an ngram speculative run over the same
-# engine shape asserting identical tokens in fewer dispatches.  CI diffs
+# engine shape asserting identical tokens in fewer dispatches, plus a
+# chaos smoke: the same trace under an injected allocation denial and a
+# mid-trace crash, asserting token-identical recovery through
+# serve_with_restarts (docs/RELIABILITY.md).  CI diffs
 # the smoke JSON artifacts against the committed baselines afterwards
 # (scripts/bench_gate.py).
 set -euo pipefail
@@ -80,4 +86,30 @@ ss = sp.spec_stats()
 print(f"[smoke] spec engine OK: {ss['tokens_emitted']} tokens in "
       f"{ss['verify_steps']} verify dispatches (vanilla {eng.steps}), "
       f"avg accept len {ss['avg_accept_len']:.2f}")
+
+# chaos smoke: the same trace under an injected allocation denial and a
+# mid-trace engine crash — serve_with_restarts must warm-restart into a
+# second engine and finish every request ok with IDENTICAL greedy
+# tokens, leaving an audit-clean pool (docs/RELIABILITY.md).
+from repro.serving import FaultPlane, serve_with_restarts
+from repro.serving.resilience import FaultSpec
+
+plane = FaultPlane([FaultSpec("reserve", at=1), FaultSpec("crash", at=8)])
+engines = []
+
+def make_engine():
+    engines.append(ContinuousEngine(cfg, params, slots=2, max_len=96,
+                                    audit=True, faults=plane))
+    return engines[-1]
+
+cres = serve_with_restarts(
+    make_engine, [Request(rid=r.rid, prompt=r.prompt.copy(),
+                          max_new_tokens=r.max_new_tokens, eos=r.eos)
+                  for r in reqs], max_steps=2000)
+assert {r.status for r in cres} == {"ok"}, [(r.rid, r.status) for r in cres]
+assert {r.rid: list(map(int, r.tokens)) for r in cres} == base
+assert len(engines) == 2, len(engines)      # the crash really restarted
+engines[-1].pool.check()
+print(f"[smoke] chaos OK: faults {[f['kind'] for f in plane.fired]}, "
+      f"{len(engines)} engines, tokens identical across the warm restart")
 EOF

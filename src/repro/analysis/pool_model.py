@@ -2,8 +2,12 @@
 
 Exhaustively explores every sequence of public :class:`KVPool`
 operations (admit with prefix sharing / extend / truncate / COW fork /
-take-copies / release with or without preempt-registration) on a small
-pool, auditing :meth:`KVPool.audit_violations` after every transition.
+take-copies / release with or without preempt-registration /
+mid-decode cancel) on a small pool, auditing
+:meth:`KVPool.audit_violations` after every transition and checking
+that every newly reached state survives a
+``snapshot_state``/``from_snapshot`` round-trip byte-identically (the
+warm-restart serialization invariant).
 The invariants are the pool's own — the checker and the runtime
 ``audit=True`` path judge states through the same predicate, so a
 counterexample here is a replayable runtime bug and vice versa.
@@ -52,6 +56,10 @@ class ModelCheckConfig:
                                             (7, 8, 9))
     max_new_tokens: int = 2
     share_prefixes: bool = True
+    #: tokens a hypothetical decode produced before a ``cancel`` op —
+    #: cancellation releases with prompt+produced registered, the exact
+    #: shape of ``ContinuousEngine.cancel`` tearing down a decode slot
+    produced: tuple[int, ...] = (21, 22)
 
     def make_pool(self, pool_cls: type = KVPool) -> KVPool:
         return pool_cls(self.num_blocks, self.block_size, slots=self.slots,
@@ -131,6 +139,7 @@ def _enabled_ops(pool: KVPool, owners: tuple, cfg: ModelCheckConfig
                 ops.append(("cow", s, 0, cur * bs - 1))
             ops.append(("release", s, False))
             ops.append(("release", s, True))
+            ops.append(("cancel", s))
     if pool.pending_copies:
         ops.append(("take",))
     return ops
@@ -165,6 +174,14 @@ def _apply(pool: KVPool, owners: tuple, op: Op,
                       if register and owners[s] is not None else None)
             pool.release_slot(s, prompt=prompt)
             owners[s] = None
+        elif name == "cancel":
+            # mid-decode cancellation (ContinuousEngine.cancel): release
+            # with the full sequence — prompt + produced — registered
+            _, s = op
+            prompt = (list(cfg.prompts[owners[s]]) + list(cfg.produced)
+                      if owners[s] is not None else None)
+            pool.release_slot(s, prompt=prompt)
+            owners[s] = None
         elif name == "take":
             pool.take_copies()
         else:  # pragma: no cover - alphabet and dispatch move together
@@ -174,6 +191,23 @@ def _apply(pool: KVPool, owners: tuple, op: Op,
     except Exception as e:  # noqa: BLE001 - any crash is a counterexample
         return tuple(owners), f"{type(e).__name__}: {e}"
     return tuple(owners), None
+
+
+def _roundtrip_violation(pool: KVPool, owners: tuple) -> str | None:
+    """Snapshot/restore round-trip invariant: serializing a pool
+    (:meth:`KVPool.snapshot_state`) and rebuilding it
+    (:meth:`KVPool.from_snapshot`) must reproduce the behavioral state
+    key exactly — allocator order, refs, tables, prefix LRU order,
+    pending copies.  This is the offline half of the engine's
+    warm-restart path (docs/RELIABILITY.md): a state that does not
+    round-trip is a state a restart would silently corrupt."""
+    try:
+        twin = type(pool).from_snapshot(pool.snapshot_state())
+    except Exception as e:  # noqa: BLE001 - serialization crash = bug
+        return f"snapshot round-trip raised {type(e).__name__}: {e}"
+    if _state_key(twin, owners) != _state_key(pool, owners):
+        return "snapshot round-trip changed behavioral state"
+    return None
 
 
 def _counterexample(trace: Sequence[Op], violations: Sequence[str],
@@ -226,6 +260,13 @@ def explore(cfg: ModelCheckConfig | None = None, *,
             if len(seen) >= max_states:
                 truncated = True
                 continue
+            # round-trip invariant, checked once per NEWLY seen state
+            # (revisits are byte-identical, re-checking buys nothing)
+            rt = _roundtrip_violation(nxt, new_owners)
+            if rt is not None:
+                return CheckResult(False, len(seen), transitions,
+                                   _counterexample(trace + (op,), [rt],
+                                                   nxt))
             seen.add(key)
             queue.append((nxt, new_owners, trace + (op,)))
     return CheckResult(True, len(seen), transitions, None,

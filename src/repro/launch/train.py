@@ -159,6 +159,7 @@ def make_eval_step(cfg: ModelConfig, mesh, fsdp: bool = True):
 
 def train(cfg: ModelConfig, tc: TrainConfig, *, mesh=None,
           injector: FailureInjector | None = None,
+          restart_policy: RestartPolicy | None = None,
           log: Callable[[str], None] = print) -> dict[str, float]:
     mesh = mesh or make_local_mesh()
     opt_cfg = adamw.AdamWConfig(total_steps=tc.steps)
@@ -236,7 +237,8 @@ def train(cfg: ModelConfig, tc: TrainConfig, *, mesh=None,
         start = 0
 
     run_with_restarts(loop, start_step=start, final_step=tc.steps,
-                      policy=RestartPolicy(), on_restart=on_restart)
+                      policy=restart_policy or RestartPolicy(),
+                      on_restart=on_restart)
     if mgr is not None:
         mgr.wait()
     return last_metrics

@@ -49,6 +49,15 @@ EVENT_TYPES = (
     "preempt",        # victim released mid-flight, re-queued
     "finish",         # request completed, Result emitted
     "dispatch",       # span: profiled jitted dispatch (obs.profile)
+    # resilience-plane events (docs/RELIABILITY.md); all instants
+    "fault_injected",  # the fault plane fired a scheduled fault
+    "retry",          # transient failure, will retry (dispatch/admission)
+    "cancel",         # request cancelled via ContinuousEngine.cancel
+    "timeout",        # request exceeded its TTFT/total deadline
+    "shed",           # request rejected at submit: queue at bound
+    "quarantine",     # deterministically failing request isolated
+    "degrade",        # live spec_k lowered/recovered under pool pressure
+    "restore",        # warm-restart: snapshot entries re-admitted
 )
 
 _SPAN_TYPES = frozenset(

@@ -69,9 +69,9 @@ class HeartbeatMonitor:
         dead = sum(1 for s in states.values() if s is HostState.DEAD)
         strag = sum(1 for s in states.values() if s is HostState.STRAGGLING)
         healthy_frac = 1 - dead / max(1, len(states))
-        if dead and healthy_frac < 1.0:
-            return "restart"
-        if healthy_frac < self.cfg.min_healthy_fraction:
+        # any dead host already forces healthy_frac < 1.0, so a single
+        # threshold test covers both "hosts lost" and "too few healthy"
+        if dead or healthy_frac < self.cfg.min_healthy_fraction:
             return "restart"
         if strag:
             return "mitigate"
@@ -98,20 +98,52 @@ def plan_elastic_mesh(n_chips: int, model_parallel: int
 @dataclasses.dataclass
 class RestartPolicy:
     max_restarts: int = 100
+    #: base restart delay; doubles per consecutive restart up to
+    #: ``backoff_max_s``, with ``jitter`` fractional randomization so a
+    #: fleet of restarting replicas does not thundering-herd the
+    #: checkpoint store.  Zero disables the wait entirely (tests).
     backoff_s: float = 5.0
+    backoff_max_s: float = 60.0
+    jitter: float = 0.1
+
+    def delay_s(self, restarts: int, u: float = 0.0) -> float:
+        """Delay before restart number ``restarts`` (1-based), given a
+        uniform sample ``u`` in [0, 1) for the jitter term."""
+        if self.backoff_s <= 0.0:
+            return 0.0
+        base = min(self.backoff_s * 2.0 ** (restarts - 1),
+                   self.backoff_max_s)
+        return base * (1.0 + self.jitter * u)
 
 
 class FailureInjector:
-    """Deterministic failure schedule for tests/drills: raises at the
-    configured steps (simulating a lost collective / dead host)."""
+    """Deterministic failure schedule for tests/drills: raises when
+    ``maybe_fail`` sees a configured trigger value (simulating a lost
+    collective / dead host / poisoned dispatch).
 
-    def __init__(self, fail_at_steps: tuple[int, ...] = ()):
+    Each trigger fires at most ``count`` times (default once) — serving
+    needs ``count`` because a failed dispatch does not advance the
+    engine's step index, so a step-keyed fault with ``count=n`` means
+    "fail n consecutive retries, then let it through".  ``exc`` swaps
+    the raised exception type (``exc(trigger) -> BaseException``); the
+    serving fault plane uses it to raise its typed faults through the
+    same schedule machinery."""
+
+    def __init__(self, fail_at_steps: tuple[int, ...] = (), *,
+                 count: int = 1,
+                 exc: Callable[[int], BaseException] | None = None):
         self.fail_at = set(fail_at_steps)
-        self.fired = set()
+        self.fired = set()          # triggers whose budget is exhausted
+        self._exc = exc
+        self._budget = {s: count for s in self.fail_at}
 
     def maybe_fail(self, step: int):
         if step in self.fail_at and step not in self.fired:
-            self.fired.add(step)
+            self._budget[step] -= 1
+            if self._budget[step] <= 0:
+                self.fired.add(step)
+            if self._exc is not None:
+                raise self._exc(step)
             raise RuntimeError(f"[injected] host failure at step {step}")
 
 
@@ -120,10 +152,15 @@ def run_with_restarts(train_loop: Callable[[int], int], *,
                       final_step: int,
                       policy: RestartPolicy | None = None,
                       on_restart: Callable[[int, Exception], int] | None
-                      = None) -> int:
+                      = None,
+                      sleep: Callable[[float], None] = time.sleep,
+                      rng: Callable[[], float] | None = None) -> int:
     """Drives ``train_loop(start) -> reached_step`` under the restart policy.
     ``on_restart(step, exc) -> resume_step`` typically restores the latest
-    checkpoint and returns its step.  Returns the final step reached."""
+    checkpoint and returns its step.  Between restarts the driver backs
+    off exponentially with jitter (``RestartPolicy.delay_s``) through the
+    injectable ``sleep`` — pass a zero-backoff policy or a recording
+    ``sleep`` in tests to stay instant.  Returns the final step reached."""
     policy = policy or RestartPolicy()
     step = start_step
     restarts = 0
@@ -136,5 +173,7 @@ def run_with_restarts(train_loop: Callable[[int], int], *,
                 raise
             if on_restart is not None:
                 step = on_restart(step, exc)
-            # (real deployment: sleep policy.backoff_s; tests skip the wait)
+            delay = policy.delay_s(restarts, rng() if rng else 0.0)
+            if delay > 0.0:
+                sleep(delay)
     return step

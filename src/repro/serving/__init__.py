@@ -10,6 +10,10 @@ Speculative decoding (``spec.DraftProvider``: ``ngram`` prompt-lookup
 drafting, ``ModelDraft`` small-model drafting over the shared block
 tables) turns decode into draft/verify multi-token steps with KV
 rollback (``KVPool.truncate``), token-identical to vanilla greedy.
+The resilience plane (``resilience``: seeded fault injection, lifecycle
+guards, ``serve_with_restarts`` warm-restart recovery —
+docs/RELIABILITY.md) keeps every submitted request terminating with a
+``Result.status`` under faults, overload, and engine crashes.
 ``ScheduleCache`` (re-exported from ``core.scheduler``) is the shape ->
 (dataflow, arrangement, k_fold) memo the engine hot path — including the
 paged-decode gather GEMMs — and ``kernels.ops.matmul`` consult.
@@ -18,10 +22,14 @@ from repro.core.scheduler import ScheduleCache  # noqa: F401
 from repro.serving.engine import (ContinuousEngine, Engine,  # noqa: F401
                                   Request, Result, WaveEngine)
 from repro.serving.kv_pool import (AdmitPlan, KVPool,  # noqa: F401
-                                   ProbeReport, blocks_for)
+                                   PoolAuditError, ProbeReport, blocks_for)
 from repro.serving.policy import (BestFitPolicy, FifoPolicy,  # noqa: F401
                                   PendingView, SchedulerPolicy,
                                   SloPreemptPolicy, SlotView, make_policy,
                                   register_policy)
+from repro.serving.resilience import (EngineCrash,  # noqa: F401
+                                      FaultPlane, FaultSpec, InjectedFault,
+                                      ResilienceConfig, classify_error,
+                                      serve_with_restarts)
 from repro.serving.spec import (DraftProvider, ModelDraft,  # noqa: F401
                                 NgramDraft, make_provider)

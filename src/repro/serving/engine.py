@@ -132,9 +132,12 @@ from repro.kernels import paged_attention as PA
 from repro.models import network as N
 from repro.models.config import ModelConfig
 from repro.obs import Telemetry
-from repro.serving.kv_pool import KVPool, blocks_for
+from repro.serving.kv_pool import KVPool, PoolAuditError, blocks_for
 from repro.serving.policy import (PendingView, SchedulerPolicy, SlotView,
                                   make_policy)
+from repro.serving.resilience import (EngineCrash, FaultPlane,
+                                      InjectedFault, ResilienceConfig,
+                                      classify_error)
 from repro.serving.spec import DraftProvider, make_provider
 
 PyTree = Any
@@ -240,6 +243,13 @@ class Request:
     #: policy hint: higher-priority requests admit first under
     #: ``best_fit`` and are never preempted for a lower-priority one.
     priority: int = 0
+    #: hard lifecycle deadlines (seconds from submit; None = none).
+    #: Unlike ``ttft_slo`` (a scheduling *hint*), these TERMINATE the
+    #: request: past ``deadline_s`` (total wall) or past
+    #: ``ttft_deadline_s`` without a first token, it finishes with
+    #: ``Result.status == "timeout"`` carrying whatever tokens exist.
+    ttft_deadline_s: float | None = None
+    deadline_s: float | None = None
 
 
 @dataclasses.dataclass
@@ -254,6 +264,12 @@ class Result:
     #: token — the deterministic TTFT proxy (wall-clock ttft_s is noisy)
     ttft_steps: int = 0
     preemptions: int = 0        # times this request was evicted mid-flight
+    #: terminal status — ok | cancelled | timeout | shed | failed
+    #: (docs/RELIABILITY.md).  Every submitted request produces exactly
+    #: one Result; non-"ok" Results still carry the tokens produced.
+    status: str = "ok"
+    #: error classification when status == "failed" (classify_error)
+    error: str | None = None
 
 
 def _bucket_for(n: int, buckets: Sequence[int]) -> int:
@@ -280,6 +296,10 @@ class _Pending:
     ttft_steps: int = -1            # -1 = first token not yet produced
     preemptions: int = 0
     prefill_s: float = 0.0          # prefill wall time from prior admissions
+    #: failed admission attempts (resilience: bounded retry-with-backoff)
+    admit_failures: int = 0
+    #: engine dispatch index before which admission is not retried
+    retry_at: int = 0
 
     def __post_init__(self):
         if self.full_prompt is None:
@@ -330,7 +350,9 @@ class ContinuousEngine:
                  spec: str | DraftProvider | None = None,
                  spec_k: int = 4,
                  audit: bool = False,
-                 telemetry: Telemetry | None = None):
+                 telemetry: Telemetry | None = None,
+                 faults: FaultPlane | None = None,
+                 resilience: ResilienceConfig | None = None):
         if cfg.is_encoder_only:
             raise ValueError(f"{cfg.name} is encoder-only: no decode serving")
         # telemetry bundle: the metrics registry is ALWAYS real — its
@@ -463,6 +485,44 @@ class ContinuousEngine:
         self._stop = False
         self._thread: threading.Thread | None = None
         self._loop_error: BaseException | None = None
+
+        # resilience plane (docs/RELIABILITY.md): lifecycle guards +
+        # fault injection.  A default ResilienceConfig is a behavioral
+        # no-op, and with faults=None every hook below is dormant.
+        self.resilience = resilience or ResilienceConfig()
+        self.faults = faults
+        self._cancels: set[int] = set()     # rids awaiting cancellation
+        self._deadlines = False             # any live request has one
+        self._ticks = 0     # step() invocations — advances even when a
+        # dispatch fails or nothing runs, so admission backoff (below)
+        # can never hold the whole queue forever on an idle engine
+        self._fail_streak: dict[str, int] = {}   # consecutive per kind
+        self._spec_k_live = spec_k          # degradable speculation depth
+        self._spec_clean_steps = 0
+        self.last_dispatch_error: BaseException | None = None
+        self._c_res_faults = m.counter(
+            "resilience.faults_injected", "fault-plane firings")
+        self._c_res_retries = m.counter(
+            "resilience.retries", "transient failures retried")
+        self._c_res_cancelled = m.counter(
+            "resilience.cancelled", "requests cancelled")
+        self._c_res_timeouts = m.counter(
+            "resilience.timeouts", "requests past a hard deadline")
+        self._c_res_shed = m.counter(
+            "resilience.shed", "submissions rejected at the queue bound")
+        self._c_res_quarantined = m.counter(
+            "resilience.quarantined",
+            "requests failed by the step watchdog")
+        self._c_res_admit_fail = m.counter(
+            "resilience.admit_failures", "failed admission attempts")
+        self._c_res_degrades = m.counter(
+            "resilience.spec_degrades", "spec_k halvings under pressure")
+        self._c_res_restores = m.counter(
+            "resilience.restored", "snapshot entries re-admitted")
+        if faults is not None:
+            faults.on_fire = self._note_fault
+            if paged:
+                faults.attach_pool(self.pool)
         # step/lifecycle telemetry — registry-backed; the old attributes
         # (engine.steps, .prefills, .chunk_steps, .preemptions,
         # .decode_times, .chunk_durations) remain readable as property
@@ -603,15 +663,73 @@ class ContinuousEngine:
                 "against the target argmax; sampled verification needs "
                 "rejection sampling) — submit temperature=0 requests or "
                 "serve without spec=")
+        if req.ttft_deadline_s is not None or req.deadline_s is not None:
+            self._deadlines = True
+        bound = self.resilience.max_pending
         with self._cv:
-            self._pending.append(_Pending(req=req,
-                                          t_submit=time.perf_counter()))
-            self._cv.notify()
+            shed = bound is not None and len(self._pending) >= bound
+            if not shed:
+                self._pending.append(_Pending(req=req,
+                                              t_submit=time.perf_counter()))
+                self._cv.notify()
+        if shed:
+            # load shedding: terminal Result NOW, in the caller's thread
+            # — the explicit backpressure signal (see backpressure()).
+            self._c_res_shed.inc()
+            if self._tr.enabled:
+                self._tr.event("shed", rid=req.rid,
+                               step=self.steps + self.chunk_steps,
+                               pending=bound)
+            self._emit_terminal(req, t_submit=time.perf_counter(),
+                               status="shed",
+                               error=f"pending queue at bound {bound}")
+            return
         if self._tr.enabled:
             self._tr.event("submit", rid=req.rid,
                            step=self.steps + self.chunk_steps,
                            prompt_len=len(req.prompt),
                            max_new=req.max_new_tokens)
+
+    def cancel(self, rid: int) -> bool:
+        """Request cancellation of ``rid`` (thread-safe, idempotent).
+
+        Serviced at the start of the next engine step: a queued entry
+        terminates immediately; a running slot tears down through the
+        generalized preempt/finish machinery — exclusively-owned blocks
+        freed, pending COW copies scrubbed, produced tokens
+        prefix-registered — and the request gets a terminal
+        ``status="cancelled"`` Result carrying the tokens produced so
+        far.  Returns False when ``rid`` is not currently queued or
+        running (already finished, or never submitted)."""
+        with self._cv:
+            known = any(e.req.rid == rid for e in self._pending)
+            known = known or any(s is not None and s.req.rid == rid
+                                 for s in self._slots)
+            if not known:
+                return False
+            self._cancels.add(rid)
+            self._cv.notify()
+        return True
+
+    def backpressure(self) -> bool:
+        """Explicit load-shedding signal: True when the pending queue is
+        at the ``ResilienceConfig.max_pending`` bound — callers should
+        stop submitting (further submits return ``status="shed"``
+        Results immediately).  Always False when no bound is set."""
+        bound = self.resilience.max_pending
+        if bound is None:
+            return False
+        with self._cv:
+            return len(self._pending) >= bound
+
+    def drain_results(self) -> list[Result]:
+        """Every finished Result available right now (non-blocking)."""
+        out: list[Result] = []
+        while True:
+            try:
+                out.append(self._results.get_nowait())
+            except _queue.Empty:
+                return out
 
     def get_result(self, timeout: float | None = None) -> Result:
         """Blocks until the next finished request (completion order).
@@ -872,14 +990,55 @@ class ContinuousEngine:
                 if idx is None:
                     return                  # policy holds the whole queue
                 ent = self._pending[idx]
+                if ent.retry_at > self._ticks:
+                    return                  # admission backoff in effect
                 del self._pending[idx]
             if self.paged:
                 if not self._admit_one_paged(slot, ent):
-                    with self._cv:          # backoff: retry next step
+                    if self._admit_failed(ent):
+                        continue            # terminally failed: next entry
+                    with self._cv:          # backoff: retry later
                         self._pending.insert(idx, ent)
                     return
             else:
                 self._admit_one(slot, ent)
+
+    def _admit_failed(self, ent: _Pending) -> bool:
+        """Bookkeeping for one failed (pool-denied) admission attempt.
+        Default config keeps the legacy behavior: retry every step,
+        forever.  With ``max_admit_retries`` set the request eventually
+        fails terminally (True = do not re-queue); with
+        ``admit_backoff_steps`` set retries space out exponentially."""
+        res = self.resilience
+        ent.admit_failures += 1
+        self._c_res_admit_fail.inc()
+        if (res.max_admit_retries is not None
+                and ent.admit_failures > res.max_admit_retries):
+            self._c_res_quarantined.inc()
+            if self._tr.enabled:
+                self._tr.event("quarantine", rid=ent.req.rid,
+                               step=self.steps + self.chunk_steps,
+                               error="admission retries exhausted",
+                               attempts=ent.admit_failures)
+            self._emit_terminal(
+                ent.req, t_submit=ent.t_submit, status="failed",
+                error=f"admission failed {ent.admit_failures}x "
+                      f"(pool exhausted)",
+                tokens=ent.resume_tokens, preemptions=ent.preemptions,
+                ttft_steps=ent.ttft_steps, t_first=ent.t_first,
+                prefill_s=ent.prefill_s)
+            return True
+        if res.admit_backoff_steps > 0:
+            hold = res.admit_backoff_steps * (
+                2 ** min(ent.admit_failures - 1, 6))
+            ent.retry_at = self._ticks + hold
+            self._c_res_retries.inc()
+            if self._tr.enabled:
+                self._tr.event("retry", rid=ent.req.rid,
+                               step=self.steps + self.chunk_steps,
+                               kind="admit", attempt=ent.admit_failures,
+                               hold_steps=hold)
+        return False
 
     # -- preempt-by-eviction --------------------------------------------------
 
@@ -973,6 +1132,354 @@ class ContinuousEngine:
                                                  for t in st.full_prompt])
             self._bt = jnp.asarray(self.pool.tables)
 
+    # -- resilience: lifecycle guards, step watchdog, warm restart ----------
+    # (docs/RELIABILITY.md)
+
+    def _note_fault(self, rec: dict) -> None:
+        """FaultPlane.on_fire hook: count + trace every injection."""
+        self._c_res_faults.inc()
+        if self._tr.enabled:
+            self._tr.event("fault_injected", rid=int(rec.get("rid", -1)),
+                           step=self.steps + self.chunk_steps,
+                           kind=rec.get("kind", "?"))
+
+    def _emit_terminal(self, req: Request, *, t_submit: float, status: str,
+                       error: str | None = None,
+                       tokens: Sequence[int] = (), preemptions: int = 0,
+                       ttft_steps: int = -1, t_first: float = 0.0,
+                       prefill_s: float = 0.0) -> None:
+        """Terminal Result for a request that never (re-)reached a slot:
+        shed at submit, cancelled/timed out in the queue, or out of
+        admission retries.  Any tokens from admissions before a
+        preemption are still delivered."""
+        now = time.perf_counter()
+        self._results.put(Result(
+            rid=req.rid, tokens=np.asarray(list(tokens), np.int32),
+            prefill_s=prefill_s, decode_s=0.0,
+            latency_s=now - t_submit,
+            ttft_s=max(t_first - t_submit, 0.0) if t_first else 0.0,
+            ttft_steps=max(ttft_steps, 0), preemptions=preemptions,
+            status=status, error=error))
+        self._c_finished.inc()
+        self._c_tokens.inc(len(tokens))
+        self._h_latency.observe(now - t_submit)
+
+    def _finish_abnormal(self, slot: int, status: str,
+                         error: str | None) -> None:
+        """Terminal teardown of a RUNNING slot outside the happy path
+        (cancel / timeout / quarantine): the same accounting as
+        ``_finish`` with ``Result.status`` set, and the release
+        generalized — a decode-phase slot prefix-registers its full
+        sequence exactly like ``_preempt`` (the produced tokens' KV
+        stays reusable), while a mid-prefill slot releases plainly (its
+        tail blocks hold a partial prefill no other request may
+        share)."""
+        st = self._slots[slot]
+        now = time.perf_counter()
+        prefill_s = st.prefill_s_prev + (
+            max(st.t_prefill_done - st.t_admit, 0.0)
+            if st.t_prefill_done else 0.0)
+        self._results.put(Result(
+            rid=st.req.rid, tokens=np.asarray(st.produced, np.int32),
+            prefill_s=prefill_s,
+            decode_s=(now - st.t_prefill_done) if st.t_prefill_done
+            else 0.0,
+            latency_s=now - st.t_submit,
+            ttft_s=max(st.t_first - st.t_submit, 0.0) if st.t_first
+            else 0.0,
+            ttft_steps=max(st.ttft_steps, 0), preemptions=st.preemptions,
+            status=status, error=error))
+        self._c_finished.inc()
+        self._c_tokens.inc(len(st.produced))
+        self._h_latency.observe(now - st.t_submit)
+        if self._tr.enabled:
+            self._tr.event("finish", rid=st.req.rid, slot=slot,
+                           step=self.steps + self.chunk_steps, ts=now,
+                           tokens=len(st.produced), status=status)
+        self._slots[slot] = None
+        if self.paged:
+            if st.phase == "decode" and st.produced:
+                full_seq = ([int(t) for t in st.req.prompt]
+                            + [int(t) for t in st.produced])
+                self.pool.release_slot(slot, prompt=full_seq)
+            else:
+                self.pool.release_slot(slot)
+            self._bt = jnp.asarray(self.pool.tables)
+
+    def _service_guards(self) -> None:
+        """Start-of-step lifecycle sweep: cancellations first, then hard
+        deadlines — queue entries, then running slots.  Skipped entirely
+        (one tuple check in ``step``) when no cancel is queued and no
+        live request carries a deadline."""
+        with self._cv:
+            cancels, self._cancels = self._cancels, set()
+        now = time.perf_counter()
+
+        def verdict(req: Request, t_submit: float,
+                    ttft_steps: int) -> tuple[str, str | None] | None:
+            if req.rid in cancels:
+                return "cancelled", None
+            if (req.deadline_s is not None
+                    and now - t_submit > req.deadline_s):
+                return "timeout", "deadline_s exceeded"
+            if (req.ttft_deadline_s is not None and ttft_steps < 0
+                    and now - t_submit > req.ttft_deadline_s):
+                return "timeout", "ttft_deadline_s exceeded"
+            return None
+
+        drop: list[tuple[_Pending, str, str | None]] = []
+        with self._cv:
+            keep: "collections.deque[_Pending]" = collections.deque()
+            for ent in self._pending:
+                v = verdict(ent.req, ent.t_submit, ent.ttft_steps)
+                if v is None:
+                    keep.append(ent)
+                else:
+                    drop.append((ent, *v))
+            self._pending = keep
+        for ent, status, error in drop:
+            self._note_guard(status, ent.req.rid, -1)
+            self._emit_terminal(ent.req, t_submit=ent.t_submit,
+                                status=status, error=error,
+                                tokens=ent.resume_tokens,
+                                preemptions=ent.preemptions,
+                                ttft_steps=ent.ttft_steps,
+                                t_first=ent.t_first,
+                                prefill_s=ent.prefill_s)
+        for i, st in enumerate(self._slots):
+            if st is None:
+                continue
+            v = verdict(st.req, st.t_submit, st.ttft_steps)
+            if v is not None:
+                self._note_guard(v[0], st.req.rid, i)
+                self._finish_abnormal(i, *v)
+
+    def _note_guard(self, status: str, rid: int, slot: int) -> None:
+        if status == "cancelled":
+            self._c_res_cancelled.inc()
+        else:
+            self._c_res_timeouts.inc()
+        if self._tr.enabled:
+            self._tr.event("cancel" if status == "cancelled"
+                           else "timeout", rid=rid, slot=slot,
+                           step=self.steps + self.chunk_steps)
+
+    def _quarantine(self, slot: int, exc: BaseException) -> None:
+        """Fail ONE running request because its dispatch keeps raising;
+        the engine stays alive for everyone else."""
+        st = self._slots[slot]
+        self._c_res_quarantined.inc()
+        if self._tr.enabled:
+            self._tr.event("quarantine", rid=st.req.rid, slot=slot,
+                           step=self.steps + self.chunk_steps,
+                           error=classify_error(exc))
+        self._finish_abnormal(slot, "failed", classify_error(exc))
+
+    def _dispatch_guarded(self, kind: str, slots: list[int],
+                          fn) -> bool:
+        """Run one dispatch under the step watchdog.
+
+        Injection seams fire BEFORE the dispatch (no host state has
+        mutated), so a retry is a pure re-run of the same engine step.
+        A rid-targeted (poison) fault quarantines that request; an
+        untargeted failure — injected or genuine — retries up to
+        ``ResilienceConfig.dispatch_retries`` consecutive times, then
+        the participating batch is quarantined (fail the requests, keep
+        the engine).  :class:`EngineCrash` (the warm-restart drill) and
+        :class:`PoolAuditError` (a real invariant break — never mask
+        it) always propagate.  Returns True when the dispatch ran."""
+        if self.faults is not None:
+            try:
+                self.faults.before_dispatch(
+                    kind, self.steps + self.chunk_steps,
+                    [self._slots[i].req.rid for i in slots])
+            except InjectedFault as e:
+                self._on_dispatch_error(kind, slots, e)
+                return False
+        try:
+            fn(slots)
+        except (EngineCrash, PoolAuditError, KeyboardInterrupt):
+            raise
+        except Exception as e:  # noqa: BLE001 — watchdog isolates the step
+            self._on_dispatch_error(kind, slots, e)
+            return False
+        self._fail_streak.pop(kind, None)
+        return True
+
+    def _on_dispatch_error(self, kind: str, slots: list[int],
+                           exc: BaseException) -> None:
+        self.last_dispatch_error = exc
+        rid = int(getattr(exc, "rid", -1))
+        target = next((i for i in slots
+                       if self._slots[i] is not None
+                       and self._slots[i].req.rid == rid), None)
+        if target is not None:
+            # poison: exactly one request is at fault — drop it, let the
+            # rest of the batch re-run next step
+            self._resync_slots()
+            self._quarantine(target, exc)
+            self._fail_streak.pop(kind, None)
+            return
+        streak = self._fail_streak.get(kind, 0) + 1
+        if streak > self.resilience.dispatch_retries:
+            self._fail_streak.pop(kind, None)
+            self._resync_slots()
+            for i in list(slots):
+                if self._slots[i] is not None:
+                    self._quarantine(i, exc)
+            return
+        self._fail_streak[kind] = streak
+        self._c_res_retries.inc()
+        if self._tr.enabled:
+            self._tr.event("retry", step=self.steps + self.chunk_steps,
+                           kind=kind, attempt=streak,
+                           error=classify_error(exc))
+        self._resync_slots()
+
+    def _resync_slots(self) -> None:
+        """Restore cursor/pool agreement with ``self._pos`` after an
+        interrupted dispatch.  The target caches are safe by
+        construction — ``self.caches`` is only reassigned when a
+        dispatch returns — but a spec step may have grown block tables
+        (lazy extend) and advanced the draft provider's cursors
+        (propose) before failing; roll both back to the authoritative
+        host positions.  Non-spec slots reserve their whole span at
+        admission, so there is nothing to undo."""
+        if self.spec is None:
+            return
+        self.spec.on_rollback(self, self._pos)
+        if self.paged:
+            for i, st in enumerate(self._slots):
+                if st is not None and st.phase == "decode":
+                    self.pool.truncate(i, int(self._pos[i]))
+
+    def _note_spec_pressure(self, pressure: bool) -> None:
+        """Adaptive spec_k degradation (opt-in:
+        ``ResilienceConfig.spec_degrade``): halve the live speculation
+        depth when the pool denied an extend this step — shorter spans
+        stop thrashing the allocator — and recover one step of depth
+        after ``spec_recover_steps`` clean steps.  Output is unaffected:
+        greedy accept-longest-prefix is depth-independent, and the
+        verify dispatch keeps its fixed (slots, spec_k + 1) shape."""
+        if not self.resilience.spec_degrade:
+            return
+        if pressure:
+            self._spec_clean_steps = 0
+            if self._spec_k_live > 1:
+                self._spec_k_live = max(1, self._spec_k_live // 2)
+                self._c_res_degrades.inc()
+                if self._tr.enabled:
+                    self._tr.event("degrade",
+                                   step=self.steps + self.chunk_steps,
+                                   spec_k=self._spec_k_live)
+        else:
+            self._spec_clean_steps += 1
+            if (self._spec_k_live < self.spec_k
+                    and self._spec_clean_steps
+                    >= self.resilience.spec_recover_steps):
+                self._spec_clean_steps = 0
+                self._spec_k_live += 1
+                if self._tr.enabled:
+                    self._tr.event("degrade",
+                                   step=self.steps + self.chunk_steps,
+                                   spec_k=self._spec_k_live)
+
+    def snapshot(self) -> dict:
+        """Host-side warm-restart snapshot: every queued and in-flight
+        request with its produced-token log, plus the pool's serialized
+        state (``KVPool.snapshot_state``) for offline debugging.
+
+        Device KV is deliberately NOT captured: :meth:`restore`
+        re-admits each request through the prefix-cache skip-prefill
+        path on a fresh engine, which reconstructs exactly the KV an
+        uncrashed run holds (prefill writes the same KV decode would
+        have, position for position) — so greedy outputs are
+        token-identical across the crash.  Gated in
+        ``tests/test_chaos.py`` and serve_bench's ``paged_chaos`` row."""
+
+        def req_d(req: Request) -> dict:
+            return {"rid": req.rid,
+                    "prompt": [int(t) for t in req.prompt],
+                    "max_new_tokens": req.max_new_tokens,
+                    "temperature": req.temperature, "eos": req.eos,
+                    "ttft_slo": req.ttft_slo, "priority": req.priority,
+                    "ttft_deadline_s": req.ttft_deadline_s,
+                    "deadline_s": req.deadline_s}
+
+        entries = []
+        for st in self._slots:
+            if st is None:
+                continue
+            entries.append({
+                "req": req_d(st.req),
+                "full_prompt": [int(t) for t in st.full_prompt],
+                "produced": [int(t) for t in st.produced],
+                "phase": st.phase,
+                "resume_len": st.resume_len,
+                "preemptions": st.preemptions,
+                "ttft_steps": st.ttft_steps})
+        with self._cv:
+            entries += [{
+                "req": req_d(e.req),
+                "full_prompt": [int(t) for t in e.full_prompt],
+                "produced": [int(t) for t in e.resume_tokens],
+                "phase": "queued",
+                "resume_len": len(e.resume_tokens),
+                "preemptions": e.preemptions,
+                "ttft_steps": e.ttft_steps} for e in self._pending]
+        return {"version": 1, "in_flight": entries,
+                "pool": self.pool.snapshot_state() if self.paged
+                else None}
+
+    def restore(self, snap: dict) -> int:
+        """Re-admit a crashed engine's :meth:`snapshot` on THIS (fresh,
+        same cfg/params) engine.  A decode-phase entry re-queues with
+        prompt + produced as its admission prompt — exactly the
+        ``_preempt`` shape, so re-admission skip-prefills whatever KV
+        survived in the restarted pool's prefix cache and re-prefills
+        the rest; greedy decode then continues token-identically.
+        Mid-prefill and queued entries restart from their recorded
+        admission prompt.  Wall-clock deadlines restart from restore
+        time (deadline budgets are per-process).  Returns the number of
+        entries re-admitted."""
+        if self._pending or any(s is not None for s in self._slots):
+            raise RuntimeError("restore() requires a fresh engine")
+        now = time.perf_counter()
+        n = 0
+        for d in snap["in_flight"]:
+            r = d["req"]
+            req = Request(
+                rid=int(r["rid"]),
+                prompt=np.asarray(r["prompt"], np.int32),
+                max_new_tokens=int(r["max_new_tokens"]),
+                temperature=float(r["temperature"]), eos=int(r["eos"]),
+                ttft_slo=r["ttft_slo"], priority=int(r["priority"]),
+                ttft_deadline_s=r["ttft_deadline_s"],
+                deadline_s=r["deadline_s"])
+            produced = [int(t) for t in d["produced"]]
+            if d["phase"] == "decode" and produced:
+                full = np.asarray([int(t) for t in r["prompt"]]
+                                  + produced, np.int32)
+            else:
+                # queued / mid-prefill: produced == the entry's resume
+                # tokens, already inside its recorded admission prompt
+                full = np.asarray(d["full_prompt"], np.int32)
+            if req.ttft_deadline_s is not None or req.deadline_s is not None:
+                self._deadlines = True
+            ent = _Pending(req=req, t_submit=now, full_prompt=full,
+                           resume_tokens=produced,
+                           ttft_steps=int(d["ttft_steps"]),
+                           preemptions=int(d["preemptions"]))
+            with self._cv:
+                self._pending.append(ent)
+                self._cv.notify()
+            n += 1
+        self._c_res_restores.inc(n)
+        if self._tr.enabled:
+            self._tr.event("restore", step=self.steps + self.chunk_steps,
+                           entries=n)
+        return n
+
     # -- the decode step ------------------------------------------------------
 
     def _apply_cow(self) -> None:
@@ -999,7 +1506,9 @@ class ContinuousEngine:
         temps = np.zeros(self.slots, np.float32)
         for i in pre:
             st = self._slots[i]
-            chunk = st.chunks.pop(0)
+            # peek, don't pop: the chunk is consumed only after the
+            # dispatch returns, so a watchdog-retried step re-runs it
+            chunk = st.chunks[0]
             toks[i, :len(chunk)] = chunk
             lens[i] = len(chunk)
             temps[i] = st.req.temperature
@@ -1039,6 +1548,7 @@ class ContinuousEngine:
                                tokens=int(lens[i]))
         for i in pre:
             st = self._slots[i]
+            st.chunks.pop(0)
             self._pos[i] += int(lens[i])
             if st.chunks:
                 continue                       # more chunks next step
@@ -1111,22 +1621,32 @@ class ContinuousEngine:
         """Admit what the policy picks, preempt if it names a victim, run
         at most one prefill-chunk batch (paged) and ONE batched decode
         step over the decoding slots, then finish/refill.  Returns the
-        number of active slots after the step (0 = idle)."""
+        number of active slots after the step (0 = idle).
+
+        Every jitted dispatch runs under the step watchdog
+        (``_dispatch_guarded``): a failing dispatch never kills the
+        engine — it is retried next step or its requests are
+        quarantined — except :class:`EngineCrash` (warm-restart drill)
+        and :class:`PoolAuditError`, which always propagate."""
+        self._ticks += 1
+        if self._cancels or self._deadlines:
+            self._service_guards()
         self._admit()
         if self.paged:
             self._maybe_preempt()
             pre = [i for i, s in enumerate(self._slots)
                    if s is not None and s.phase == "prefill"]
-            if pre:
-                self._prefill_chunk_step(pre)
+            if pre and not self._dispatch_guarded(
+                    "chunk", pre, self._prefill_chunk_step):
+                return self._end_step()     # failed batch retries next step
         active = [i for i, s in enumerate(self._slots)
                   if s is not None and s.phase == "decode"]
         if not active:
             return self._end_step()
         if self.spec is not None:
-            self._spec_step(active)
+            self._dispatch_guarded("verify", active, self._spec_step)
         else:
-            self._decode_step(active)
+            self._dispatch_guarded("decode", active, self._decode_step)
         self._admit()
         return self._end_step()
 
@@ -1203,13 +1723,17 @@ class ContinuousEngine:
         ks: dict[int, int] = {}
         run: list[int] = []
         grew = False
+        pressure = False
         for i in active:
             st = self._slots[i]
             remaining = st.req.max_new_tokens - len(st.produced)
             headroom = self.max_len - int(self._pos[i]) - 1
-            k_i = max(0, min(self.spec_k, remaining - 1, headroom))
+            # _spec_k_live <= spec_k: the adaptive-degradation cap
+            # (_note_spec_pressure); the verify SHAPE stays spec_k + 1
+            k_i = max(0, min(self._spec_k_live, remaining - 1, headroom))
             nblk = int(self.pool.n_slot_blocks[i])
             while not self.pool.extend(i, int(self._pos[i]) + k_i + 1):
+                pressure = True
                 if k_i == 0:
                     k_i = -1
                     break
@@ -1220,6 +1744,9 @@ class ContinuousEngine:
             grew |= int(self.pool.n_slot_blocks[i]) != nblk
             ks[i] = k_i
             run.append(i)
+        # note pressure BEFORE the empty-run early-return: a step whose
+        # every denied slot got preempted is maximal pressure, not none
+        self._note_spec_pressure(pressure)
         if not run:
             return
         # writable span BEFORE the draft runs: tables are shared, so the
@@ -1235,6 +1762,12 @@ class ContinuousEngine:
             # the validity bound, so reads through them are masked).
             self._bt = jnp.asarray(self.pool.tables)
         drafts = self.spec.propose(self, run, ks)
+        if self.faults is not None:
+            # draft-corruption seam: garbage drafts cost speculation
+            # efficiency only — verify rejects them, output is unchanged
+            drafts = {i: self.faults.corrupt_drafts(
+                self.steps + self.chunk_steps, d, self.cfg.vocab)
+                for i, d in drafts.items()}
 
         toks = np.zeros((self.slots, L), np.int32)
         lens = np.zeros(self.slots, np.int32)

@@ -109,6 +109,18 @@ def blocks_for(n_tokens: int, block_size: int) -> int:
     return -(-max(0, int(n_tokens)) // block_size)
 
 
+def _hash_to_json(h: tuple) -> list:
+    """Chained prefix hash (nested tuples of ints) -> JSON-safe lists."""
+    return [_hash_to_json(x) if isinstance(x, tuple) else int(x)
+            for x in h]
+
+
+def _hash_from_json(v: list) -> tuple:
+    """Inverse of :func:`_hash_to_json` (lists back to nested tuples)."""
+    return tuple(_hash_from_json(x) if isinstance(x, list) else int(x)
+                 for x in v)
+
+
 @dataclasses.dataclass
 class AdmitPlan:
     """Result of a successful admission reservation."""
@@ -573,21 +585,50 @@ class KVPool:
 
     def snapshot_state(self) -> dict:
         """JSON-serializable dump of the complete pool state — the
-        ``pool`` field of :class:`PoolAuditError` reproducers and of
-        model-checker counterexamples."""
+        ``pool`` field of :class:`PoolAuditError` reproducers, of
+        model-checker counterexamples, and of engine warm-restart
+        snapshots.  ``prefix`` preserves the cache's LRU order (front =
+        coldest) so :meth:`from_snapshot` rebuilds eviction behavior
+        exactly; ``prefix_blocks`` stays for older reproducer readers."""
         return {
             "num_blocks": int(self.num_blocks),
             "block_size": int(self.block_size),
             "slots": int(self.slots),
             "max_len": int(self.max_len),
+            "share_prefixes": bool(self.share_prefixes),
             "free": [int(b) for b in self._free],
             "ref": [int(r) for r in self.ref],
             "tables": self.tables.tolist(),
             "n_slot_blocks": [int(n) for n in self.n_slot_blocks],
             "prefix_blocks": sorted(int(b) for b in self._hash_of),
+            "prefix": [[_hash_to_json(h), int(b)]
+                       for h, b in self._prefix.items()],
             "pending_copies": [[int(s), int(d)]
                                for s, d in self.pending_copies],
         }
+
+    @classmethod
+    def from_snapshot(cls, state: dict) -> "KVPool":
+        """Rebuild a pool from :meth:`snapshot_state` output: identical
+        behavioral state (allocator order, refcounts, tables, prefix
+        cache in LRU order, pending COW copies); telemetry counters
+        restart at zero.  Round-trip identity is a model-checker
+        invariant (``analysis.pool_model``) and the offline half of the
+        warm-restart path (docs/RELIABILITY.md)."""
+        pool = cls(int(state["num_blocks"]), int(state["block_size"]),
+                   slots=int(state["slots"]), max_len=int(state["max_len"]),
+                   share_prefixes=bool(state.get("share_prefixes", True)))
+        pool._free = collections.deque(int(b) for b in state["free"])
+        pool.ref = np.asarray(state["ref"], np.int32)
+        pool.tables = np.asarray(state["tables"], np.int32)
+        pool.n_slot_blocks = np.asarray(state["n_slot_blocks"], np.int32)
+        pool._prefix = collections.OrderedDict(
+            (_hash_from_json(h), int(b))
+            for h, b in state.get("prefix", []))
+        pool._hash_of = {b: h for h, b in pool._prefix.items()}
+        pool.pending_copies = [(int(s), int(d))
+                               for s, d in state["pending_copies"]]
+        return pool
 
     def audit_violations(self) -> list[str]:
         """Every broken invariant, as human-readable strings; empty when

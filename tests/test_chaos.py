@@ -1,0 +1,387 @@
+"""Chaos suite for the serving fault-tolerance plane
+(docs/RELIABILITY.md).
+
+Randomized seeded fault schedules (``FaultPlane.random``) drive the
+paged engine through allocation denials, transient dispatch failures,
+poisoned requests, and mid-trace crashes, checking three invariants on
+every schedule:
+
+  1. every submitted request reaches exactly one terminal Result with a
+     status from ``RESULT_STATUSES``;
+  2. the pool's audit predicate is clean at the end (no leak, no
+     double-free, no dangling COW copy — whatever the faults did);
+  3. requests the faults did not terminate (``status == "ok"``) finish
+     token-identical to a fault-free run (greedy determinism survives
+     retries, re-admissions, and warm restarts).
+
+A failing schedule is dumped to ``experiments/chaos/`` as JSON
+(``FaultPlane.to_schedule`` + seed) so it replays exactly via
+``FaultPlane.from_schedule``.  Deterministic unit tests cover each
+lifecycle guard — cancel, deadlines, shedding, bounded admission retry,
+quarantine, spec_k degradation — and the snapshot/restore warm-restart
+contract gated here and in serve_bench's ``paged_chaos`` row.
+"""
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+import jax
+import pytest
+
+from repro import configs as CONFIGS
+from repro.models import network as N
+from repro.serving.engine import ContinuousEngine, Request
+from repro.serving.resilience import (RESULT_STATUSES, EngineCrash,
+                                      FaultPlane, FaultSpec,
+                                      InjectedFault, ResilienceConfig,
+                                      serve_with_restarts)
+
+KEY = jax.random.PRNGKey(0)
+DUMP_DIR = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "experiments", "chaos")
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = CONFIGS.get("qwen2_0_5b").scaled_down()
+    params = N.init(cfg, KEY)
+    return cfg, params
+
+
+def _req(rid, plen, max_new, vocab, seed=None, **kw):
+    rng = np.random.default_rng(seed if seed is not None else rid)
+    return Request(rid=rid,
+                   prompt=rng.integers(3, vocab, plen).astype(np.int32),
+                   max_new_tokens=max_new, eos=-1, **kw)
+
+
+def _reqs(vocab, n=4, plen=20, max_new=4):
+    return [_req(i, plen, max_new, vocab) for i in range(n)]
+
+
+def _engine(tiny, *, faults=None, resilience=None, **kw):
+    cfg, params = tiny
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_len", 96)
+    kw.setdefault("audit", True)
+    return ContinuousEngine(cfg, params, faults=faults,
+                            resilience=resilience, **kw)
+
+
+def _run_plain(tiny, reqs, **kw):
+    eng = _engine(tiny, **kw)
+    out = eng.run([dataclasses.replace(r) for r in reqs])
+    return {r.rid: [int(t) for t in r.tokens] for r in out}
+
+
+def _pump(eng, n, max_steps=500):
+    """Step the engine until ``n`` Results exist (no serve thread)."""
+    out = list(eng.drain_results())
+    for _ in range(max_steps):
+        if len(out) >= n:
+            return out
+        eng.step()
+        out.extend(eng.drain_results())
+    raise AssertionError(f"only {len(out)}/{n} results "
+                         f"after {max_steps} steps")
+
+
+# ---------------------------------------------------------------------------
+# the chaos sweep: randomized seeded schedules, three invariants
+# ---------------------------------------------------------------------------
+
+CHAOS_SEEDS = list(range(24))
+
+
+@pytest.fixture(scope="module")
+def baseline(tiny):
+    """Fault-free greedy outputs for the shared chaos request set."""
+    return _run_plain(tiny, _reqs(tiny[0].vocab))
+
+
+@pytest.mark.parametrize("seed", CHAOS_SEEDS)
+def test_chaos_schedule_invariants(tiny, baseline, seed):
+    cfg, _params = tiny
+    reqs = _reqs(cfg.vocab)
+    plane = FaultPlane.random(seed, rids=[r.rid for r in reqs],
+                              horizon=24)
+    engines: list[ContinuousEngine] = []
+
+    def make_engine():
+        eng = _engine(tiny, faults=plane,
+                      resilience=ResilienceConfig(max_admit_retries=40))
+        engines.append(eng)
+        return eng
+
+    try:
+        results = serve_with_restarts(
+            make_engine, [dataclasses.replace(r) for r in reqs],
+            max_steps=2_000)
+        # 1. every request terminal, with a legal status, exactly once
+        assert sorted(r.rid for r in results) == [r.rid for r in reqs]
+        assert all(r.status in RESULT_STATUSES for r in results)
+        # 2. final pool audit-clean
+        engines[-1].pool.check()
+        # 3. fault-untouched requests token-identical to fault-free run
+        for r in results:
+            if r.status == "ok":
+                assert [int(t) for t in r.tokens] == baseline[r.rid], \
+                    (seed, r.rid, plane.fired)
+        # bookkeeping coherence: a restart happened iff a crash fired
+        crashed = any(f["kind"] == "crash" for f in plane.fired)
+        assert len(engines) == (2 if crashed else 1)
+    except BaseException:
+        os.makedirs(DUMP_DIR, exist_ok=True)
+        path = os.path.join(DUMP_DIR, f"failed_seed{seed}.json")
+        with open(path, "w") as f:
+            json.dump({"seed": seed,
+                       "schedule": plane.to_schedule(),
+                       "fired": plane.fired}, f, indent=1)
+        raise
+
+
+def test_failed_schedule_replays_identically(tiny):
+    """The dump artifact round-trips: from_schedule(to_schedule()) with
+    the same seed fires the same faults and yields the same Results —
+    a chaos failure is a deterministic reproducer, not a flake."""
+    cfg, _params = tiny
+    reqs = _reqs(cfg.vocab)
+    runs = []
+    plane0 = FaultPlane.random(11, rids=[r.rid for r in reqs],
+                               horizon=24)
+    sched = plane0.to_schedule()
+    for _ in range(2):
+        plane = FaultPlane.from_schedule(sched, seed=plane0.seed)
+        results = serve_with_restarts(
+            lambda: _engine(tiny, faults=plane), [
+                dataclasses.replace(r) for r in reqs], max_steps=2_000)
+        runs.append(({r.rid: ([int(t) for t in r.tokens], r.status)
+                      for r in results}, plane.fired))
+    assert runs[0] == runs[1]
+
+
+# ---------------------------------------------------------------------------
+# warm restart: deterministic mid-trace crash, token identity
+# ---------------------------------------------------------------------------
+
+def test_warm_restart_mid_trace_token_identical(tiny, baseline):
+    """The headline recovery gate (also serve_bench's ``paged_chaos``
+    row): crash the engine mid-decode, restore on a fresh one, and every
+    request still finishes ``ok`` with exactly the fault-free tokens."""
+    cfg, _params = tiny
+    reqs = _reqs(cfg.vocab)
+    plane = FaultPlane([FaultSpec("crash", at=6)])
+    engines: list[ContinuousEngine] = []
+
+    def make_engine():
+        engines.append(_engine(tiny, faults=plane))
+        return engines[-1]
+
+    results = serve_with_restarts(
+        make_engine, [dataclasses.replace(r) for r in reqs],
+        max_steps=2_000)
+    assert len(engines) == 2                   # the crash really restarted
+    assert {r.status for r in results} == {"ok"}
+    for r in results:
+        assert [int(t) for t in r.tokens] == baseline[r.rid], r.rid
+    engines[-1].pool.check()
+    assert engines[-1].metrics.value("resilience.restored") > 0
+
+
+def test_crash_without_driver_propagates(tiny):
+    """EngineCrash is NOT absorbed by the step watchdog — without a
+    restart driver it escapes step(), like real process death."""
+    cfg, _params = tiny
+    eng = _engine(tiny, faults=FaultPlane([FaultSpec("crash", at=0)]))
+    eng.submit(_req(0, 8, 2, cfg.vocab))
+    with pytest.raises(EngineCrash):
+        for _ in range(50):
+            eng.step()
+
+
+def test_snapshot_restore_requires_fresh_engine(tiny):
+    cfg, _params = tiny
+    eng = _engine(tiny)
+    eng.submit(_req(0, 8, 2, cfg.vocab))
+    snap = eng.snapshot()
+    assert len(snap["in_flight"]) == 1
+    with pytest.raises(RuntimeError):
+        eng.restore(snap)                      # not fresh: has pending
+
+
+# ---------------------------------------------------------------------------
+# lifecycle guards (deterministic unit tests)
+# ---------------------------------------------------------------------------
+
+def test_cancel_queued_and_running(tiny, baseline):
+    cfg, _params = tiny
+    reqs = _reqs(cfg.vocab)
+    eng = _engine(tiny)
+    for r in reqs:
+        eng.submit(dataclasses.replace(r))
+    assert eng.cancel(99) is False             # unknown rid
+    assert eng.cancel(3) is True               # still queued
+    for _ in range(3):
+        eng.step()
+    running = next(s.req.rid for s in eng._slots if s is not None)
+    assert eng.cancel(running) is True         # mid-flight
+    out = {r.rid: r for r in _pump(eng, len(reqs))}
+    assert eng.cancel(3) is False              # already terminal
+    assert out[3].status == "cancelled" and len(out[3].tokens) == 0
+    assert out[running].status == "cancelled"
+    untouched = set(out) - {3, running}
+    for rid in untouched:
+        assert out[rid].status == "ok"
+        assert [int(t) for t in out[rid].tokens] == baseline[rid]
+    eng.pool.check()
+    assert eng.metrics.value("resilience.cancelled") == 2
+
+
+def test_hard_deadline_times_out(tiny):
+    cfg, _params = tiny
+    eng = _engine(tiny)
+    eng.submit(_req(0, 20, 4, cfg.vocab, deadline_s=0.0))
+    eng.submit(_req(1, 20, 4, cfg.vocab))
+    out = {r.rid: r for r in _pump(eng, 2)}
+    assert set(out) == {0, 1}
+    assert out[0].status == "timeout" and out[1].status == "ok"
+    assert eng.metrics.value("resilience.timeouts") == 1
+    eng.pool.check()
+
+
+def test_load_shedding_and_backpressure(tiny):
+    cfg, _params = tiny
+    eng = _engine(tiny, resilience=ResilienceConfig(max_pending=3))
+    assert eng.backpressure() is False
+    for i in range(6):
+        eng.submit(_req(i, 8, 2, cfg.vocab))
+    assert eng.backpressure() is True
+    shed = [r for r in eng.drain_results() if r.status == "shed"]
+    assert sorted(r.rid for r in shed) == [3, 4, 5]
+    out = shed + _pump(eng, 3)
+    assert len(out) == 6
+    assert eng.metrics.value("resilience.shed") == 3
+    eng.pool.check()
+
+
+def test_poisoned_request_quarantined_alone(tiny, baseline):
+    """A poison fault fails exactly its target; batch-mates re-run and
+    finish ok with fault-free tokens."""
+    cfg, _params = tiny
+    reqs = _reqs(cfg.vocab)
+    plane = FaultPlane([FaultSpec("poison", rid=1, count=1)])
+    eng = _engine(tiny, faults=plane)
+    out = {r.rid: r for r in eng.run(
+        [dataclasses.replace(r) for r in reqs])}
+    assert out[1].status == "failed" and out[1].error == "injected:poison"
+    for rid in set(out) - {1}:
+        assert out[rid].status == "ok"
+        assert [int(t) for t in out[rid].tokens] == baseline[rid]
+    eng.pool.check()
+    assert eng.metrics.value("resilience.quarantined") == 1
+
+
+def test_admission_retries_exhaust_terminally(tiny):
+    """A persistently denied admission fails terminally instead of
+    spinning forever (bounded retry with backoff)."""
+    cfg, _params = tiny
+    plane = FaultPlane([FaultSpec("reserve", at=0, count=100)])
+    eng = _engine(tiny, faults=plane,
+                  resilience=ResilienceConfig(max_admit_retries=3,
+                                              admit_backoff_steps=1))
+    eng.submit(_req(0, 8, 2, cfg.vocab))
+    [r] = _pump(eng, 1)
+    assert r.status == "failed" and "admission failed" in r.error
+    assert eng.metrics.value("resilience.admit_failures") == 4
+    eng.pool.check()
+
+
+def test_transient_dispatch_failure_retries_token_identical(tiny,
+                                                            baseline):
+    """An untargeted dispatch fault is retried next step with no host
+    state mutated — output tokens are unchanged."""
+    cfg, _params = tiny
+    reqs = _reqs(cfg.vocab)
+    plane = FaultPlane([FaultSpec("dispatch", at=5)])
+    eng = _engine(tiny, faults=plane)
+    out = {r.rid: r for r in eng.run(
+        [dataclasses.replace(r) for r in reqs])}
+    assert {r.status for r in out.values()} == {"ok"}
+    for rid, r in out.items():
+        assert [int(t) for t in r.tokens] == baseline[rid]
+    assert eng.metrics.value("resilience.retries") == 1
+    assert eng.metrics.value("resilience.faults_injected") == 1
+    eng.pool.check()
+
+
+def test_spec_degrades_under_pool_pressure_token_identical(tiny):
+    """Injected extend denials halve the live spec_k (opt-in); greedy
+    output is depth-independent so tokens still match the vanilla run."""
+    cfg, _params = tiny
+    reqs = _reqs(cfg.vocab)
+    base = _run_plain(tiny, reqs)
+    plane = FaultPlane([FaultSpec("extend", at=2, count=2)])
+    eng = _engine(tiny, faults=plane, spec="ngram", spec_k=4,
+                  resilience=ResilienceConfig(spec_degrade=True))
+    out = {r.rid: r for r in eng.run(
+        [dataclasses.replace(r) for r in reqs])}
+    for rid, r in out.items():
+        assert [int(t) for t in r.tokens] == base[rid]
+    assert eng.metrics.value("resilience.spec_degrades") >= 1
+    eng.pool.check()
+
+
+def test_draft_corruption_never_changes_tokens(tiny):
+    cfg, _params = tiny
+    reqs = _reqs(cfg.vocab)
+    base = _run_plain(tiny, reqs)
+    plane = FaultPlane([FaultSpec("draft", at=3, count=2)])
+    eng = _engine(tiny, faults=plane, spec="ngram", spec_k=4)
+    out = {r.rid: r for r in eng.run(
+        [dataclasses.replace(r) for r in reqs])}
+    for rid, r in out.items():
+        assert [int(t) for t in r.tokens] == base[rid]
+    eng.pool.check()
+
+
+# ---------------------------------------------------------------------------
+# plane plumbing
+# ---------------------------------------------------------------------------
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError):
+        FaultSpec("meteor")
+    with pytest.raises(ValueError):
+        FaultSpec("dispatch", count=0)
+
+
+def test_random_schedules_deterministic_per_seed():
+    a = FaultPlane.random(5, rids=(0, 1), horizon=16)
+    b = FaultPlane.random(5, rids=(0, 1), horizon=16)
+    assert a.to_schedule() == b.to_schedule()
+    assert a.to_schedule() != FaultPlane.random(6, rids=(0, 1),
+                                                horizon=16).to_schedule()
+    # at most one crash per schedule
+    for seed in range(40):
+        sched = FaultPlane.random(seed).to_schedule()
+        assert sum(s["kind"] == "crash" for s in sched) <= 1
+
+
+def test_classify_error_taxonomy():
+    from repro.serving.kv_pool import PoolAuditError
+    from repro.serving.resilience import classify_error
+    assert classify_error(InjectedFault("poison", rid=3)) == \
+        "injected:poison"
+    assert classify_error(MemoryError("x")) == "resource"
+    assert classify_error(PoolAuditError(["v"], {})) == "audit"
+    assert classify_error(ValueError("x")) == "ValueError"
+
+
+def test_default_resilience_config_is_noop(tiny, baseline):
+    """resilience=None == default config == legacy engine behavior."""
+    cfg, _params = tiny
+    out = _run_plain(tiny, _reqs(cfg.vocab),
+                     resilience=ResilienceConfig())
+    assert out == baseline

@@ -467,3 +467,108 @@ def test_spec_mode_truncate_x_eviction_interleaving():
         ("release", 1, False)])
     assert pool.n_slot_blocks.sum() == 0    # both slots fully released
     pool.check()
+
+
+def test_cancel_mid_flight_with_pending_cow_copies():
+    """Engine-cancel teardown (release with prompt+produced registered)
+    while COW copies are still PENDING: the dying slot's queued copies
+    must be scrubbed — not left dangling against re-allocatable
+    blocks — its exclusively-owned blocks freed, and the produced
+    tokens' full blocks must survive in the prefix cache for re-use.
+    This is the exact release shape ``ContinuousEngine.cancel`` /
+    ``_finish_abnormal`` drive on a decode-phase slot."""
+    pool = KVPool(14, 2, slots=2, max_len=12, share_prefixes=True)
+    p0, p1 = list(_MC_PROMPTS[0]), list(_MC_PROMPTS[1])
+    assert pool.admit(0, p0, 2) is not None
+    pool.release_slot(0, prompt=p0)              # seed the prefix cache
+    assert pool.admit(0, p1, 2) is not None      # shares block (1,2)
+    assert pool.admit(1, p0, 2) is not None      # shares more
+    pool.extend(0, 6)
+    pool.ensure_writable(0, 0, 5)                # fork the shared prefix
+    assert pool.pending_copies                   # copies queued, NOT taken
+    produced = [41, 42]
+    # cancel slot 0 mid-COW: full sequence registered like a preemption
+    pool.release_slot(0, prompt=p1 + produced)
+    assert pool.pending_copies == []             # scrubbed with the slot
+    pool.check()
+    # cancel slot 1 too; every block must return to free/cached
+    pool.release_slot(1, prompt=p0 + produced)
+    pool.check()
+    assert pool.n_slot_blocks.sum() == 0
+    # cancelled sequences' full blocks are skip-prefillable on re-admit
+    plan = pool.admit(0, p1 + produced, 2)
+    assert plan is not None and plan.shared_tokens > 0
+    pool.check()
+
+
+def test_cancel_during_cow_stress_randomized():
+    """Randomized admit/extend/cow/cancel interleavings (audited every
+    transition): whatever order cancellation lands in, the pool never
+    leaks, double-frees, or keeps a pending copy against a freed
+    destination."""
+    rng = np.random.default_rng(7)
+    pool = KVPool(10, 2, slots=3, max_len=10, share_prefixes=True)
+    prompts = [list(p) for p in
+               ((1, 2, 3, 4, 5), (1, 2, 3, 9, 9), (7, 8, 9))]
+    owners = [None] * 3
+    for _ in range(400):
+        s = int(rng.integers(0, 3))
+        if owners[s] is None:
+            pid = int(rng.integers(0, 3))
+            if pool.admit(s, prompts[pid], 3) is not None:
+                owners[s] = pid
+        else:
+            op = int(rng.integers(0, 4))
+            try:
+                if op == 0:
+                    pool.extend(s, int(pool.n_slot_blocks[s]) * 2 + 2)
+                elif op == 1:
+                    hi = max(int(pool.n_slot_blocks[s]) * 2 - 1, 0)
+                    pool.ensure_writable(s, 0, hi)
+                elif op == 2:
+                    pool.take_copies()
+                else:                            # cancel mid-flight
+                    pool.release_slot(
+                        s, prompt=prompts[owners[s]] + [50, 51])
+                    owners[s] = None
+            except MemoryError:
+                pass
+        pool.check()
+    for s in range(3):
+        if owners[s] is not None:
+            pool.release_slot(s)
+    pool.check()
+
+
+def test_snapshot_from_snapshot_round_trip():
+    """from_snapshot(snapshot_state()) reproduces the full behavioral
+    state: allocator ORDER, refs, tables, prefix cache in LRU order,
+    pending copies — then behaves identically going forward (the
+    warm-restart serialization contract)."""
+    pool = _mc_pool()
+    p0, p1 = list(_MC_PROMPTS[0]), list(_MC_PROMPTS[1])
+    assert pool.admit(0, p0, 2) is not None
+    pool.release_slot(0, prompt=p0)
+    assert pool.admit(0, p1, 2) is not None
+    pool.extend(0, 6)
+    pool.ensure_writable(0, 0, 5)                # leave copies pending
+    snap = pool.snapshot_state()
+    twin = KVPool.from_snapshot(snap)
+    assert list(twin._free) == list(pool._free)  # allocator order
+    assert (twin.ref == pool.ref).all()
+    assert (twin.tables == pool.tables).all()
+    assert list(twin._prefix.items()) == list(pool._prefix.items())
+    assert twin.pending_copies == pool.pending_copies
+    twin.check()
+    # identical futures: same ops on both sides stay in lock-step
+    for p in (pool, twin):
+        p.take_copies()
+        p.release_slot(0, prompt=p1 + [60])
+        assert p.admit(1, p0, 2) is not None
+    assert (twin.tables == pool.tables).all()
+    assert list(twin._free) == list(pool._free)
+    pool.check(), twin.check()
+    # snapshots are JSON-serializable end to end (reproducer contract)
+    import json
+    assert KVPool.from_snapshot(
+        json.loads(json.dumps(snap))).snapshot_state() == snap

@@ -22,7 +22,8 @@ from repro.core.pgemm import PGEMM
 from repro.core.precision import BP16, INT8, INT16
 from repro.runtime.faults import (FailureInjector, HeartbeatConfig,
                                   HeartbeatMonitor, HostState,
-                                  plan_elastic_mesh, run_with_restarts)
+                                  RestartPolicy, plan_elastic_mesh,
+                                  run_with_restarts)
 
 
 # ---------------------------------------------------------------------------
@@ -188,6 +189,7 @@ def test_plan_elastic_mesh():
 
 def test_run_with_restarts_resumes():
     calls = []
+    slept = []
 
     def loop(start):
         calls.append(start)
@@ -196,9 +198,37 @@ def test_run_with_restarts_resumes():
         return 10
 
     reached = run_with_restarts(loop, start_step=0, final_step=10,
-                                on_restart=lambda s, e: 3)
+                                on_restart=lambda s, e: 3,
+                                sleep=slept.append)
     assert reached == 10
     assert calls == [0, 3]
+    # backoff_s is honored (through the injected sleep, so the test
+    # stays instant): one restart => one base-delay sleep
+    assert slept == [RestartPolicy().backoff_s]
+
+
+def test_restart_policy_backoff_schedule():
+    pol = RestartPolicy(backoff_s=2.0, backoff_max_s=9.0, jitter=0.5)
+    assert [pol.delay_s(n) for n in (1, 2, 3, 4)] == [2.0, 4.0, 8.0, 9.0]
+    assert pol.delay_s(2, u=1.0) == 4.0 * 1.5           # jittered up
+    assert pol.delay_s(2, u=-1.0) == 4.0 * 0.5          # jittered down
+    assert RestartPolicy(backoff_s=0.0).delay_s(5) == 0.0
+
+
+def test_run_with_restarts_skips_sleep_at_zero_backoff():
+    calls = []
+    slept = []
+
+    def loop(start):
+        calls.append(start)
+        if len(calls) < 3:
+            raise RuntimeError("boom")
+        return 10
+
+    run_with_restarts(loop, start_step=0, final_step=10,
+                      policy=RestartPolicy(backoff_s=0.0),
+                      on_restart=lambda s, e: 0, sleep=slept.append)
+    assert slept == []
 
 
 def test_failure_injector_fires_once():
@@ -207,6 +237,27 @@ def test_failure_injector_fires_once():
     with pytest.raises(RuntimeError):
         inj.maybe_fail(5)
     inj.maybe_fail(5)  # second pass: already fired
+
+
+def test_failure_injector_count_budget():
+    """count=N means N consecutive firings at the same step value —
+    the shape dispatch-retry fault schedules rely on."""
+    inj = FailureInjector(fail_at_steps=(3,), count=2)
+    for _ in range(2):
+        with pytest.raises(RuntimeError):
+            inj.maybe_fail(3)
+    inj.maybe_fail(3)                          # budget exhausted
+    assert inj.fired == {3}
+
+
+def test_failure_injector_custom_exception():
+    class Boom(Exception):
+        pass
+
+    inj = FailureInjector(fail_at_steps=(1,),
+                          exc=lambda step: Boom(str(step)))
+    with pytest.raises(Boom):
+        inj.maybe_fail(1)
 
 
 # ---------------------------------------------------------------------------

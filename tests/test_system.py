@@ -12,7 +12,7 @@ import pytest
 from repro import configs as CONFIGS
 from repro.launch.train import TrainConfig, train
 from repro.models import network as N
-from repro.runtime.faults import FailureInjector
+from repro.runtime.faults import FailureInjector, RestartPolicy
 from repro.serving.engine import Engine, Request
 
 
@@ -38,7 +38,8 @@ def test_restart_exactness_with_injected_failures():
             tempfile.TemporaryDirectory() as d2:
         clean = train(cfg, TrainConfig(ckpt_dir=d1, **base))
         faulty = train(cfg, TrainConfig(ckpt_dir=d2, **base),
-                       injector=FailureInjector(fail_at_steps=(6,)))
+                       injector=FailureInjector(fail_at_steps=(6,)),
+                       restart_policy=RestartPolicy(backoff_s=0.0))
         assert clean["loss"] == pytest.approx(faulty["loss"], abs=1e-5)
 
 
