@@ -22,6 +22,15 @@ must validate as Chrome trace-event JSON, the registry must agree with
 the results, and the enabled run must stay within 5% of the untraced
 wall (min-of-3 alternating runs).
 
+A QUANTIZED-SERVING row (``paged_quant``) serves the same shared-prefix
+trace through a ``cfg.quant_serving`` engine — int8 QuantTensor weights,
+int8 KV blocks with per-position scale sidecars, scheduled GEMM backend
+— and gates the pool-bytes win (allocated KV <= 0.5x the fp paged row),
+greedy token agreement with the fp reference (>= 99% of positions), and
+a 100% schedule-cache hit rate over the timed run (the INT8 shapes are
+pre-resolved at engine construction).  The positional drift breakdown
+is written to ``experiments/bench/quant_drift*.json``.
+
 A second OVERLOAD trace exercises the scheduling-policy subsystem
 (``serving.policy``): two long-decode hogs seize the slots, an oversized
 reservation blocks the queue head, and short TTFT-SLO chat turns pile up
@@ -341,11 +350,14 @@ def run_bench(n_requests: int, slots: int, max_len: int,
 
     trows, tfail = run_telemetry_bench(cfg, params, slots, max_len, reqs,
                                        tokens_by_engine["paged"])
+    qrows, qfail = run_quant_bench(cfg, params, slots, max_len, reqs,
+                                   tokens_by_engine["paged"],
+                                   by["paged"]["kv_allocated_bytes"])
     prows, pfail = run_policy_bench(cfg, params, slots, n_requests=12)
     srows, sfail = run_spec_bench(cfg, params, slots)
     crows, cfail = run_chaos_bench(cfg, params, slots)
-    return (rows + trows + prows + srows + crows,
-            failures + tfail + pfail + sfail + cfail)
+    return (rows + trows + qrows + prows + srows + crows,
+            failures + tfail + qfail + pfail + sfail + cfail)
 
 
 #: enabled-tracing slowdown bound: the lifecycle tracer + registry must
@@ -436,6 +448,118 @@ def run_telemetry_bench(cfg, params, slots: int, max_len: int, reqs,
             f"enabled tracing cost {frac*100:.1f}% wall vs untraced "
             f"(bound {TELEMETRY_OVERHEAD_BOUND*100:.0f}%) — hot-path "
             f"hooks are not cheap enough")
+    return [row], failures
+
+
+#: quantized-serving gates: the int8 KV pool must at least HALVE the
+#: pool's allocated bytes at equal resident tokens (fp32 KV -> int8 + a
+#: per-position f32 scale sidecar is 0.28x, so 0.5x has headroom for
+#: wider sidecar layouts), and greedy output must match the fp paged
+#: reference at >= 99% of positions over the shared-prefix trace.
+QUANT_POOL_BYTES_BOUND = 0.5
+QUANT_TOKEN_MATCH_FLOOR = 0.99
+
+
+def run_quant_bench(cfg, params, slots: int, max_len: int, reqs,
+                    ref_tokens, ref_kv_alloc: int):
+    """Quantized serving row (``paged_quant``): the shared-prefix trace
+    through a ``quant_serving`` engine — int8 QuantTensor weights
+    (policy ``min_size=0``: at scaled-down geometry every projection is
+    below the production size floor), int8 KV blocks with per-position
+    scale sidecars, and the scheduled GEMM backend so the INT8 schedule
+    path is what actually dispatches.  Gates: pool-bytes win vs the fp
+    paged row, greedy token agreement with the fp reference, and a 100%
+    schedule-cache hit rate over the timed run (weight-quant shapes are
+    pre-resolved under INT8 at engine construction).
+
+    Accuracy methodology (docs/QUANTIZATION.md): the drift metric is
+    POSITIONAL greedy agreement over full trajectories — once one
+    position flips, the suffix diverges freely, so the reported rate is
+    a conservative lower bound on per-step agreement.  The per-request
+    first-divergence indices go into the drift report artifact."""
+    import dataclasses
+
+    from repro.quant import QuantPolicy, quant_fraction
+    from repro.serving.engine import ContinuousEngine
+
+    cfg_q = dataclasses.replace(
+        cfg, quant_serving=True, gemm_backend="scheduled",
+        name=cfg.name + "+int8").validate()
+    pol = QuantPolicy(min_size=0)
+
+    def make():
+        return ContinuousEngine(cfg_q, params, slots=slots,
+                                max_len=max_len, audit=True,
+                                quant_policy=pol)
+
+    # warmup traces the quant programs once (jit cache is per config)
+    # and fills the per-config scheduled-backend store
+    make().run([dataclasses.replace(r) for r in reqs])
+    eng = make()
+    # construction pre-resolved every steady-state shape (fp + INT8 +
+    # the §5 explorer's pick); zero the counters so the hit-rate gate
+    # sees the timed run alone
+    eng.schedule.reset()
+    t0 = time.perf_counter()
+    res = eng.run([dataclasses.replace(r) for r in reqs])
+    row = _summarize("paged_quant", res, time.perf_counter() - t0, eng)
+    row["pool"] = eng.pool.stats()
+    st = eng.schedule.stats()
+    row["schedule_hit_rate_run"] = round(
+        st["hits"] / max(st["hits"] + st["misses"], 1), 4)
+    row["precision_plan"] = sorted(set(eng.precision_plan.values()))
+    row["quant_param_fraction"] = round(quant_fraction(eng.params), 4)
+
+    # positional greedy agreement vs the fp paged reference
+    per_req, matched, total = {}, 0, 0
+    for rid, ref in ref_tokens.items():
+        got = next((list(map(int, r.tokens)) for r in res
+                    if r.rid == rid), [])
+        m = sum(int(a == b) for a, b in zip(ref, got))
+        first_div = next((i for i, (a, b) in enumerate(zip(ref, got))
+                          if a != b), None)
+        per_req[rid] = {"len": len(ref), "matched": m,
+                        "first_divergence": first_div}
+        matched += m
+        total += len(ref)
+    rate = matched / max(total, 1)
+    ratio = row["kv_allocated_bytes"] / max(ref_kv_alloc, 1)
+    row["token_match_rate"] = round(rate, 4)
+    row["token_match_ok"] = rate >= QUANT_TOKEN_MATCH_FLOOR
+    row["kv_bytes_ratio"] = round(ratio, 4)
+    row["pool_bytes_ok"] = ratio <= QUANT_POOL_BYTES_BOUND
+    row["drift"] = {
+        "config": cfg_q.name,
+        "reference": "paged (fp weights, fp KV), greedy",
+        "positions_compared": total,
+        "positions_matched": matched,
+        "token_match_rate": row["token_match_rate"],
+        "token_match_floor": QUANT_TOKEN_MATCH_FLOOR,
+        "kv_bytes_ratio": row["kv_bytes_ratio"],
+        "quant_param_fraction": row["quant_param_fraction"],
+        "per_request": per_req,
+    }
+
+    failures = []
+    if not row["pool_bytes_ok"]:
+        failures.append(
+            f"quantized KV pool allocates {ratio:.2f}x the fp pool's "
+            f"bytes (bound {QUANT_POOL_BYTES_BOUND}x) — int8 blocks + "
+            f"scale sidecars failed to halve the pool")
+    if not row["token_match_ok"]:
+        failures.append(
+            f"quantized greedy output matches fp at {rate:.4f} of "
+            f"positions (floor {QUANT_TOKEN_MATCH_FLOOR}) — "
+            f"quantization drift is over budget")
+    if row["schedule_hit_rate_run"] < 1.0:
+        failures.append(
+            f"quant engine explored the schedule space during the timed "
+            f"run ({st['misses']} misses) — INT8 shapes are not "
+            f"pre-resolved at construction")
+    try:
+        eng.pool.check()
+    except Exception as e:  # noqa: BLE001 - report, don't crash the bench
+        failures.append(f"quantized pool audit failed: {e}")
     return [row], failures
 
 
@@ -717,6 +841,14 @@ def main(argv=None) -> int:
     art = "serve_bench_smoke.json" if args.dry else "serve_bench.json"
     with open(os.path.join(ART_DIR, art), "w") as f:
         json.dump(rows, f, indent=2)
+    # the quant accuracy-drift report is its own artifact (CI uploads it
+    # next to the bench trajectories)
+    drift = next((r["drift"] for r in rows
+                  if r["engine"] == "paged_quant"), None)
+    if drift is not None:
+        dart = "quant_drift_smoke.json" if args.dry else "quant_drift.json"
+        with open(os.path.join(ART_DIR, dart), "w") as f:
+            json.dump(drift, f, indent=2)
 
     for r in rows:
         print(f"serve_{r['engine']},{r['wall_s']*1e6:.0f},"
@@ -757,6 +889,14 @@ def main(argv=None) -> int:
           f"{TELEMETRY_OVERHEAD_BOUND*100:.0f}%; {tl['trace_events']} "
           f"trace events, {tl['trace_dropped']} dropped; registry counted "
           f"{tl['registry']['engine.tokens_emitted']:.0f} tokens)")
+    qt = by["paged_quant"]
+    print(f"quantized serving: pool bytes {qt['kv_bytes_ratio']:.2f}x fp "
+          f"(bound {QUANT_POOL_BYTES_BOUND}x), greedy match "
+          f"{qt['token_match_rate']*100:.1f}% (floor "
+          f"{QUANT_TOKEN_MATCH_FLOOR*100:.0f}%), schedule hit rate "
+          f"{qt['schedule_hit_rate_run']*100:.0f}%, "
+          f"{qt['quant_param_fraction']*100:.0f}% of param bytes int8, "
+          f"precisions {qt['precision_plan']}")
     pf, pb, ps = (by["policy_fifo"], by["policy_best_fit"],
                   by["policy_slo_preempt"])
     print(f"policy overload: pool util fifo {pf['avg_pool_util']:.2f} -> "

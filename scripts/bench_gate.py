@@ -50,6 +50,16 @@ CHECKS = [
     ("serve", "engine=paged_spec_model.decode_steps", "lower", 0.10),
     ("serve", "engine=paged_spec_ngram.spec.avg_accept_len", "higher", 0.10),
     ("serve", "engine=paged_spec_model.spec.avg_accept_len", "higher", 0.05),
+    # quantized serving (paged_quant row): the pool-bytes win and the
+    # greedy-agreement floor are computed in-process by serve_bench
+    # against its own fp reference (booleans gated); the raw rates are
+    # also gated so a drift INSIDE the floor still shows up as a
+    # trajectory regression
+    ("serve", "engine=paged_quant.pool_bytes_ok", "true", 0.0),
+    ("serve", "engine=paged_quant.token_match_ok", "true", 0.0),
+    ("serve", "engine=paged_quant.token_match_rate", "higher", 0.01),
+    ("serve", "engine=paged_quant.kv_bytes_ratio", "lower", 0.05),
+    ("serve", "engine=paged_quant.schedule_hit_rate_run", "higher", 0.0),
     # telemetry: enabled tracing must stay within the serve_bench bound
     # (the row computes the A/B in-process from min-of-N alternating
     # walls; the boolean is what gets gated, never the raw wall numbers)

@@ -36,6 +36,7 @@ WEIGHTS = {
     "test_gemm_backend.py": 34,
     "test_substrates.py": 24,
     "test_paged_attention.py": 21,
+    "test_quant_serving.py": 40,
     "test_moe_distributed.py": 15,
     "test_hloanalysis.py": 7,
     "test_kv_pool.py": 7,

@@ -77,9 +77,20 @@ def main(argv=None) -> int:
         for name in names:
             findings += p1(get(name))
     if "jaxpr" in passes:
+        import dataclasses
+
         from repro.analysis.jaxpr_lint import check_config as p2
         for name in names:
-            findings += p2(get(name))
+            cfg = get(name)
+            findings += p2(cfg)
+            # quantized-serving variant: the same hot dispatches traced
+            # with QuantTensor weights and int8 KV pools — this is the
+            # config family the quant-fp32-promotion rule exists for,
+            # and the registry configs never set quant_serving
+            if not cfg.is_encoder_only:
+                findings += p2(dataclasses.replace(
+                    cfg, quant_serving=True,
+                    name=cfg.name + "+int8").validate())
     if "pool" in passes:
         from repro.analysis.pool_model import ModelCheckConfig, check_pool
         findings += check_pool(ModelCheckConfig(),

@@ -19,6 +19,8 @@
 # smoke: tiny config, 4 requests sharing a prompt prefix — asserts block
 # reuse actually happened, plus an ngram speculative run over the same
 # engine shape asserting identical tokens in fewer dispatches, plus a
+# quantized-serving run (int8 weights + int8 KV with scale sidecars)
+# asserting >= 99% greedy agreement at <= 0.5x KV bytes, plus a
 # chaos smoke: the same trace under an injected allocation denial and a
 # mid-trace crash, asserting token-identical recovery through
 # serve_with_restarts (docs/RELIABILITY.md).  CI diffs
@@ -86,6 +88,34 @@ ss = sp.spec_stats()
 print(f"[smoke] spec engine OK: {ss['tokens_emitted']} tokens in "
       f"{ss['verify_steps']} verify dispatches (vanilla {eng.steps}), "
       f"avg accept len {ss['avg_accept_len']:.2f}")
+
+# quantized-serving smoke: the same trace through a quant_serving engine
+# (int8 QuantTensor weights via min_size=0 — scaled-down projections are
+# below the production floor — plus int8 KV blocks with scale sidecars).
+# Greedy output must match the fp engine at >= 99% of positions, the
+# pool must allocate <= 0.5x the fp engine's KV bytes, and the audit-
+# mode pool check must hold (docs/QUANTIZATION.md).
+import dataclasses
+from repro.quant import QuantPolicy
+
+cfgq = dataclasses.replace(cfg, quant_serving=True,
+                           name=cfg.name + "+int8").validate()
+qe = ContinuousEngine(cfgq, params, slots=2, max_len=96, audit=True,
+                      quant_policy=QuantPolicy(min_size=0))
+qres = qe.run([Request(rid=r.rid, prompt=r.prompt.copy(),
+                       max_new_tokens=r.max_new_tokens, eos=r.eos)
+               for r in reqs])
+qtok = {r.rid: list(map(int, r.tokens)) for r in qres}
+match = sum(int(a == b) for rid in base
+            for a, b in zip(base[rid], qtok[rid]))
+total = sum(len(v) for v in base.values())
+assert match / total >= 0.99, (match, total)
+ratio = qe.kv_bytes()["allocated"] / kv["allocated"]
+assert ratio <= 0.5, ratio
+assert qe.pool.stats()["quantized"], qe.pool.stats()
+qe.pool.check()
+print(f"[smoke] quant engine OK: {match}/{total} greedy tokens match fp, "
+      f"KV bytes {ratio:.2f}x fp, pool audit clean")
 
 # chaos smoke: the same trace under an injected allocation denial and a
 # mid-trace engine crash — serve_with_restarts must warm-restart into a

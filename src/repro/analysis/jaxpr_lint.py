@@ -109,6 +109,15 @@ def abstract_engine_inputs(cfg: ModelConfig, *, slots: int = SLOTS,
     per_slot = blocks_for(max_len, block_size)
     kv_blocks = max(per_slot + 1, 1 + (3 * slots * per_slot + 3) // 4)
     params = jax.eval_shape(lambda: N.init(cfg, jax.random.PRNGKey(0)))
+    if cfg.quant_serving:
+        # mirror the engine: ContinuousEngine rewrites the weight tree
+        # through the default QuantPolicy before any jitted program
+        # closes over it, so the linted dispatches must trace with the
+        # same QuantTensor leaves (that is what arms the
+        # quant-fp32-promotion rule on the real int8 dequant paths)
+        from repro.quant import serving_quant_params
+        params = jax.eval_shape(
+            lambda p: serving_quant_params(cfg, p), params)
     caches = jax.eval_shape(lambda: N.expand_cache_pos(
         N.init_paged_caches(cfg, slots, kv_blocks, block_size), slots))
     i32 = jnp.int32

@@ -56,6 +56,9 @@ class ModelCheckConfig:
                                             (7, 8, 9))
     max_new_tokens: int = 2
     share_prefixes: bool = True
+    #: quantized block mode: explores the scale-sidecar invariant
+    #: (``KVPool.scale_written``) alongside the refcount invariants
+    quantized: bool = False
     #: tokens a hypothetical decode produced before a ``cancel`` op —
     #: cancellation releases with prompt+produced registered, the exact
     #: shape of ``ContinuousEngine.cancel`` tearing down a decode slot
@@ -64,7 +67,8 @@ class ModelCheckConfig:
     def make_pool(self, pool_cls: type = KVPool) -> KVPool:
         return pool_cls(self.num_blocks, self.block_size, slots=self.slots,
                         max_len=self.max_len,
-                        share_prefixes=self.share_prefixes)
+                        share_prefixes=self.share_prefixes,
+                        quantized=self.quantized)
 
 
 @dataclasses.dataclass
@@ -92,6 +96,8 @@ def _clone(pool: KVPool) -> KVPool:
     p.max_len = pool.max_len
     p.blocks_per_slot = pool.blocks_per_slot
     p.share_prefixes = pool.share_prefixes
+    p.quantized = pool.quantized
+    p.scale_written = pool.scale_written.copy()
     p._free = collections.deque(pool._free)
     p.ref = pool.ref.copy()
     p.tables = pool.tables.copy()
@@ -114,6 +120,7 @@ def _state_key(pool: KVPool, owners: tuple) -> tuple:
             pool.ref.tobytes(),
             pool.tables.tobytes(),
             pool.n_slot_blocks.tobytes(),
+            pool.scale_written.tobytes(),
             tuple(pool._prefix.items()),
             tuple(pool.pending_copies),
             owners)
@@ -373,6 +380,27 @@ class BuggyPoolLeakyRelease(KVPool):
         self.n_slot_blocks[slot] = 0
 
 
+class BuggyPoolStaleScaleSidecar(KVPool):
+    """Quantized mode: the release path forgets to clear the dequant
+    sidecar flag, so a freed block re-enters circulation still marked
+    scale-written — the next owner could dequant the previous owner's
+    scales before its first write (the quantized use-after-free).
+    Forces ``quantized=True`` so the default checker geometry reaches
+    the sidecar invariant."""
+
+    def __init__(self, *args, **kwargs):
+        kwargs["quantized"] = True
+        super().__init__(*args, **kwargs)
+
+    def _release_one(self, bid: int) -> None:
+        if bid == NULL_BLOCK:
+            return
+        self.ref[bid] -= 1
+        if self.ref[bid] == 0:
+            # BUG: scale_written[bid] stays set across the free
+            self._free.append(bid)
+
+
 #: mutant registry: rule id -> class (the CLI's --seeded self-test and
 #: the unit tests iterate this)
 SEEDED_BUGS: dict[str, type] = {
@@ -380,24 +408,34 @@ SEEDED_BUGS: dict[str, type] = {
     "truncate-stale-pending-copy": BuggyPoolNoScrub,
     "evict-while-shared": BuggyPoolEvictShared,
     "release-leaks-block": BuggyPoolLeakyRelease,
+    "stale-scale-sidecar": BuggyPoolStaleScaleSidecar,
 }
 
 
 def check_pool(cfg: ModelCheckConfig | None = None, *,
                max_states: int = 50_000,
                pool_cls: type = KVPool) -> list:
-    """gta-lint entry point: findings for the (by default real) pool."""
+    """gta-lint entry point: findings for the (by default real) pool.
+
+    Explores the given geometry twice — fp and quantized block mode —
+    unless the caller already pinned ``quantized``: the scale-sidecar
+    invariant only exists in quantized pools, and both modes ship."""
     from repro.analysis import Finding
     cfg = cfg or ModelCheckConfig()
-    res = explore(cfg, max_states=max_states, pool_cls=pool_cls)
+    variants = [cfg]
+    if not cfg.quantized:
+        variants.append(dataclasses.replace(cfg, quantized=True))
     out = []
-    if not res.ok:
-        ce = res.counterexample or {}
-        trace = " -> ".join(":".join(str(x) for x in op)
-                            for op in ce.get("trace", []))
-        out.append(Finding(
-            "pool", "invariant-violation", f"trace[{trace}]",
-            f"{'; '.join(ce.get('violations', []))} "
-            f"(after {res.states_explored} states); reproduce with "
-            f"analysis.pool_model.replay({ce.get('trace')!r})"))
+    for var in variants:
+        res = explore(var, max_states=max_states, pool_cls=pool_cls)
+        if not res.ok:
+            ce = res.counterexample or {}
+            trace = " -> ".join(":".join(str(x) for x in op)
+                                for op in ce.get("trace", []))
+            mode = "quant" if var.quantized else "fp"
+            out.append(Finding(
+                "pool", "invariant-violation", f"{mode}/trace[{trace}]",
+                f"{'; '.join(ce.get('violations', []))} "
+                f"(after {res.states_explored} states); reproduce with "
+                f"analysis.pool_model.replay({ce.get('trace')!r})"))
     return out

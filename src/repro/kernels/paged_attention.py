@@ -58,10 +58,15 @@ def _softcap(x: jax.Array, cap: float | None) -> jax.Array:
 # Pallas kernel
 # ---------------------------------------------------------------------------
 
-def _paged_decode_body(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-                       m_ref, l_ref, acc_ref, *, block_size: int,
-                       scale: float, window: int | None,
-                       logit_cap: float | None, out_dtype):
+def _paged_decode_body(bt_ref, len_ref, q_ref, k_ref, v_ref, *rest,
+                       block_size: int, scale: float, window: int | None,
+                       logit_cap: float | None, out_dtype,
+                       quantized: bool):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        ks_ref = vs_ref = None
+        o_ref, m_ref, l_ref, acc_ref = rest
     b, j = pl.program_id(0), pl.program_id(1)
     nbs = pl.num_programs(1)
 
@@ -79,6 +84,12 @@ def _paged_decode_body(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         q = q_ref[0].astype(jnp.float32) * scale          # (KV, G, hd)
         k = k_ref[0].astype(jnp.float32)                  # (bs, KV, hd)
         v = v_ref[0].astype(jnp.float32)                  # (bs, KV, hdv)
+        if quantized:
+            # dequant fused into the block fetch: the int8 payload and
+            # its per-(position, kv-head) scales arrive in the same DMA
+            # schedule, and the fp32 K/V tile never exists in HBM
+            k = k * ks_ref[0][..., None]
+            v = v * vs_ref[0][..., None]
         s = jax.lax.dot_general(                          # (KV, G, bs)
             q, k, (((2,), (2,)), ((0,), (1,))),
             preferred_element_type=jnp.float32)
@@ -113,26 +124,43 @@ def paged_decode_kernel(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                         block_table: jax.Array, lengths: jax.Array, *,
                         scale: float, window: int | None = None,
                         logit_cap: float | None = None,
-                        interpret: bool = False) -> jax.Array:
+                        interpret: bool = False,
+                        k_scale: jax.Array | None = None,
+                        v_scale: jax.Array | None = None) -> jax.Array:
     """Pallas paged-decode attention.
 
     q (B, KV, G, hd); k_pool (nb, bs, KV, hd); v_pool (nb, bs, KV, hdv);
     block_table (B, nbs) int32; lengths (B,) int32 -> out (B, KV, G, hdv).
+    With ``k_scale``/``v_scale`` (nb, bs, KV) the pools are int8 and the
+    dequant (payload * scale) is fused into the per-block fetch.
     """
     B, KV, G, hd = q.shape
     nb, bs, _, hdv = v_pool.shape
     nbs = block_table.shape[1]
+    quantized = k_scale is not None
+
+    in_specs = [
+        pl.BlockSpec((1, KV, G, hd), lambda b, j, bt, ln: (b, 0, 0, 0)),
+        pl.BlockSpec((1, bs, KV, hd),
+                     lambda b, j, bt, ln: (bt[b, j], 0, 0, 0)),
+        pl.BlockSpec((1, bs, KV, hdv),
+                     lambda b, j, bt, ln: (bt[b, j], 0, 0, 0)),
+    ]
+    args = [block_table.astype(jnp.int32), lengths.astype(jnp.int32),
+            q, k_pool, v_pool]
+    if quantized:
+        in_specs += [
+            pl.BlockSpec((1, bs, KV),
+                         lambda b, j, bt, ln: (bt[b, j], 0, 0)),
+            pl.BlockSpec((1, bs, KV),
+                         lambda b, j, bt, ln: (bt[b, j], 0, 0)),
+        ]
+        args += [k_scale, v_scale]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, nbs),
-        in_specs=[
-            pl.BlockSpec((1, KV, G, hd), lambda b, j, bt, ln: (b, 0, 0, 0)),
-            pl.BlockSpec((1, bs, KV, hd),
-                         lambda b, j, bt, ln: (bt[b, j], 0, 0, 0)),
-            pl.BlockSpec((1, bs, KV, hdv),
-                         lambda b, j, bt, ln: (bt[b, j], 0, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, KV, G, hdv),
                                lambda b, j, bt, ln: (b, 0, 0, 0)),
         scratch_shapes=[
@@ -143,14 +171,13 @@ def paged_decode_kernel(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     )
     body = functools.partial(_paged_decode_body, block_size=bs, scale=scale,
                              window=window, logit_cap=logit_cap,
-                             out_dtype=q.dtype)
+                             out_dtype=q.dtype, quantized=quantized)
     return pl.pallas_call(
         body,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, KV, G, hdv), q.dtype),
         interpret=interpret,
-    )(block_table.astype(jnp.int32), lengths.astype(jnp.int32),
-      q, k_pool, v_pool)
+    )(*args)
 
 
 # ---------------------------------------------------------------------------
@@ -172,7 +199,9 @@ def gather_pool_blocks(buf: jax.Array, block_table: jax.Array) -> jax.Array:
 def gather_fallback(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                     block_table: jax.Array, lengths: jax.Array, *,
                     scale: float, window: int | None = None,
-                    logit_cap: float | None = None) -> jax.Array:
+                    logit_cap: float | None = None,
+                    k_scale: jax.Array | None = None,
+                    v_scale: jax.Array | None = None) -> jax.Array:
     """Same contract as :func:`paged_decode_kernel`, dense-math reference:
     gathers each row's blocks into a contiguous (B, T, KV, hd) view and
     runs one masked softmax over the valid prefix."""
@@ -181,6 +210,14 @@ def gather_fallback(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     nbs = block_table.shape[1]
     k = gather_pool_blocks(k_pool, block_table)
     v = gather_pool_blocks(v_pool, block_table)
+    if k_scale is not None:
+        # int8 pools: dequant through the COMPUTE dtype (q.dtype), never
+        # a direct int8->fp32 widen — jaxpr_lint screens quant paths
+        # under narrow compute for exactly that promotion
+        k = k.astype(q.dtype) * gather_pool_blocks(
+            k_scale, block_table).astype(q.dtype)[..., None]
+        v = v.astype(q.dtype) * gather_pool_blocks(
+            v_scale, block_table).astype(q.dtype)[..., None]
 
     s = jnp.einsum("bkgd,btkd->bkgt", q.astype(jnp.float32) * scale,
                    k.astype(jnp.float32))
@@ -201,21 +238,26 @@ def decode_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                      scale: float, window: int | None = None,
                      logit_cap: float | None = None,
                      use_kernel: bool | None = None,
-                     interpret: bool | None = None) -> jax.Array:
+                     interpret: bool | None = None,
+                     k_scale: jax.Array | None = None,
+                     v_scale: jax.Array | None = None) -> jax.Array:
     """Paged-decode dispatch: the Pallas kernel on TPU, the pure-JAX
     gather path elsewhere (``use_kernel``/``interpret`` override for
-    tests — the kernel runs anywhere under interpret mode)."""
+    tests — the kernel runs anywhere under interpret mode).  Int8 pools
+    pass their scale sidecars; both paths fuse the dequant."""
     on_tpu = jax.default_backend() == "tpu"
     if use_kernel is None:
         use_kernel = on_tpu
     if not use_kernel:
         return gather_fallback(q, k_pool, v_pool, block_table, lengths,
                                scale=scale, window=window,
-                               logit_cap=logit_cap)
+                               logit_cap=logit_cap,
+                               k_scale=k_scale, v_scale=v_scale)
     return paged_decode_kernel(
         q, k_pool, v_pool, block_table, lengths, scale=scale, window=window,
         logit_cap=logit_cap,
-        interpret=(not on_tpu) if interpret is None else interpret)
+        interpret=(not on_tpu) if interpret is None else interpret,
+        k_scale=k_scale, v_scale=v_scale)
 
 
 # ---------------------------------------------------------------------------

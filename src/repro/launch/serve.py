@@ -93,7 +93,12 @@ def main(argv=None):
                     help="max draft tokens verified per engine step "
                          "(the verify batch is slots x (k+1); default 4)")
     ap.add_argument("--quant", action="store_true",
-                    help="int8 GTA serving path (QuantTensor weights)")
+                    help="int8 GTA serving path: QuantTensor weights "
+                         "through a QuantPolicy, int8 paged KV blocks "
+                         "with scale sidecars where the arch allows, and "
+                         "the §5 explorer binding per-GEMM precision "
+                         "(docs/QUANTIZATION.md; wave keeps the legacy "
+                         "weights-only rewrite)")
     ap.add_argument("--gemm-backend", choices=("xla", "scheduled"),
                     default="xla",
                     help="scheduled = route model projections through the "
@@ -114,15 +119,29 @@ def main(argv=None):
                          "scripts/trace_report.py); implies tracing")
     args = ap.parse_args(argv)
 
+    import dataclasses
+
     cfg = CONFIGS.get(args.arch)
     if args.scaled_down:
         cfg = cfg.scaled_down()
     if args.gemm_backend != "xla":
-        import dataclasses
         cfg = dataclasses.replace(
             cfg, gemm_backend=args.gemm_backend).validate()
     if cfg.is_encoder_only:
         raise SystemExit(f"{args.arch} is encoder-only: no decode serving")
+    base_cfg = cfg
+    quant_policy = None
+    if args.quant and args.engine != "wave":
+        # the end-to-end serving path (docs/QUANTIZATION.md): the engine
+        # rewrites the weight tree through the policy at construction and
+        # — on the paged engine, where the arch allows — stores int8 KV
+        # blocks with scale sidecars.  Scaled-down geometry sits below
+        # the production min_size floor, so drop it there.
+        from repro.quant import QuantPolicy
+        cfg = dataclasses.replace(
+            cfg, quant_serving=True, name=cfg.name + "+int8").validate()
+        quant_policy = (QuantPolicy(min_size=0) if args.scaled_down
+                        else QuantPolicy())
 
     params = N.init(cfg, jax.random.PRNGKey(0))
     if args.ckpt_dir:
@@ -132,8 +151,12 @@ def main(argv=None):
             params = restored["params"]
             print(f"[serve] restored step {mgr.latest_step()}")
     if args.quant:
-        params = quantize_params(params)
-        print("[serve] int8-quantized projections (GTA serving path)")
+        if args.engine == "wave":
+            # the seed baseline predates QuantPolicy: weights-only rewrite
+            params = quantize_params(params)
+        kv = ("int8 KV blocks"
+              if cfg.quant_kv and args.engine == "continuous" else "fp KV")
+        print(f"[serve] int8 serving path: QuantTensor weights + {kv}")
 
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
@@ -158,10 +181,13 @@ def main(argv=None):
             draft_cfg = CONFIGS.get(draft_arch)
             if args.scaled_down:
                 draft_cfg = draft_cfg.scaled_down()
-            if draft_cfg.name == cfg.name:
+            if draft_cfg.name in (cfg.name, base_cfg.name):
                 # self-draft: share the target weights (full acceptance —
-                # the mechanism demo without trained checkpoints)
-                draft_cfg, draft_params = cfg, params
+                # the mechanism demo without trained checkpoints).  Under
+                # --quant the draft stays on the base fp config: it keeps
+                # its OWN cache tree (only block tables are shared), and
+                # the engine quantizes its own copy of the weights.
+                draft_cfg, draft_params = base_cfg, params
             else:
                 draft_params = N.init(draft_cfg, jax.random.PRNGKey(1))
             spec = ModelDraft(draft_cfg, draft_params)
@@ -198,7 +224,7 @@ def main(argv=None):
                                paged=args.engine != "dense",
                                policy=args.policy,
                                spec=spec, spec_k=args.spec_k,
-                               telemetry=obs)
+                               telemetry=obs, quant_policy=quant_policy)
         eng.start()
         for r in reqs:
             if args.arrival_ms > 0:

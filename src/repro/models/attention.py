@@ -299,6 +299,26 @@ def _paged_write(buf: jax.Array, update: jax.Array, pos,
     return flat.reshape(buf.shape)
 
 
+def _paged_write_quant(qbuf: jax.Array, sbuf: jax.Array, update: jax.Array,
+                       pos, block_table: jax.Array
+                       ) -> tuple[jax.Array, jax.Array]:
+    """Quantize-on-write into an int8 pool with a per-(position, kv-head)
+    scale sidecar.
+
+    ``update`` (B, S, KV, hd) is symmetrically quantized along ``hd`` —
+    one scale per written token per kv head, so a pool block carries its
+    own dequant state and COW/truncate/snapshot stay block-local.  The
+    all-zero row (padding, trash-block writes) gets scale 1.0 so dequant
+    reproduces exact zeros."""
+    upf = update.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(upf), axis=-1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(upf / scale[..., None]), -127, 127
+                 ).astype(jnp.int8)
+    return (_paged_write(qbuf, q, pos, block_table),
+            _paged_write(sbuf, scale, pos, block_table))
+
+
 def _paged_gather(buf: jax.Array, block_table: jax.Array) -> jax.Array:
     """Gather each row's blocks into a contiguous (B, nbs*block_size, ...)
     view — delegates to the canonical gather in
@@ -352,20 +372,38 @@ def gqa_attention(p: dict, x: jax.Array, cfg: ModelConfig, *,
     if cache is not None and block_table is not None:
         adv = S if pos_advance is None else jnp.asarray(pos_advance,
                                                         jnp.int32)
-        ck = _paged_write(cache["k"], k, cache["pos"], block_table)
-        cv = _paged_write(cache["v"], v, cache["pos"], block_table)
-        new_cache = {"k": ck, "v": cv, "pos": cache["pos"] + adv}
+        quantized = "k_scale" in cache
+        if quantized:
+            ck, cks = _paged_write_quant(cache["k"], cache["k_scale"], k,
+                                         cache["pos"], block_table)
+            cv, cvs = _paged_write_quant(cache["v"], cache["v_scale"], v,
+                                         cache["pos"], block_table)
+            new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs,
+                         "pos": cache["pos"] + adv}
+        else:
+            cks = cvs = None
+            ck = _paged_write(cache["k"], k, cache["pos"], block_table)
+            cv = _paged_write(cache["v"], v, cache["pos"], block_table)
+            new_cache = {"k": ck, "v": cv, "pos": cache["pos"] + adv}
         kv_valid = cache["pos"] + adv
         if S == 1:
             from repro.kernels import paged_attention as PA
             out = PA.decode_attention(
                 q.reshape(B, KV, G, hd), ck, cv, block_table,
                 jnp.atleast_1d(kv_valid), scale=scale, window=window,
-                logit_cap=cfg.attn_logit_softcap)
+                logit_cap=cfg.attn_logit_softcap,
+                k_scale=cks, v_scale=cvs)
             out = out.reshape(B, 1, H * hd)
             return dense(out, p["wo"], backend=backend), new_cache
         k_att = _paged_gather(ck, block_table)
         v_att = _paged_gather(cv, block_table)
+        if quantized:
+            # dequant to the COMPUTE dtype (never a blanket fp32 widen:
+            # analysis.jaxpr_lint screens int8->f32 under narrow compute)
+            k_att = k_att.astype(x.dtype) * _paged_gather(
+                cks, block_table).astype(x.dtype)[..., None]
+            v_att = v_att.astype(x.dtype) * _paged_gather(
+                cvs, block_table).astype(x.dtype)[..., None]
     elif cache is not None:
         ck = _cache_write(cache["k"], k, cache["pos"])
         cv = _cache_write(cache["v"], v, cache["pos"])
@@ -525,6 +563,22 @@ def make_paged_kv_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
                                cfg.mla.kv_lora_rank), dtype),
             "k_pe": jnp.zeros((num_blocks, block_size,
                                cfg.mla.qk_rope_head_dim), dtype),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    if cfg.quant_kv:
+        # int8 pool + per-(position, kv-head) fp32 scale sidecars; the
+        # sidecars share the (num_blocks, block_size) leading layout so
+        # the block table, COW copies, and snapshots address them like
+        # any other pool leaf (network._POOL_KEYS)
+        return {
+            "k": jnp.zeros((num_blocks, block_size, cfg.n_kv_heads,
+                            cfg.hd), jnp.int8),
+            "v": jnp.zeros((num_blocks, block_size, cfg.n_kv_heads,
+                            cfg.hd), jnp.int8),
+            "k_scale": jnp.ones((num_blocks, block_size, cfg.n_kv_heads),
+                                jnp.float32),
+            "v_scale": jnp.ones((num_blocks, block_size, cfg.n_kv_heads),
+                                jnp.float32),
             "pos": jnp.zeros((), jnp.int32),
         }
     return {

@@ -145,6 +145,17 @@ class ModelConfig:
         return BlockKind.MAMBA2 in set(self.pattern) | set(self.tail)
 
     @property
+    def quant_kv(self) -> bool:
+        """Quantized paged KV blocks (int8 + per-position scale sidecars).
+
+        Follows ``quant_serving`` for the plain GQA pool only: the MLA
+        latent cache is already rank-compressed (re-quantizing the latent
+        would compound two lossy projections), and attention-free stacks
+        have no KV pool at all."""
+        return self.quant_serving and self.mla is None \
+            and not self.attention_free
+
+    @property
     def sub_quadratic(self) -> bool:
         """Eligible for long_500k: SSM or hybrid (no dense-KV-growth-bound
         full-attention stack)."""

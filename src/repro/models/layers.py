@@ -193,10 +193,15 @@ def dense(x: jax.Array, w, b: jax.Array | None = None, *,
     if backend is not None:
         return backend.dense(x, w, b)
     if hasattr(w, "q") and hasattr(w, "scale"):     # QuantTensor
+        # the per-channel scale folds into the same accumulator-dtype
+        # decision as the float branch below (§Perf H1): narrow compute
+        # emits the dot and applies the scale in the COMPUTE dtype — no
+        # fp32 (.., N) broadcast epilogue riding a bf16 model; fp32
+        # configs are unaffected (x.dtype == f32 keeps the exact path)
         acc = jax.lax.dot_general(
             x, w.q.astype(x.dtype), (((x.ndim - 1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
-        out = acc * w.scale.astype(jnp.float32)
+            preferred_element_type=x.dtype)
+        out = acc * w.scale.astype(x.dtype)
     else:
         # §Perf H1: emit the dot result in the COMPUTE dtype.  The MXU still
         # accumulates each dot in fp32 internally; emitting bf16 means the
@@ -259,17 +264,26 @@ def head_apply(table_or_w: jax.Array, x: jax.Array,
     multi-token verify step lands — through the scheduled fused Pallas
     kernels: leading dims collapse to one (B*S, D) dispatch against the
     transposed table and the paper-§5 cache picks dataflow/fold for the
-    shape the engine pre-registers as (head_rows, vocab, d).  QuantTensor
-    heads (none exist today — ``quant.policy`` quantizes projections
-    only) fall back to the XLA path."""
-    if backend is not None and not hasattr(table_or_w, "q"):
+    shape the engine pre-registers as (head_rows, vocab, d).
+
+    A QuantTensor head (``quant.policy.serving_quant_params`` quantizes
+    the untied lm_head) folds its per-channel scale into the activation:
+    the (V, D) table quantizes along V, so the scale is per-D and
+    ``(x * scale) @ q^T`` equals dequant-then-matmul term for term —
+    greedy argmax is unchanged, and both the XLA and scheduled paths
+    contract the int8 payload directly."""
+    w = table_or_w
+    if hasattr(w, "q") and hasattr(w, "scale"):      # QuantTensor head
+        x = x * w.scale.astype(x.dtype)
+        w = w.q
+    if backend is not None:
         lead, d = x.shape[:-1], x.shape[-1]
-        w = jnp.swapaxes(table_or_w.astype(x.dtype), 0, 1)   # (D, V)
-        logits = backend.matmul(x.reshape(-1, d), w,
+        wt = jnp.swapaxes(w.astype(x.dtype), 0, 1)   # (D, V)
+        logits = backend.matmul(x.reshape(-1, d), wt,
                                 out_dtype=jnp.float32)
         return softcap(logits.reshape(lead + (logits.shape[-1],)), cap)
     logits = jax.lax.dot_general(
-        x, table_or_w.astype(x.dtype),
+        x, w.astype(x.dtype),
         (((x.ndim - 1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)
     return softcap(logits, cap)

@@ -491,10 +491,14 @@ def insert_slot_caches(caches: PyTree, slot_caches: PyTree, slot: jax.Array,
 #   k/v/c_kv/k_pe — POOL leaves (num_blocks, block_size, ...), shared by all
 #                   slots, indexed through the block table; group-scanned
 #                   copies carry a leading (G,) stack dim.
+#   k_scale/v_scale — quantized-KV dequant sidecars (cfg.quant_kv), same
+#                   (num_blocks, block_size, ...) pool layout: COW block
+#                   copies and the bytes accounting MUST move them with
+#                   their int8 payload or dequant state desyncs.
 #   conv/ssm      — per-slot recurrent state, batch axis 0 (1 under groups).
 #   pos           — per-slot write cursors, batch axis LAST (expand_cache_pos).
 
-_POOL_KEYS = ("k", "v", "c_kv", "k_pe")
+_POOL_KEYS = ("k", "v", "k_scale", "v_scale", "c_kv", "k_pe")
 _SLOT_STATE_KEYS = ("conv", "ssm")
 
 

@@ -1,3 +1,5 @@
 """GTA precision policy: QuantTensor weights + scheduler-driven choice."""
-from repro.quant.policy import (QuantTensor, choose_precision,  # noqa
-                                quantize_params, quantize_tensor)
+from repro.quant.policy import (QuantPolicy, QuantTensor,  # noqa
+                                choose_precision, quant_fraction,
+                                quantize_params, quantize_tensor,
+                                serving_quant_params)

@@ -50,8 +50,10 @@ class QuantTensor:
         return self.q.dtype
 
     def dequant(self, dtype=jnp.bfloat16) -> jax.Array:
-        return (self.q.astype(jnp.float32)
-                * self.scale[None, :]).astype(dtype)
+        # cast straight to the target: every int8 value is exact in
+        # bf16/f32, and routing through f32 on a narrow compute path is
+        # precisely what jaxpr_lint's quant-fp32-promotion rule forbids
+        return self.q.astype(dtype) * self.scale.astype(dtype)[None, :]
 
     def tree_flatten(self):
         return (self.q, self.scale), None
@@ -96,6 +98,39 @@ def quantize_params(params: PyTree,
     return jax.tree.unflatten(treedef, out)
 
 
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    """What an engine quantizes when ``cfg.quant_serving`` is set.
+
+    The same policy object must drive runtime quantization
+    (``ContinuousEngine``) and abstract tracing
+    (``analysis.jaxpr_lint``): the linted shapes are only meaningful if
+    they match what the engine actually serves.
+    """
+
+    keys: tuple = DEFAULT_QUANT_KEYS
+    min_size: int = 1 << 16
+    #: untied lm_head joins the int8 path (the scale folds into the
+    #: activation exactly, so greedy argmax is unchanged vs dequant)
+    quantize_head: bool = True
+
+
+def serving_quant_params(cfg, params: PyTree,
+                         policy: QuantPolicy | None = None) -> PyTree:
+    """Apply ``policy`` to a parameter tree for serving under ``cfg``.
+
+    Idempotent: already-quantized leaves flatten into q/scale children
+    whose path keys never match ``policy.keys``, so a second application
+    is the identity.  A tied embedding table is never quantized (it
+    feeds token lookups, not just the head contraction).
+    """
+    policy = policy or QuantPolicy()
+    keys = tuple(policy.keys)
+    if policy.quantize_head and not cfg.tie_embeddings:
+        keys += ("lm_head",)
+    return quantize_params(params, keys=keys, min_size=policy.min_size)
+
+
 def quant_fraction(params: PyTree) -> float:
     """Fraction of parameter bytes now stored int8 (diagnostic)."""
     q = tot = 0
@@ -126,8 +161,17 @@ def choose_precision(op: PGEMM,
     for p in candidates:
         if p.mult_bits < quality_floor_bits:
             continue
-        choice = explore(dataclasses.replace(op, precision=p), config)
+        try:
+            choice = explore(dataclasses.replace(op, precision=p), config)
+        except Exception:  # noqa: BLE001 - an unschedulable precision is
+            continue       # skipped, not fatal: serving needs AN answer
         reports[p.name] = choice
+    if not reports:
+        # no candidate met the floor (or every explore failed): fall
+        # back to the widest candidate rather than crashing engine
+        # pre-resolve — wider-than-necessary is a perf loss, min() over
+        # an empty dict (or returning None) is a crash
+        return max(candidates, key=lambda p: p.mult_bits)
     min_c = min(c.cycles for c in reports.values())
     min_t = min(c.traffic_bytes for c in reports.values())
     for p in candidates:

@@ -126,12 +126,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.precision import precision_for_dtype
+from repro.core.pgemm import PGEMM
+from repro.core.precision import INT8, precision_for_dtype
 from repro.core.scheduler import ScheduleCache
 from repro.kernels import paged_attention as PA
 from repro.models import network as N
 from repro.models.config import ModelConfig
 from repro.obs import Telemetry
+from repro.quant import QuantPolicy, choose_precision, serving_quant_params
 from repro.serving.kv_pool import KVPool, PoolAuditError, blocks_for
 from repro.serving.policy import (PendingView, SchedulerPolicy, SlotView,
                                   make_policy)
@@ -352,7 +354,8 @@ class ContinuousEngine:
                  audit: bool = False,
                  telemetry: Telemetry | None = None,
                  faults: FaultPlane | None = None,
-                 resilience: ResilienceConfig | None = None):
+                 resilience: ResilienceConfig | None = None,
+                 quant_policy: QuantPolicy | None = None):
         if cfg.is_encoder_only:
             raise ValueError(f"{cfg.name} is encoder-only: no decode serving")
         # telemetry bundle: the metrics registry is ALWAYS real — its
@@ -402,6 +405,14 @@ class ContinuousEngine:
                 f"reservations; the dense (paged=False) engine has no pool "
                 f"— use policy='fifo'")
         self._audit = audit
+        # quantized serving (cfg.quant_serving): the weight tree is
+        # rewritten through the policy HERE, before any jitted program
+        # closes over it — dense()/head_apply() dispatch on the
+        # QuantTensor leaves transparently.  serving_quant_params is
+        # idempotent, so callers may pass an already-quantized tree.
+        self.quant_policy = quant_policy
+        if cfg.quant_serving:
+            params = serving_quant_params(cfg, params, quant_policy)
         self.params = params
         self.slots = slots
         self.max_len = max_len
@@ -428,6 +439,10 @@ class ContinuousEngine:
         self.paged = paged
         self._prec = precision_for_dtype(cfg.compute_dtype,
                                          default="FP32").name
+        #: (M, N, K) -> §5 explorer precision choice for the serving
+        #: p-GEMMs (memoized: _register_gemms runs per step, the
+        #: explorer must only ever run at construction / first sight)
+        self.precision_plan: dict[tuple[int, int, int], str] = {}
 
         if prefill_buckets is None:
             prefill_buckets, b = [], 16
@@ -466,7 +481,8 @@ class ContinuousEngine:
                               and not cfg.has_recurrent_state)
             self.pool: KVPool | None = KVPool(
                 kv_blocks, block_size, slots=slots, max_len=max_len,
-                share_prefixes=share_prefixes, metrics=m)
+                share_prefixes=share_prefixes, metrics=m,
+                quantized=cfg.quant_kv)
             self.caches = N.expand_cache_pos(
                 N.init_paged_caches(cfg, slots, kv_blocks, block_size),
                 slots)
@@ -811,6 +827,30 @@ class ContinuousEngine:
             if M <= 0 or Nn <= 0 or K <= 0:
                 continue
             self.schedule.resolve(M, Nn, K, prec)
+            if cfg.quant_serving:
+                # quantized leaves dispatch through kernels.ops.
+                # quant_matmul, which resolves under INT8 (the native PE
+                # width); non-quantized leaves and the scale-folded head
+                # stay on ``prec``.  Registering both here keeps the
+                # steady-state 100%-cache-hit gate independent of which
+                # leaves the policy actually rewrote.
+                if prec != "INT8":
+                    self.schedule.resolve(M, Nn, K, "INT8")
+                chosen = self._gemm_precision(M, Nn, K)
+                if chosen not in (prec, "INT8"):
+                    self.schedule.resolve(M, Nn, K, chosen)
+
+    def _gemm_precision(self, M: int, N: int, K: int) -> str:
+        """§5 explorer (choose_precision) verdict for one serving p-GEMM,
+        memoized per shape so the exploration cost is paid once at
+        construction (``_register_gemms`` runs on every decode step)."""
+        key = (M, N, K)
+        name = self.precision_plan.get(key)
+        if name is None:
+            p = choose_precision(
+                PGEMM("serve", M=M, N=N, K=K, precision=INT8))
+            name = self.precision_plan[key] = p.name
+        return name
 
     # -- policy views ---------------------------------------------------------
 

@@ -175,6 +175,7 @@ class KVPool:
 
     def __init__(self, num_blocks: int, block_size: int, *, slots: int,
                  max_len: int, share_prefixes: bool = True,
+                 quantized: bool = False,
                  metrics: "MetricsRegistry | None" = None):
         if num_blocks < 2:
             raise ValueError("need >= 2 blocks (block 0 is reserved)")
@@ -186,6 +187,14 @@ class KVPool:
         self.max_len = max_len
         self.blocks_per_slot = blocks_for(max_len, block_size)
         self.share_prefixes = share_prefixes
+        #: quantized block mode (cfg.quant_kv): device blocks are int8
+        #: with per-position scale sidecars; ``scale_written`` tracks
+        #: which blocks own live dequant state — mapped/cached/pending
+        #: blocks must, freed blocks must NOT (a freed block keeping its
+        #: flag would let a re-allocation dequant a previous owner's
+        #: scales before its first write; the audit screens both ways)
+        self.quantized = quantized
+        self.scale_written = np.zeros(num_blocks, bool)
 
         # block 0 reserved: never allocated, never freed.
         self._free: "collections.deque[int]" = collections.deque(
@@ -265,7 +274,19 @@ class KVPool:
         if self.ref[bid] == 0:
             # a block can only hit zero if the prefix map no longer pins it
             assert bid not in self._hash_of, bid
+            # the dequant sidecar dies with the last ref: a freed block
+            # must re-enter circulation scale-clean (audit invariant)
+            self.scale_written[bid] = False
             self._free.append(bid)
+
+    def _mark_written(self, bids) -> None:
+        """Record live scale sidecars for mapped blocks (quantized mode);
+        a no-op for fp pools so the flag array stays all-False."""
+        if not self.quantized:
+            return
+        for bid in bids:
+            if bid != NULL_BLOCK:
+                self.scale_written[int(bid)] = True
 
     def _evict_cached(self, need: int) -> None:
         """Unregister LRU prefix blocks nobody else maps until ``need``
@@ -431,6 +452,7 @@ class KVPool:
         self.tables[slot, :len(row)] = row
         self.tables[slot, len(row):] = NULL_BLOCK
         self.n_slot_blocks[slot] = len(row)
+        self._mark_written(row)
         # count reuse only for admissions that actually land: a backoff
         # releases the matched refs and retries, and must not double-count
         self.shared_token_hits += len(shared) * self.block_size
@@ -460,6 +482,7 @@ class KVPool:
             return False
         self.tables[slot, cur:need] = fresh
         self.n_slot_blocks[slot] = need
+        self._mark_written(fresh)
         self._note_usage()
         return True
 
@@ -545,6 +568,11 @@ class KVPool:
             self.pending_copies.append((bid, fresh))
             self.cow_forks += 1
             self._m_cow.inc()
+            if self.quantized:
+                # the queued device copy moves payload AND sidecar, so
+                # the fork destination inherits the source's dequant
+                # state the moment the pair is queued
+                self.scale_written[fresh] = self.scale_written[bid]
             self.tables[slot, j] = fresh
 
     def take_copies(self) -> list[tuple[int, int]]:
@@ -575,6 +603,7 @@ class KVPool:
     def stats(self) -> dict[str, int]:
         return {"num_blocks": self.num_blocks - 1,
                 "block_size": self.block_size,
+                "quantized": int(self.quantized),
                 "used": self.used_blocks,
                 "peak_used": self.peak_used,
                 "cached_prefix_blocks": len(self._prefix),
@@ -596,6 +625,9 @@ class KVPool:
             "slots": int(self.slots),
             "max_len": int(self.max_len),
             "share_prefixes": bool(self.share_prefixes),
+            "quantized": bool(self.quantized),
+            "scale_written": [int(b) for b
+                              in np.flatnonzero(self.scale_written)],
             "free": [int(b) for b in self._free],
             "ref": [int(r) for r in self.ref],
             "tables": self.tables.tolist(),
@@ -617,7 +649,10 @@ class KVPool:
         warm-restart path (docs/RELIABILITY.md)."""
         pool = cls(int(state["num_blocks"]), int(state["block_size"]),
                    slots=int(state["slots"]), max_len=int(state["max_len"]),
-                   share_prefixes=bool(state.get("share_prefixes", True)))
+                   share_prefixes=bool(state.get("share_prefixes", True)),
+                   quantized=bool(state.get("quantized", False)))
+        for bid in state.get("scale_written", []):
+            pool.scale_written[int(bid)] = True
         pool._free = collections.deque(int(b) for b in state["free"])
         pool.ref = np.asarray(state["ref"], np.int32)
         pool.tables = np.asarray(state["tables"], np.int32)
@@ -688,6 +723,21 @@ class KVPool:
             if self.ref[int(dst)] <= 0:
                 out.append(f"pending COW copy writes freed destination "
                            f"block {int(dst)}")
+        if self.quantized:
+            # scale-sidecar invariant (quantized block mode): live blocks
+            # own live dequant state, freed blocks own none.  A stale
+            # flag on a freed block is the quantized use-after-free — a
+            # re-allocation could dequant a previous owner's scales.
+            if self.scale_written[NULL_BLOCK]:
+                out.append("null block marked scale-written")
+            for bid in range(1, self.num_blocks):
+                r, w = int(self.ref[bid]), bool(self.scale_written[bid])
+                if r == 0 and w:
+                    out.append(f"stale scale sidecar: freed block {bid} "
+                               f"still marked written")
+                if r > 0 and int(counts[bid]) > 0 and not w:
+                    out.append(f"block {bid} is live with no scale "
+                               f"sidecar recorded — dequant state lost")
         return out
 
     def check(self, pending_op: dict | None = None) -> None:

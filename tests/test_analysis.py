@@ -276,10 +276,14 @@ def test_check_pool_emits_finding_for_buggy_pool():
     assert PM.check_pool(cfg, max_states=4_000) == []
     findings = PM.check_pool(cfg, max_states=4_000,
                              pool_cls=PM.BuggyPoolNoScrub)
-    assert len(findings) == 1
-    assert findings[0].pass_name == "pool"
-    assert findings[0].rule == "invariant-violation"
-    assert "replay" in findings[0].detail
+    # check_pool explores the fp AND quantized pool variants — a bug in
+    # the shared lifecycle surfaces once per mode
+    assert len(findings) == 2
+    assert {f.subject.split("/", 1)[0] for f in findings} == {"fp", "quant"}
+    for f in findings:
+        assert f.pass_name == "pool"
+        assert f.rule == "invariant-violation"
+        assert "replay" in f.detail
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,284 @@
+"""Quantized serving end-to-end (docs/QUANTIZATION.md): QuantTensor
+weights through jit/eval_shape at engine geometry, int8 KV blocks with
+per-position scale sidecars in the pool (COW/truncate/snapshot/prefix
+sharing), the §5 choose_precision binding at the serving shapes, and
+the quantized engine's token-agreement + pool-bytes wins vs fp."""
+
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as CONFIGS
+from repro.core.pgemm import PGEMM
+from repro.core.precision import BP16, INT8, INT16
+from repro.quant import (QuantPolicy, QuantTensor, choose_precision,
+                         quant_fraction, quantize_tensor,
+                         serving_quant_params)
+from repro.serving import ContinuousEngine, Request
+from repro.serving.kv_pool import KVPool
+
+
+def _cfg():
+    return CONFIGS.get("qwen2_0_5b").scaled_down()
+
+
+def _quant_cfg(cfg, **over):
+    return dataclasses.replace(cfg, quant_serving=True,
+                               name=cfg.name + "+int8", **over).validate()
+
+
+def _leaves(params):
+    return [x for x in jax.tree.leaves(
+        params, is_leaf=lambda x: isinstance(x, QuantTensor))
+        if isinstance(x, QuantTensor)]
+
+
+# ---------------------------------------------------------------------------
+# QuantTensor as a pytree through jit / eval_shape
+# ---------------------------------------------------------------------------
+
+def test_quant_tensor_roundtrips_through_jit():
+    w = np.asarray(np.random.default_rng(0).normal(size=(64, 48)),
+                   np.float32)
+    qt = quantize_tensor(jnp.asarray(w))
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(4, 64)),
+                    np.float32)
+
+    def apply(t, x):
+        return (x @ t.q.astype(x.dtype)) * t.scale[None, :]
+
+    eager = apply(qt, x)
+    jitted = jax.jit(apply)(qt, x)
+    np.testing.assert_allclose(np.asarray(eager), np.asarray(jitted),
+                               rtol=1e-6)
+    # the dequant error itself is bounded by symmetric-int8 resolution
+    np.testing.assert_allclose(np.asarray(qt.dequant(jnp.float32)), w,
+                               atol=float(np.abs(w).max()) / 127 + 1e-6)
+
+
+def test_serving_quant_params_abstract_at_engine_geometry():
+    """eval_shape composes with the policy rewrite — full-scale engine
+    params quantize without allocating a byte, exactly how
+    analysis.jaxpr_lint traces the quant dispatches."""
+    from repro.models import network as N
+    cfg = _quant_cfg(CONFIGS.get("qwen2_0_5b"))
+    params = jax.eval_shape(lambda: N.init(cfg, jax.random.PRNGKey(0)))
+    qparams = jax.eval_shape(
+        lambda p: serving_quant_params(cfg, p), params)
+    qts = _leaves(qparams)
+    assert qts, "no projection met the production size floor"
+    for qt in qts:
+        assert qt.q.dtype == jnp.int8
+        assert qt.scale.dtype == jnp.float32
+        assert qt.scale.shape == qt.q.shape[-1:] or \
+            qt.scale.shape == qt.q.shape[:-2] + qt.q.shape[-1:]
+
+
+def test_serving_quant_params_idempotent():
+    from repro.models import network as N
+    cfg = _quant_cfg(_cfg())
+    params = N.init(cfg, jax.random.PRNGKey(0))
+    pol = QuantPolicy(min_size=0)
+    once = serving_quant_params(cfg, params, pol)
+    twice = serving_quant_params(cfg, once, pol)
+    assert len(_leaves(once)) == len(_leaves(twice))
+    assert jax.tree.structure(once) == jax.tree.structure(twice)
+    assert 0 < quant_fraction(once) <= 1.0
+
+
+def test_quant_kv_gating_follows_arch():
+    cfg = _cfg()
+    assert not cfg.quant_kv                      # off by default
+    assert _quant_cfg(cfg).quant_kv              # plain GQA: on
+    mla = CONFIGS.get("deepseek_v2_236b")
+    assert not dataclasses.replace(
+        mla, quant_serving=True).quant_kv        # latent KV: weights only
+    ssm = CONFIGS.get("mamba2_2_7b")
+    assert not dataclasses.replace(
+        ssm, quant_serving=True).quant_kv        # no attention KV at all
+
+
+# ---------------------------------------------------------------------------
+# §5 precision binding
+# ---------------------------------------------------------------------------
+
+def test_choose_precision_picks_int8_at_serving_shapes():
+    cfg = _cfg()
+    for m in (4, 4 * 32):           # decode batch, prefill-chunk batch
+        p = choose_precision(PGEMM(
+            "serve", M=m, N=cfg.n_heads * cfg.hd, K=cfg.d_model,
+            precision=INT8))
+        assert p.name == "INT8"     # native PE width wins the Σ-squares
+
+
+def test_choose_precision_survives_empty_report_set():
+    # floor above every candidate: no report survives — the fallback is
+    # the widest candidate, never a crash (engine pre-resolve calls this)
+    p = choose_precision(PGEMM("serve", M=4, N=64, K=64, precision=INT8),
+                         quality_floor_bits=64)
+    assert p.mult_bits == max(c.mult_bits for c in (INT8, BP16, INT16))
+
+
+# ---------------------------------------------------------------------------
+# quantized KV pool: scale sidecars through the block lifecycle
+# ---------------------------------------------------------------------------
+
+def _qpool(num_blocks=12, block_size=4, slots=2, max_len=32):
+    return KVPool(num_blocks, block_size, slots=slots, max_len=max_len,
+                  quantized=True)
+
+
+def _prompt(n, seed=0):
+    return list(np.random.default_rng(seed).integers(3, 100, n))
+
+
+def test_quant_pool_cow_fork_then_truncate_keeps_sidecars_exact():
+    pool = _qpool()
+    # 9 tokens = 2 full blocks + a 1-token tail (the last token is never
+    # shared — its logits seed decode)
+    prompt = _prompt(9)
+    plan = pool.admit(0, prompt, max_new_tokens=8)
+    assert all(pool.scale_written[list(plan.blocks)])
+    pool.register_prefix(prompt, list(pool.tables[0, :2]))
+    plan1 = pool.admit(1, prompt, max_new_tokens=8)
+    assert plan1.shared_tokens == 8
+    # writing into the shared span forks it; the fork inherits the
+    # source's sidecar state through the queued device copy
+    pool.ensure_writable(1, 4, 7)
+    forked = int(pool.tables[1, 1])
+    assert forked not in plan1.shared_blocks
+    assert pool.scale_written[forked]
+    assert pool.take_copies()       # the (src, dst) pair was queued
+    pool.check()
+    # rollback: the truncated tail's exclusively-owned blocks free AND
+    # clear their sidecar flag (a stale flag is the seeded-mutant bug)
+    dropped = pool.truncate(1, 4)
+    assert dropped >= 1
+    assert not pool.scale_written[forked]
+    pool.check()
+    pool.release_slot(0)
+    pool.release_slot(1)
+    # freed blocks cleared their flag; only the cache-pinned prefix
+    # blocks stay marked — the audit invariants say exactly that
+    free = [b for b in range(1, pool.num_blocks) if pool.ref[b] == 0]
+    assert not pool.scale_written[free].any()
+    pool.check()
+
+
+def test_quant_pool_snapshot_restore_is_byte_identical():
+    pool = _qpool()
+    pool.admit(0, _prompt(8), max_new_tokens=4)
+    pool.admit(1, _prompt(6, seed=1), max_new_tokens=4)
+    pool.release_slot(1)
+    state = json.loads(json.dumps(pool.snapshot_state()))   # wire-safe
+    clone = KVPool.from_snapshot(state)
+    assert clone.quantized
+    np.testing.assert_array_equal(clone.scale_written, pool.scale_written)
+    np.testing.assert_array_equal(clone.tables, pool.tables)
+    np.testing.assert_array_equal(clone.ref, pool.ref)
+    clone.check()
+    assert clone.snapshot_state() == pool.snapshot_state()
+
+
+def test_quant_pool_prefix_share_hits_quantized_chain():
+    pool = _qpool()
+    prompt = _prompt(9, seed=2)     # 2 full blocks + a 1-token tail
+    pool.admit(0, prompt, max_new_tokens=4)
+    shared = list(pool.tables[0, :2])
+    pool.release_slot(0, prompt=prompt)
+    assert all(pool.scale_written[shared])   # cached blocks keep sidecars
+    plan = pool.admit(1, prompt, max_new_tokens=4)
+    assert plan.shared_tokens == 8           # content-addressed hit
+    assert list(plan.shared_blocks) == shared
+    pool.check()
+
+
+def test_fp_pool_has_no_sidecar_bookkeeping():
+    pool = KVPool(8, 4, slots=1, max_len=16)
+    pool.admit(0, _prompt(5), max_new_tokens=3)
+    assert not pool.scale_written.any()      # _mark_written is a no-op
+    assert pool.stats()["quantized"] == 0
+    pool.check()
+
+
+def test_pool_model_checker_covers_quant_variant():
+    import repro.analysis.pool_model as PM
+    cfg = dataclasses.replace(PM.ModelCheckConfig(), quantized=True)
+    res = PM.explore(cfg, max_states=6_000)
+    assert res.ok, res.counterexample
+    bad = PM.explore(PM.ModelCheckConfig(),
+                     pool_cls=PM.SEEDED_BUGS["stale-scale-sidecar"],
+                     max_states=6_000)
+    assert not bad.ok
+    assert any("stale scale sidecar" in v
+               for v in bad.counterexample["violations"])
+
+
+# ---------------------------------------------------------------------------
+# the quantized engine vs the fp engine
+# ---------------------------------------------------------------------------
+
+def _reqs(cfg, n=4, seed=0):
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(3, cfg.vocab, 8).astype(np.int32)
+    return [Request(rid=i,
+                    prompt=np.concatenate(
+                        [prefix,
+                         rng.integers(3, cfg.vocab, 4 + i).astype(np.int32)]),
+                    max_new_tokens=4, eos=-1) for i in range(n)]
+
+
+@pytest.mark.slow
+def test_quant_engine_matches_fp_and_halves_pool_bytes():
+    from repro.models import network as N
+    cfg = _cfg()
+    cfgq = _quant_cfg(cfg)
+    params = N.init(cfg, jax.random.PRNGKey(0))
+    reqs = _reqs(cfg)
+
+    fp = ContinuousEngine(cfg, params, slots=2, max_len=64, audit=True)
+    ref = {r.rid: list(map(int, r.tokens)) for r in fp.run(reqs)}
+    qe = ContinuousEngine(cfgq, params, slots=2, max_len=64, audit=True,
+                          quant_policy=QuantPolicy(min_size=0))
+    got = {r.rid: list(map(int, r.tokens))
+           for r in qe.run([dataclasses.replace(r) for r in reqs])}
+
+    total = sum(len(v) for v in ref.values())
+    matched = sum(int(a == b) for rid in ref
+                  for a, b in zip(ref[rid], got[rid]))
+    assert matched / total >= 0.99, (matched, total)
+    ratio = qe.kv_bytes()["allocated"] / fp.kv_bytes()["allocated"]
+    assert ratio <= 0.5, ratio
+    assert qe.pool.stats()["quantized"] == 1
+    assert quant_fraction(qe.params) > 0
+    qe.pool.check()
+
+
+@pytest.mark.slow
+def test_quant_engine_scheduled_backend_is_pure_cache_hit():
+    """Steady-state quant serving never explores: construction pre-
+    resolves the fp, INT8, and explorer-chosen precision keys for every
+    serving shape, so a post-warmup run is 100% schedule-cache hits."""
+    from repro.models import network as N
+    cfg = _cfg()
+    cfgq = _quant_cfg(cfg, gemm_backend="scheduled")
+    params = N.init(cfg, jax.random.PRNGKey(0))
+    reqs = _reqs(cfg)
+    pol = QuantPolicy(min_size=0)
+
+    ContinuousEngine(cfgq, params, slots=2, max_len=64,
+                     quant_policy=pol).run(reqs)        # warmup
+    eng = ContinuousEngine(cfgq, params, slots=2, max_len=64,
+                           quant_policy=pol)
+    eng.schedule.reset()
+    eng.run([dataclasses.replace(r) for r in reqs])
+    st = eng.schedule.stats()
+    assert st["misses"] == 0 and st["hits"] > 0, st
+    # the §5 explorer bound a precision for every registered shape
+    assert eng.precision_plan
+    assert set(eng.precision_plan.values()) <= {"INT8", "BP16", "INT16",
+                                                "FP32"}
