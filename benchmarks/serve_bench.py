@@ -354,10 +354,12 @@ def run_bench(n_requests: int, slots: int, max_len: int,
                                    tokens_by_engine["paged"],
                                    by["paged"]["kv_allocated_bytes"])
     prows, pfail = run_policy_bench(cfg, params, slots, n_requests=12)
+    plrows, plfail = run_planner_bench(cfg, params, slots, max_len, reqs,
+                                       tokens_by_engine["paged"])
     srows, sfail = run_spec_bench(cfg, params, slots)
     crows, cfail = run_chaos_bench(cfg, params, slots)
-    return (rows + trows + qrows + prows + srows + crows,
-            failures + tfail + qfail + pfail + sfail + cfail)
+    return (rows + trows + qrows + prows + plrows + srows + crows,
+            failures + tfail + qfail + pfail + plfail + sfail + cfail)
 
 
 #: enabled-tracing slowdown bound: the lifecycle tracer + registry must
@@ -576,7 +578,9 @@ def run_policy_bench(cfg, params, slots: int, n_requests: int):
     after every step is part of the acceptance surface."""
     import dataclasses
 
+    from repro.planner import EngineGeometry, WorkloadModel
     from repro.serving.engine import ContinuousEngine
+    from repro.serving.policy import ModelPreemptPolicy
 
     reqs = _overload_trace(n_requests, cfg.vocab)
 
@@ -586,14 +590,21 @@ def run_policy_bench(cfg, params, slots: int, n_requests: int):
                                 kv_blocks=OVERLOAD_KV_BLOCKS,
                                 policy=policy, audit=True)
 
-    # one warmup run covers all three policies: the jitted programs are
+    # one warmup run covers all the policies: the jitted programs are
     # cached per (cfg, max_len) and the policy-pool cache shapes differ
     # from the main rows' default kv_blocks, so trace once here.
     make("fifo").run([dataclasses.replace(r) for r in reqs])
 
+    # the model row packs/evicts on the planner's modeled step-costs at
+    # the policy-bench geometry — the closed loop the planner exists for
+    geom = EngineGeometry(slots=slots, max_len=POLICY_MAX_LEN,
+                          kv_blocks=OVERLOAD_KV_BLOCKS)
+    costs = WorkloadModel(cfg, geom).step_costs()
+
     rows, tokens, failures = [], {}, []
-    for pol in ("fifo", "best_fit", "slo_preempt"):
-        eng = make(pol)
+    for pol in ("fifo", "best_fit", "slo_preempt", "model"):
+        eng = make(ModelPreemptPolicy(costs=costs) if pol == "model"
+                   else pol)
         t0 = time.perf_counter()
         res = eng.run([dataclasses.replace(r) for r in reqs])
         row = _summarize(f"policy_{pol}", res, time.perf_counter() - t0, eng)
@@ -634,7 +645,130 @@ def run_policy_bench(cfg, params, slots: int, n_requests: int):
     if tokens["slo_preempt"] != tokens["fifo"]:
         failures.append("slo_preempt output != fifo output (greedy) — "
                         "preempt/resume is not token-identical")
+    if tokens["model"] != tokens["fifo"]:
+        failures.append("model_preempt output != fifo output (greedy) — "
+                        "modeled admission/eviction changed the tokens")
+    if (by["policy_model"]["p95_ttft_steps"]
+            > by["policy_slo_preempt"]["p95_ttft_steps"]):
+        failures.append(
+            f"model_preempt p95 TTFT {by['policy_model']['p95_ttft_steps']} "
+            f"dispatches above slo_preempt "
+            f"{by['policy_slo_preempt']['p95_ttft_steps']} — modeled "
+            f"eviction lost to the block-greedy rule it generalizes")
+    if (by["policy_model"]["avg_pool_util"]
+            < by["policy_best_fit"]["avg_pool_util"]):
+        failures.append(
+            f"model_preempt pool utilization "
+            f"{by['policy_model']['avg_pool_util']} below best_fit "
+            f"{by['policy_best_fit']['avg_pool_util']} — modeled packing "
+            f"wastes blocks the block-count heuristic keeps busy")
     return rows, failures
+
+
+#: planner model-vs-measured bound: the calibrated simulator's smoke-
+#: trace TTFT p95 and mean TPOT predictions must land within this
+#: fraction of the measured values (docs/PLANNER.md).
+PLANNER_DRIFT_BOUND = 0.30
+
+
+def run_planner_bench(cfg, params, slots: int, max_len: int, reqs,
+                      ref_tokens):
+    """Close the kernel-to-fleet loop: profile ONE paged serve run, fit
+    the planner calibration from its own trace, replay the same request
+    trace through the analytical simulator (``repro.planner``), and
+    gate the modeled TTFT p95 / mean TPOT within PLANNER_DRIFT_BOUND of
+    measured.  Non-speculative on purpose — the spec path advances by
+    an EXPECTED accept length, an extra error source the drift gate
+    must not fold in (scripts/smoke.sh reports spec drift unbonded).
+
+    The workload model reads the live engine's ScheduleCache through
+    ``modeled_cycles`` — the non-mutating accessor — so the hit/miss
+    stats the scheduled-backend gates count stay untouched.
+    """
+    from repro.obs import Telemetry
+    from repro.planner import (EngineGeometry, WorkloadModel,
+                               calibration_from_events,
+                               requests_from_trace)
+    from repro.planner.model import measured_latencies
+    from repro.serving.engine import ContinuousEngine
+
+    eng = ContinuousEngine(cfg, params, slots=slots, max_len=max_len,
+                           paged=True, telemetry=Telemetry.on(profile=True))
+    t0 = time.perf_counter()
+    res = eng.run(reqs)
+    wall = time.perf_counter() - t0
+    row = _summarize("paged_planner", res, wall, eng)
+    row["pool"] = eng.pool.stats()
+    failures = []
+
+    events = eng.obs.tracer.chrome_trace()["traceEvents"]
+    try:
+        cal = calibration_from_events(
+            events, meta={"source": "serve_bench planner row",
+                          "slots": slots, "max_len": max_len})
+    except ValueError as e:
+        return [row], [f"planner calibration failed: {e}"]
+
+    specs = requests_from_trace(events)
+    meas = measured_latencies(events)
+    geom = EngineGeometry.from_engine(eng)
+    sched_before = dict(eng.schedule.stats())
+    model = WorkloadModel(cfg, geom, schedule=eng.schedule)
+    sched_after = eng.schedule.stats()
+    plan = model.simulate(specs, calibration=cal)
+
+    ttft_meas = [meas[s.rid]["ttft_us"] for s in specs]
+    tpot_meas = [meas[s.rid]["tpot_us"] for s in specs
+                 if meas[s.rid]["tpot_us"]]
+    p95_meas = float(np.percentile(ttft_meas, 95))
+    tpot_m = float(np.mean(tpot_meas))
+    drift = {
+        "bound": PLANNER_DRIFT_BOUND,
+        "requests_modeled": len(specs),
+        "ttft_p95_modeled_us": round(plan.p95_ttft_us(), 1),
+        "ttft_p95_measured_us": round(p95_meas, 1),
+        "ttft_p95_drift": round(plan.p95_ttft_us() / p95_meas - 1.0, 4),
+        "tpot_modeled_us": round(plan.mean_tpot_us(), 1),
+        "tpot_measured_us": round(tpot_m, 1),
+        "tpot_drift": round(plan.mean_tpot_us() / tpot_m - 1.0, 4),
+        "steps_modeled": plan.steps,
+        "steps_measured": eng.steps,
+        "chunk_steps_modeled": plan.chunk_steps,
+        "chunk_steps_measured": eng.chunk_steps,
+        "peak_blocks_modeled": plan.peak_blocks,
+        "peak_blocks_measured": eng.pool.stats()["peak_used"],
+    }
+    drift["ttft_p95_ok"] = abs(drift["ttft_p95_drift"]) <= PLANNER_DRIFT_BOUND
+    drift["tpot_ok"] = abs(drift["tpot_drift"]) <= PLANNER_DRIFT_BOUND
+    row["planner_drift"] = drift
+    row["planner_calibration"] = cal.to_json()
+
+    tokens = {r.rid: list(map(int, r.tokens)) for r in res}
+    if tokens != ref_tokens:
+        failures.append("profiled planner row output != paged output "
+                        "(greedy) — profiling changed the tokens")
+    if not drift["ttft_p95_ok"]:
+        failures.append(
+            f"planner TTFT p95 drift {drift['ttft_p95_drift']*100:+.1f}% "
+            f"(modeled {drift['ttft_p95_modeled_us']:.0f}us vs measured "
+            f"{drift['ttft_p95_measured_us']:.0f}us) outside "
+            f"±{PLANNER_DRIFT_BOUND*100:.0f}%")
+    if not drift["tpot_ok"]:
+        failures.append(
+            f"planner TPOT drift {drift['tpot_drift']*100:+.1f}% "
+            f"(modeled {drift['tpot_modeled_us']:.1f}us vs measured "
+            f"{drift['tpot_measured_us']:.1f}us) outside "
+            f"±{PLANNER_DRIFT_BOUND*100:.0f}%")
+    for name in ("decode_step", "prefill_paged_chunk"):
+        if name not in cal.cycles:
+            failures.append(f"planner calibration missing {name} — the "
+                            f"profiled run produced no fittable span")
+    if (sched_after["hits"] - sched_before["hits"],
+            sched_after["misses"] - sched_before["misses"]) != (0, 0):
+        failures.append(
+            "building the workload model perturbed the engine's schedule "
+            "hit/miss stats — modeled_cycles must stay read-only")
+    return [row], failures
 
 
 #: rep-trace window: 26-token looped prompts + 24 decode tokens fit with
@@ -849,6 +983,19 @@ def main(argv=None) -> int:
         dart = "quant_drift_smoke.json" if args.dry else "quant_drift.json"
         with open(os.path.join(ART_DIR, dart), "w") as f:
             json.dump(drift, f, indent=2)
+    # planner artifacts: the fitted calibration (the planner's input for
+    # what-if queries) and the model-vs-measured drift report the
+    # acceptance gate reads (bench_gate.py checks the *_ok booleans)
+    prow = next((r for r in rows if r["engine"] == "paged_planner"), None)
+    if prow is not None and "planner_calibration" in prow:
+        suffix = "_smoke" if args.dry else ""
+        with open(os.path.join(ART_DIR,
+                               f"planner_calibration{suffix}.json"),
+                  "w") as f:
+            json.dump(prow["planner_calibration"], f, indent=2)
+        with open(os.path.join(ART_DIR, f"planner_drift{suffix}.json"),
+                  "w") as f:
+            json.dump(prow["planner_drift"], f, indent=2)
 
     for r in rows:
         print(f"serve_{r['engine']},{r['wall_s']*1e6:.0f},"
@@ -897,14 +1044,29 @@ def main(argv=None) -> int:
           f"{qt['schedule_hit_rate_run']*100:.0f}%, "
           f"{qt['quant_param_fraction']*100:.0f}% of param bytes int8, "
           f"precisions {qt['precision_plan']}")
-    pf, pb, ps = (by["policy_fifo"], by["policy_best_fit"],
-                  by["policy_slo_preempt"])
+    pf, pb, ps, pm = (by["policy_fifo"], by["policy_best_fit"],
+                      by["policy_slo_preempt"], by["policy_model"])
     print(f"policy overload: pool util fifo {pf['avg_pool_util']:.2f} -> "
           f"best_fit {pb['avg_pool_util']:.2f}; p95 TTFT fifo "
           f"{pf['p95_ttft_steps']:.0f} -> slo_preempt "
           f"{ps['p95_ttft_steps']:.0f} dispatches "
           f"({ps['preemptions']} preemptions, "
-          f"{ps['resumed_requests']} requests resumed token-identically)")
+          f"{ps['resumed_requests']} requests resumed token-identically); "
+          f"model_preempt p95 {pm['p95_ttft_steps']:.0f} at util "
+          f"{pm['avg_pool_util']:.2f} ({pm['preemptions']} preemptions)")
+    pd = by["paged_planner"].get("planner_drift")
+    if pd:
+        print(f"planner drift: TTFT p95 modeled "
+              f"{pd['ttft_p95_modeled_us']/1e3:.1f}ms vs measured "
+              f"{pd['ttft_p95_measured_us']/1e3:.1f}ms "
+              f"({pd['ttft_p95_drift']*100:+.1f}%), TPOT "
+              f"{pd['tpot_modeled_us']/1e3:.2f}ms vs "
+              f"{pd['tpot_measured_us']/1e3:.2f}ms "
+              f"({pd['tpot_drift']*100:+.1f}%), bound "
+              f"±{pd['bound']*100:.0f}%; steps {pd['steps_modeled']}/"
+              f"{pd['steps_measured']}, chunks {pd['chunk_steps_modeled']}/"
+              f"{pd['chunk_steps_measured']}, peak blocks "
+              f"{pd['peak_blocks_modeled']}/{pd['peak_blocks_measured']}")
     sr, sn, sm = (by["paged_rep"], by["paged_spec_ngram"],
                   by["paged_spec_model"])
     print(f"speculative decode (rep trace): paged {sr['decode_steps']} "

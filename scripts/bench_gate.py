@@ -64,6 +64,16 @@ CHECKS = [
     # (the row computes the A/B in-process from min-of-N alternating
     # walls; the boolean is what gets gated, never the raw wall numbers)
     ("serve", "engine=paged_telemetry.telemetry_overhead_ok", "true", 0.0),
+    # capacity planner (docs/PLANNER.md): the calibrated workload model
+    # must keep predicting the smoke trace's TTFT p95 and TPOT inside
+    # serve_bench's ±30% drift bound (booleans computed in-process from
+    # the profiled run — never raw wall numbers), and the model-driven
+    # policy row must keep beating the heuristics it generalizes:
+    # slo_preempt's p95 TTFT proxy and best_fit's pool utilization
+    ("serve", "engine=paged_planner.planner_drift.ttft_p95_ok", "true", 0.0),
+    ("serve", "engine=paged_planner.planner_drift.tpot_ok", "true", 0.0),
+    ("serve", "engine=policy_model.p95_ttft_steps", "lower", 0.15),
+    ("serve", "engine=policy_model.avg_pool_util", "higher", 0.10),
     # resilience (fixed chaos schedule, docs/RELIABILITY.md): every
     # request terminal, fault-untouched output token-identical, recovery
     # within CHAOS_RECOVERY_BOUND of the fault-free wall — all computed

@@ -40,6 +40,7 @@ WEIGHTS = {
     "test_moe_distributed.py": 15,
     "test_hloanalysis.py": 7,
     "test_kv_pool.py": 7,
+    "test_planner.py": 35,
     "test_policy.py": 5,
     "test_precision.py": 6,
     "test_tiling_sharding.py": 6,

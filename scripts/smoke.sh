@@ -44,7 +44,17 @@ python -m repro.launch.serve --arch qwen2-0.5b --scaled-down \
     --profile --trace-out experiments/obs/trace_smoke.json \
     --metrics-out experiments/obs/metrics_smoke.json
 python scripts/trace_report.py experiments/obs/trace_smoke.json \
-    --metrics experiments/obs/metrics_smoke.json --validate
+    --metrics experiments/obs/metrics_smoke.json --validate \
+    --calibration-out experiments/obs/calibration_smoke.json
+
+# planner smoke: fit the workload model's calibration from the trace
+# just exported and report modeled-vs-measured TTFT/TPOT drift
+# (docs/PLANNER.md).  Report-only here — the speculative accept-length
+# estimate is noisy at 6 requests; the gated drift bound lives in
+# serve_bench's non-speculative paged_planner row (scripts/bench_gate.py).
+python scripts/plan_report.py drift experiments/obs/trace_smoke.json \
+    --arch qwen2-0.5b --scaled-down --slots 2 --max-len 96 --spec \
+    --calibration experiments/obs/calibration_smoke.json
 
 python - << 'EOF'
 import numpy as np, jax

@@ -34,6 +34,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.obs.events import validate_chrome_trace  # noqa: E402
 from repro.obs.profile import DISPATCH_NAMES  # noqa: E402
+from repro.planner.calibrate import (calibration_from_events,  # noqa: E402
+                                     dispatch_spans, drift_rows,
+                                     fit_ns_per_cycle)
 
 WATERFALL_WIDTH = 60
 
@@ -115,49 +118,15 @@ def render_waterfall(events: list[dict]) -> list[str]:
     return lines
 
 
-def _dispatch_spans(events: list[dict]) -> dict[str, dict]:
-    """Group profiled dispatch spans: name -> {serve: [...], cal: [...],
-    model args from the first span}."""
-    out: dict[str, dict] = {}
-    for ev in events:
-        if ev.get("cat") != "dispatch" or ev.get("ph") != "X":
-            continue
-        a = ev.get("args", {})
-        name = a.get("dispatch")
-        if not name:
-            continue
-        d = out.setdefault(name, {"serve": [], "calibration": [],
-                                  "model": a})
-        d.setdefault(a.get("kind", "serve"), []).append(ev.get("dur", 0.0))
-    return out
-
-
 def render_drift(events: list[dict], *, shapes: bool = True) -> list[str]:
-    """Modeled-vs-measured drift table (module docstring)."""
-    groups = _dispatch_spans(events)
-    if not groups:
+    """Modeled-vs-measured drift table (module docstring).  The row
+    grouping and the median ns/cycle fit live in
+    ``repro.planner.calibrate`` — the planner's calibration is the same
+    fit this table renders."""
+    rows = drift_rows(events)
+    if not rows:
         return ["(no profiled dispatch spans — rerun with --profile)"]
-
-    rows = []
-    for name, d in groups.items():
-        meas = d["serve"] or d["calibration"]
-        mean_us = sum(meas) / max(len(meas), 1)
-        cal = d["calibration"]
-        cal_us = sum(cal) / max(len(cal), 1) if cal else 0.0
-        cyc = float(d["model"].get("modeled_cycles", 0.0))
-        rows.append({"name": name, "n_serve": len(d["serve"]),
-                     "n_cal": len(cal), "mean_us": mean_us,
-                     "cal_us": cal_us, "cycles": cyc,
-                     "traffic": float(d["model"].get(
-                         "modeled_traffic", 0.0)),
-                     "flops": d["model"].get("flops"),
-                     "bytes": d["model"].get("bytes"),
-                     "shape_cycles": d["model"].get("shape_cycles", [])})
-    # one global fit: median implied ns/cycle across dispatches — the
-    # model is a relative-cost model, drift is deviation from the fit
-    implied = sorted(r["mean_us"] * 1e3 / r["cycles"]
-                     for r in rows if r["cycles"] > 0)
-    scale = implied[len(implied) // 2] if implied else 0.0
+    scale = fit_ns_per_cycle(rows)
 
     lines = [f"-- dispatch drift table (modeled cycles vs measured wall; "
              f"fit {scale:.2f} ns/cycle median) --"]
@@ -218,6 +187,10 @@ def main(argv=None) -> int:
                          "with no verify dispatch)")
     ap.add_argument("--no-shapes", action="store_true",
                     help="suppress per-shape sub-rows")
+    ap.add_argument("--calibration-out", default=None,
+                    help="write a planner calibration JSON (ns/cycle + "
+                         "per-dispatch overheads) fitted from this "
+                         "trace's profiled spans — see docs/PLANNER.md")
     args = ap.parse_args(argv)
 
     try:
@@ -249,13 +222,25 @@ def main(argv=None) -> int:
         print(line)
 
     if args.validate:
-        have = set(_dispatch_spans(events))
+        have = set(dispatch_spans(events))
         want = [s for s in args.expect_dispatches.split(",") if s]
         missing = [n for n in want if n not in have]
         if missing:
             failures.append(
                 f"drift table missing expected dispatches: {missing} "
                 f"(have {sorted(have)}) — was the run profiled?")
+
+    if args.calibration_out:
+        try:
+            cal = calibration_from_events(
+                events, meta={"source": args.trace})
+            cal.save(args.calibration_out)
+            print(f"[trace_report] calibration "
+                  f"({cal.ns_per_cycle:.2f} ns/cycle, "
+                  f"{len(cal.overhead_us)} dispatches) "
+                  f"-> {args.calibration_out}")
+        except (ValueError, OSError) as e:
+            failures.append(f"cannot export calibration: {e}")
 
     if args.metrics:
         print()

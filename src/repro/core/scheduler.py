@@ -241,6 +241,38 @@ class ScheduleCache:
             self._entries.setdefault(key, entry)
             return self._entries[key]
 
+    def modeled_cycles(self, M: int, N: int, K: int,
+                       precision: "Precision | str") -> CachedChoice:
+        """The applied (effective-fold) schedule's cost estimate for one
+        GEMM shape WITHOUT touching the hit/miss statistics.
+
+        This is the capacity planner's read path (``repro.planner``):
+        the planner sums schedule-resolved cycle estimates over whole
+        workload DAGs, and doing that through :meth:`resolve` would
+        inflate ``hits`` and perturb the 100%-cache-hit serve_bench
+        gates that ``reset`` + ``key_stats`` establish by construction.
+        The entry returned is IDENTICAL to what ``resolve`` returns for
+        the same key (same ``realizable_k_folds`` filtering, so the
+        fold is one the kernel can execute); an unseen shape is
+        explored and memoized exactly once, but neither the aggregate
+        counters nor the per-key stats move."""
+        key = self.key_of(M, N, K, precision)
+        with self._lock:
+            hit = self._entries.get(key)
+        if hit is not None:
+            return hit
+        prec = BY_NAME[key[3]]
+        op = PGEMM("plan", M=key[0], N=key[1], K=key[2], precision=prec)
+        choice = explore(op, self.config, self.realizable_k_folds(K))
+        sched = choice.best.schedule
+        entry = CachedChoice(dataflow=sched.dataflow, array=sched.array,
+                             k_fold=sched.k_fold, direction=sched.direction,
+                             cycles=choice.best.cycles,
+                             traffic_bytes=choice.best.traffic_bytes)
+        with self._lock:
+            self._entries.setdefault(key, entry)
+            return self._entries[key]
+
     def insert(self, M: int, N: int, K: int, precision: "Precision | str",
                choice: CachedChoice) -> None:
         """Force an entry (tests / offline-tuned overrides)."""

@@ -13,7 +13,9 @@ order; ``best_fit`` admits the queued request whose block reservation
 TTFT deadlines (``--ttft-slo``, seconds) with preempt-by-eviction — an
 at-risk request may evict the decoding victim with the most reclaimable
 blocks, which resumes later via prefix-cache skip-prefill with its
-produced tokens intact.
+produced tokens intact; ``model_fit`` / ``model_preempt`` admit and
+evict on the capacity planner's modeled step costs instead of raw
+block counts (``repro.planner``, docs/PLANNER.md).
 
 Speculative decoding (``--spec ngram`` / ``--spec model:<arch>``,
 ``--spec-k``): the paged engine verifies up to k drafted tokens per

@@ -1,0 +1,30 @@
+"""Analytical capacity planner: one calibrated cost model from kernel
+to fleet (docs/PLANNER.md).
+
+The repo carries three cost views of the same serving system — the
+paper-§5 :class:`~repro.core.scheduler.ScheduleCache` cycle/traffic
+estimates per GEMM, the exact jaxpr-walk flops/bytes of
+``launch.jaxpr_cost``, and serve_bench wall-clock measurements.  This
+package composes the first two into per-request workload DAGs and
+anchors them to the third with a fitted calibration, so one model
+answers "N replicas of config C under trace T -> TTFT p95 / TPOT /
+pool pressure" and the SAME model drives the ``model_fit`` /
+``model_preempt`` scheduling policies (``serving.policy``).
+
+  * :mod:`repro.planner.model` — workload DAG + deterministic engine
+    simulator (dispatch counts, TTFT/TPOT, pool-occupancy trajectory);
+  * :mod:`repro.planner.calibrate` — ns/cycle + per-dispatch overhead
+    fit from ``obs`` Chrome-trace exports, persisted as JSON;
+  * :mod:`repro.planner.capacity` — what-if queries (replica sweeps,
+    admission-rate frontiers, pool-headroom search) behind
+    ``scripts/plan_report.py``.
+"""
+
+from repro.planner.calibrate import (Calibration,  # noqa: F401
+                                     calibration_from_events,
+                                     dispatch_spans, fit_ns_per_cycle)
+from repro.planner.capacity import (admission_frontier,  # noqa: F401
+                                    pool_headroom, sweep_replicas)
+from repro.planner.model import (EngineGeometry, PlanResult,  # noqa: F401
+                                 RequestSpec, StepCosts, WorkloadModel,
+                                 requests_from_trace)

@@ -30,6 +30,18 @@ engine slots and KV-pool blocks — get their own policy space:
                    blocks so preempted work is never recomputed (greedy
                    output is token-identical to a never-preempted run,
                    gated in serve_bench).
+  ``model_fit``    admission ordered by MODELED step-cost from the
+                   capacity planner's calibrated workload model
+                   (``repro.planner``, docs/PLANNER.md): deadline
+                   urgency first, then best-fit packing with modeled
+                   service cost breaking ties, and best-effort
+                   admissions held while a deadline is starving.
+  ``model_preempt`` model_fit admission plus eviction priced by
+                   modeled loss — resume cost and the victim's own
+                   modeled SLO exposure — instead of block counts
+                   alone.  Gated in serve_bench to match or beat
+                   slo_preempt p95 TTFT at >= best_fit pool
+                   utilization, token-identical outputs.
 
 Policies are pure host-side decision functions over immutable views
 (:class:`PendingView`, :class:`SlotView`); the engine owns all state
@@ -52,6 +64,7 @@ from __future__ import annotations
 import dataclasses
 from collections.abc import Callable
 
+from repro.planner.model import StepCosts
 from repro.serving.kv_pool import ProbeReport
 
 
@@ -224,6 +237,176 @@ class SloPreemptPolicy(SchedulerPolicy):
         return victim.index
 
 
+class ModelFitPolicy(SchedulerPolicy):
+    """Admission on MODELED step-cost: the planner's closed loop.
+
+    Where ``best_fit`` packs on block counts and ``slo_preempt`` on
+    deadlines, this policy consults a :class:`repro.planner.StepCosts`
+    — per-dispatch costs from the same calibrated workload model the
+    capacity planner simulates with (docs/PLANNER.md) — so admission
+    order reflects what a request will actually COST the engine:
+
+      1. a head older than ``age_cap_s`` is forced through (the
+         best_fit starvation bound, kept verbatim);
+      2. the most urgent AT-RISK deadline request (slo_preempt's
+         definition) is admitted when its reservation fits, modeled
+         prefill cost breaking urgency ties (the cheaper first token
+         ships first) — never a smaller at-risk request over it, whose
+         admission would consume the blocks the urgent one waits for;
+      3. when the urgent deadline does NOT fit, every best-effort
+         admission is HELD — packing the pool tighter now only pushes
+         the deadline's preemption further out (this is where
+         slo_preempt's plain-FIFO fallback gives blocks away);
+      4. otherwise arrival order while the queue head fits (out-of-
+         order packing of a fittable head only trades the TTFT tail
+         for idle blocks); once the head does NOT fit, the hole is
+         filled best-fit — largest reservation that fits, modeled
+         full-service cost breaking block-count ties (between two
+         equally tight reservations the engine frees a slot sooner by
+         taking the cheaper one).
+
+    Units cancel — the policy only compares costs — so an uncalibrated
+    default :class:`StepCosts` is safe; serve_bench builds the real one
+    from :meth:`WorkloadModel.step_costs`.
+    """
+
+    name = "model_fit"
+    requires_pool = True
+
+    def __init__(self, costs: StepCosts | None = None,
+                 age_cap_s: float = 30.0, risk_frac: float = 0.5,
+                 max_bypass: int = 1):
+        if age_cap_s <= 0:
+            raise ValueError("age_cap_s must be positive")
+        if not 0 < risk_frac <= 1:
+            raise ValueError("risk_frac must be in (0, 1]")
+        if max_bypass < 0:
+            raise ValueError("max_bypass must be >= 0")
+        self.costs = costs or StepCosts()
+        self.age_cap_s = age_cap_s
+        self.risk_frac = risk_frac
+        self.max_bypass = max_bypass
+        # starvation ledger for the hole-filling rule: how many times
+        # the CURRENT unfittable head has been bypassed (step-denominated
+        # — wall-clock aging is meaningless at bench step scales)
+        self._head_rid: int | None = None
+        self._bypassed = 0
+
+    def _at_risk(self, pending):
+        return [p for p in pending
+                if p.ttft_slo is not None and not p.resumed
+                and p.waited_s >= self.risk_frac * p.ttft_slo]
+
+    def select_admission(self, pending, now):
+        if not pending:
+            return None
+        if pending[0].waited_s > self.age_cap_s:
+            return 0
+        at_risk = self._at_risk(pending)
+        if at_risk:
+            # ONE target, like slo_preempt: admitting a smaller at-risk
+            # request over the most urgent one would consume the very
+            # blocks the urgent one is waiting for
+            target = max(at_risk,
+                         key=lambda p: (p.priority, p.waited_s,
+                                        -self.costs.ttft_cost(p.prompt_len)))
+            if target.probe is None or target.probe.fits_now:
+                return target.index
+            return None                 # hold the pool for the deadline
+        fits = [p for p in pending
+                if p.probe is not None and p.probe.fits_now]
+        if any(p.index == 0 for p in fits):
+            self._head_rid, self._bypassed = None, 0
+            return 0        # arrival order while the head fits: out-of-
+            # order packing here trades the TTFT tail for idle blocks
+        if pending[0].rid != self._head_rid:
+            self._head_rid, self._bypassed = pending[0].rid, 0
+        if self._bypassed >= self.max_bypass or not fits:
+            # starving head: hold the pool so freed blocks reach it
+            # (and, under model_preempt, so the rescue eviction fires)
+            return None
+        self._bypassed += 1
+        best = max(fits,
+                   key=lambda p: (p.priority, p.probe.need_new,
+                                  -self.costs.service_cost(p.prompt_len,
+                                                           p.new_tokens),
+                                  -p.index))
+        return best.index
+
+
+class ModelPreemptPolicy(ModelFitPolicy):
+    """:class:`ModelFitPolicy` admission plus eviction on MODELED loss.
+
+    slo_preempt's victim rule is block-greedy: most reclaimable, least
+    progress.  The modeled rule prices what eviction actually costs the
+    fleet: one resume chunk when the victim returns (its produced KV
+    survives in the prefix cache) plus, for a victim that itself
+    carries a deadline, its modeled remaining decode — so between two
+    equally reclaimable victims, the best-effort hog loses the slot and
+    a deadline-carrying request keeps it, a distinction slo_preempt
+    cannot see.  Anti-thrash guards (``min_progress``,
+    ``max_preemptions``, never outrank the target's priority) are kept
+    verbatim.
+    """
+
+    name = "model_preempt"
+    preempts = True
+
+    def __init__(self, costs: StepCosts | None = None,
+                 age_cap_s: float = 30.0, risk_frac: float = 0.5,
+                 max_bypass: int = 1, max_preemptions: int = 2,
+                 min_progress: int = 1):
+        super().__init__(costs=costs, age_cap_s=age_cap_s,
+                         risk_frac=risk_frac, max_bypass=max_bypass)
+        self.max_preemptions = max_preemptions
+        self.min_progress = min_progress
+
+    def _evict_loss(self, s: SlotView) -> float:
+        """Modeled cost of evicting slot ``s``: the resume chunk it
+        will need, plus its remaining modeled decode when the victim
+        itself has a deadline to lose."""
+        loss = self.costs.chunk_cost
+        if s.has_slo:
+            loss += s.remaining * self.costs.decode_cost
+        return loss
+
+    def _candidates(self, slots, target, *, spare_slo: bool):
+        return [s for s in slots
+                if s is not None and s.phase == "decode"
+                and s.produced >= self.min_progress
+                and s.preemptions < self.max_preemptions
+                and s.priority <= target.priority
+                and not (spare_slo and s.has_slo)]
+
+    def _best_victim(self, cands):
+        return max(cands, key=lambda s: (s.reclaimable_blocks,
+                                         -self._evict_loss(s),
+                                         -s.produced, -s.index))
+
+    def select_victim(self, pending, slots, now):
+        at_risk = self._at_risk(pending)
+        if at_risk:
+            target = max(at_risk, key=lambda p: (p.priority, p.waited_s))
+            free = any(s is None for s in slots)
+            if free and target.probe is not None and target.probe.fits_now:
+                return None             # plain admission serves it this step
+            cands = self._candidates(slots, target, spare_slo=False)
+            return self._best_victim(cands).index if cands else None
+        # best-effort head rescue: once the hole-filling bound has been
+        # spent on an unfittable head, evicting a no-deadline decoder is
+        # modeled as net-positive — the victim's loss is one resume
+        # chunk (its KV survives in the prefix cache) against unbounded
+        # head starvation.  slo_preempt cannot make this trade at all:
+        # it only ever preempts on behalf of an SLO deadline.
+        if not pending or self._bypassed < self.max_bypass:
+            return None
+        head = pending[0]
+        if head.probe is None or head.probe.fits_now:
+            return None
+        cands = self._candidates(slots, head, spare_slo=True)
+        return self._best_victim(cands).index if cands else None
+
+
 _REGISTRY: dict[str, Callable[..., SchedulerPolicy]] = {}
 
 
@@ -236,9 +419,12 @@ def register_policy(name: str,
 register_policy("fifo", FifoPolicy)
 register_policy("best_fit", BestFitPolicy)
 register_policy("slo_preempt", SloPreemptPolicy)
+register_policy("model_fit", ModelFitPolicy)
+register_policy("model_preempt", ModelPreemptPolicy)
 
 #: CLI surface (launch/serve.py) — keep in sync with the registry
-POLICY_NAMES = ("fifo", "best_fit", "slo_preempt")
+POLICY_NAMES = ("fifo", "best_fit", "slo_preempt", "model_fit",
+                "model_preempt")
 
 
 def make_policy(name: str, **kwargs) -> SchedulerPolicy:

@@ -1,0 +1,438 @@
+"""Capacity planner (docs/PLANNER.md): calibration fit + round-trip,
+the workload-model simulator replayed against a live engine, what-if
+capacity queries, jaxpr flop/byte pins at engine geometry, and the
+model-driven scheduling policies.  Engine-backed tests share one
+module-scoped run; everything else is pure host-side arithmetic."""
+
+import numpy as np
+import pytest
+
+from repro import configs as CONFIGS
+from repro.core.scheduler import ScheduleCache
+from repro.planner import (Calibration, EngineGeometry, RequestSpec,
+                           StepCosts, WorkloadModel, admission_frontier,
+                           calibration_from_events, pool_headroom,
+                           requests_from_trace, sweep_replicas)
+from repro.planner.calibrate import (CALIBRATION_VERSION, drift_rows,
+                                     fit_ns_per_cycle)
+from repro.planner.model import measured_latencies
+from repro.serving.kv_pool import ProbeReport
+from repro.serving.policy import (ModelFitPolicy, ModelPreemptPolicy,
+                                  PendingView, SlotView, make_policy)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return CONFIGS.get("qwen2_0_5b").scaled_down()
+
+
+@pytest.fixture(scope="module")
+def engine_run(cfg):
+    import jax
+
+    from repro.models import network as N
+    from repro.serving import ContinuousEngine, Request
+
+    params = N.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(3, cfg.vocab,
+                                        20 + 3 * i).astype(np.int32),
+                    max_new_tokens=4, eos=-1) for i in range(3)]
+    eng = ContinuousEngine(cfg, params, slots=2, max_len=96)
+    res = eng.run(reqs)
+    assert sorted(r.rid for r in res) == [0, 1, 2]
+    return eng, reqs
+
+
+# ---------------------------------------------------------------------------
+# calibration: the anchored wall-clock model and its JSON artifact
+# ---------------------------------------------------------------------------
+
+def test_dispatch_us_anchored_and_fallback():
+    cal = Calibration(ns_per_cycle=10.0,
+                      overhead_us={"other": 5.0},
+                      mean_us={"decode_step": 50.0},
+                      cycles={"decode_step": 1000.0})
+    # anchored: exact at the calibrated cycle count, proportional past it
+    assert cal.dispatch_us("decode_step", 1000.0) == pytest.approx(50.0)
+    assert cal.dispatch_us("decode_step", 2000.0) == pytest.approx(100.0)
+    # unseen dispatch: per-name overhead + global ns/cycle scaling
+    assert cal.dispatch_us("other", 300.0) == pytest.approx(5.0 + 3.0)
+
+
+def test_calibration_round_trip(tmp_path):
+    cal = Calibration(ns_per_cycle=41.5, overhead_us={"a": 1.25},
+                      mean_us={"a": 9.0}, cycles={"a": 200.0},
+                      host_us_per_dispatch=3.5, startup_us=1234.5,
+                      meta={"source": "unit"})
+    path = tmp_path / "cal.json"
+    cal.save(str(path))
+    back = Calibration.load(str(path))
+    assert back == cal
+
+
+def test_calibration_version_mismatch_raises():
+    doc = Calibration(ns_per_cycle=1.0).to_json()
+    doc["version"] = CALIBRATION_VERSION + 1
+    with pytest.raises(ValueError, match="calibration version"):
+        Calibration.from_json(doc)
+
+
+def test_calibration_from_events_requires_spans():
+    with pytest.raises(ValueError):
+        calibration_from_events([])
+
+
+def test_fit_ns_per_cycle_is_median():
+    rows = [{"mean_us": 1.0, "cycles": 1000.0},    # 1 ns/cycle
+            {"mean_us": 3.0, "cycles": 1000.0},    # 3 ns/cycle
+            {"mean_us": 90.0, "cycles": 1000.0},   # 90 ns/cycle (outlier)
+            {"mean_us": 5.0, "cycles": 0.0}]       # unfittable: skipped
+    assert fit_ns_per_cycle(rows) == pytest.approx(3.0)
+    assert fit_ns_per_cycle([]) == 0.0
+
+
+def _span(name, ts, dur, cycles, kind="serve"):
+    return {"cat": "dispatch", "ph": "X", "name": name, "ts": ts,
+            "dur": dur, "args": {"dispatch": name, "kind": kind,
+                                 "modeled_cycles": cycles}}
+
+
+def _life(name, ts, rid, **extra):
+    return {"cat": "lifecycle", "ph": "i", "name": name, "ts": ts,
+            "args": {"rid": rid, **extra}}
+
+
+def test_calibration_from_synthetic_trace():
+    events = [_life("submit", 0.0, 0),
+              _span("decode_step", 1000.0, 50.0, 1000.0),
+              _span("decode_step", 1100.0, 50.0, 1000.0)]
+    cal = calibration_from_events(events, meta={"source": "unit"})
+    # implied ns/cycle: 50 us over 1000 cycles = 50 ns/cycle
+    assert cal.ns_per_cycle == pytest.approx(50.0)
+    assert cal.cycles["decode_step"] == pytest.approx(1000.0)
+    assert cal.mean_us["decode_step"] == pytest.approx(50.0)
+    # warm-up: first serve span ts minus first submit ts
+    assert cal.startup_us == pytest.approx(1000.0)
+    assert cal.meta["source"] == "unit"
+    assert drift_rows(events)[0]["n_serve"] == 2
+
+
+# ---------------------------------------------------------------------------
+# trace parsing: the measured side of the drift report
+# ---------------------------------------------------------------------------
+
+def test_requests_from_trace():
+    events = [_life("submit", 100.0, 0),
+              _life("submit", 150.0, 1),
+              _life("submit", 200.0, 7),            # never admitted
+              _life("admit", 110.0, 0, prompt_len=24),
+              _life("admit", 160.0, 1, prompt_len=32),
+              _life("finish", 900.0, 0, tokens=4),
+              _life("finish", 950.0, 1, tokens=3)]
+    specs = requests_from_trace(events)
+    assert [(s.rid, s.prompt_len, s.max_new, s.arrival_us)
+            for s in specs] == [(0, 24, 4, 0.0), (1, 32, 3, 50.0)]
+
+
+def test_measured_latencies():
+    events = [_life("submit", 100.0, 0),
+              _life("first_token", 400.0, 0),
+              _life("finish", 1000.0, 0, tokens=4)]
+    m = measured_latencies(events)[0]
+    assert m["ttft_us"] == pytest.approx(300.0)
+    assert m["latency_us"] == pytest.approx(900.0)
+    assert m["tpot_us"] == pytest.approx(600.0 / 3)   # 3 decoded tokens
+
+
+# ---------------------------------------------------------------------------
+# step-cost arithmetic and geometry
+# ---------------------------------------------------------------------------
+
+def test_step_costs_arithmetic():
+    c = StepCosts(chunk_cost=3.0, decode_cost=1.0, prefill_chunk=32)
+    assert c.prefill_dispatches(1) == 1
+    assert c.prefill_dispatches(32) == 1
+    assert c.prefill_dispatches(33) == 2
+    assert c.ttft_cost(64) == pytest.approx(6.0)
+    # service = prefill + remaining decode (first token rides the chunk)
+    assert c.service_cost(64, 5) == pytest.approx(6.0 + 4.0)
+    assert c.service_cost(10, 1) == pytest.approx(3.0)
+
+
+def test_geometry_defaults_match_engine_pool_formula():
+    g = EngineGeometry(slots=2, max_len=96, block_size=16)
+    assert g.blocks_per_slot == 6
+    per = g.blocks_per_slot
+    assert g.pool_blocks == max(per + 1, 1 + (3 * 2 * per + 3) // 4)
+    assert EngineGeometry(slots=2, max_len=96, kv_blocks=20).pool_blocks == 20
+
+
+# ---------------------------------------------------------------------------
+# ScheduleCache.modeled_cycles: the stat-free planner read path
+# ---------------------------------------------------------------------------
+
+def test_modeled_cycles_never_moves_hit_miss_stats():
+    sc = ScheduleCache()
+    hot = sc.resolve(64, 64, 64, "FP32")
+    before = sc.stats()
+    assert (before["hits"], before["misses"]) == (0, 1)
+    # cached shape: identical entry, no stat movement
+    again = sc.modeled_cycles(64, 64, 64, "FP32")
+    assert again == hot
+    # UNSEEN shape: explored + memoized, still no stat movement
+    cold = sc.modeled_cycles(32, 128, 64, "FP32")
+    assert cold.cycles > 0 and cold.traffic_bytes > 0
+    after = sc.stats()
+    assert (after["hits"], after["misses"]) == (0, 1)
+    # and resolve() of that shape now HITS (same entry table)
+    assert sc.resolve(32, 128, 64, "FP32") == cold
+    assert sc.stats()["hits"] == 1
+
+
+def test_modeled_cycles_int8_cheaper_than_fp32():
+    sc = ScheduleCache()
+    fp = sc.modeled_cycles(64, 64, 64, "FP32")
+    q = sc.modeled_cycles(64, 64, 64, "INT8")
+    assert q.cycles < fp.cycles           # fewer limbs, fewer cycles
+    assert q.traffic_bytes < fp.traffic_bytes
+
+
+# ---------------------------------------------------------------------------
+# jaxpr cost pins at engine geometry (launch/jaxpr_cost.py)
+# ---------------------------------------------------------------------------
+
+def test_jaxpr_cost_pins_at_engine_geometry(cfg):
+    from repro.analysis.jaxpr_lint import hot_dispatches
+    from repro.launch.jaxpr_cost import step_cost
+    from repro.obs.profile import dispatch_gemm_shapes
+
+    slots, spec_k = 2, 4
+    hd = {name: (fn, args) for name, fn, args in hot_dispatches(
+        cfg, slots=slots, max_len=96, block_size=16, prefill_chunk=32,
+        spec_k=spec_k)}
+    # head_apply is one dot: flops are exactly 2*M*N*K by hand
+    head = step_cost(hd["head_apply"][0], *hd["head_apply"][1])
+    assert head["flops"] == 2 * slots * cfg.vocab * cfg.d_model
+    # ... and the weight matrix alone lower-bounds the byte traffic
+    assert head["bytes"] >= 4 * cfg.vocab * cfg.d_model
+    # verify_paged_chunk: its projection GEMMs (hand-counted from the
+    # per-dispatch shape attribution) lower-bound the jaxpr flops, and
+    # attention + gathers cannot more than double them at this geometry
+    shapes = dispatch_gemm_shapes(cfg, slots=slots, prefill_chunk=32,
+                                  spec_k=spec_k, block_size=16)
+    gemm = sum(2.0 * M * N * K * c
+               for M, N, K, c in shapes["verify_paged_chunk"])
+    ver = step_cost(hd["verify_paged_chunk"][0],
+                    *hd["verify_paged_chunk"][1])
+    assert gemm <= ver["flops"] <= 2.0 * gemm
+    # M-scaling: verify rows = slots*(spec_k+1) vs decode rows = slots,
+    # so verify must cost strictly more flops than a decode step
+    dec = step_cost(hd["decode_step"][0], *hd["decode_step"][1])
+    assert dec["flops"] < ver["flops"]
+
+
+def test_workload_model_jaxpr_costs_and_quant_shapes(cfg):
+    geom = EngineGeometry(slots=2, max_len=96)
+    model = WorkloadModel(cfg, geom, jaxpr_costs=True)
+    assert model.dispatch_flops["head_apply"] == (
+        2 * geom.slots * cfg.vocab * cfg.d_model)
+    assert {"decode_step", "prefill_paged_chunk"} <= set(
+        model.dispatch_flops)
+    # a quantized plan prices the same dispatch DAG cheaper: INT8
+    # schedules resolve to fewer modeled cycles at every GEMM shape
+    qgeom = EngineGeometry(slots=2, max_len=96, precision="INT8")
+    qmodel = WorkloadModel(cfg, qgeom, schedule=model.schedule)
+    for name in ("decode_step", "prefill_paged_chunk", "head_apply"):
+        assert qmodel.dispatch_cycles[name] < model.dispatch_cycles[name]
+
+
+# ---------------------------------------------------------------------------
+# simulator vs the real engine
+# ---------------------------------------------------------------------------
+
+def test_simulator_matches_engine_dispatch_counts(cfg, engine_run):
+    eng, reqs = engine_run
+    geom = EngineGeometry.from_engine(eng)
+    assert (geom.slots, geom.max_len, geom.spec) == (2, 96, False)
+    assert geom.pool_blocks == eng.pool.num_blocks
+    before = eng.schedule.stats()
+    model = WorkloadModel(cfg, geom, schedule=eng.schedule)
+    after = eng.schedule.stats()
+    assert (before["hits"], before["misses"]) == (after["hits"],
+                                                  after["misses"])
+    plan = model.simulate([RequestSpec(rid=r.rid, prompt_len=len(r.prompt),
+                                       max_new=r.max_new_tokens)
+                           for r in reqs])
+    # the replay reproduces the engine's dispatch schedule exactly:
+    # same decode steps, same chunk batches, a first token per request
+    assert plan.steps == eng.steps
+    assert plan.chunk_steps == eng.chunk_steps
+    assert len(plan.ttft_steps()) == len(reqs)
+    assert 0 < plan.peak_blocks <= geom.pool_blocks - 1
+    assert plan.total_us > 0 and 0 < plan.avg_pool_util <= 1.0
+    per = plan.per_request
+    assert all(per[r.rid]["tokens"] == r.max_new_tokens for r in reqs)
+
+
+def test_simulator_startup_shifts_ttft(cfg):
+    geom = EngineGeometry(slots=2, max_len=96)
+    model = WorkloadModel(cfg, geom)
+    reqs = [RequestSpec(rid=0, prompt_len=20, max_new=4)]
+    cold = model.simulate(reqs,
+                          calibration=Calibration(ns_per_cycle=1.0))
+    warm = model.simulate(reqs,
+                          calibration=Calibration(ns_per_cycle=1.0,
+                                                  startup_us=5000.0))
+    # same unit system, only the fitted warm-up differs: every TTFT
+    # shifts by exactly the startup term
+    assert warm.p95_ttft_us() == pytest.approx(cold.p95_ttft_us() + 5000.0)
+
+
+# ---------------------------------------------------------------------------
+# what-if capacity queries
+# ---------------------------------------------------------------------------
+
+def _query_fixture(cfg):
+    geom = EngineGeometry(slots=2, max_len=96)
+    model = WorkloadModel(cfg, geom)
+    reqs = [RequestSpec(rid=i, prompt_len=16 + 4 * (i % 3), max_new=4,
+                        arrival_us=200.0 * i) for i in range(8)]
+    return model, reqs
+
+
+def test_sweep_replicas_more_replicas_no_worse(cfg):
+    model, reqs = _query_fixture(cfg)
+    rows = sweep_replicas(model, reqs, [1, 2, 4], calibration=None)
+    assert [r["replicas"] for r in rows] == [1, 2, 4]
+    # fewer requests per replica: the worst replica's tail cannot grow
+    assert rows[1]["p95_ttft_us"] <= rows[0]["p95_ttft_us"]
+    assert rows[2]["p95_ttft_us"] <= rows[1]["p95_ttft_us"]
+    assert all(r["peak_blocks"] <= model.geom.pool_blocks for r in rows)
+
+
+def test_admission_frontier_rates_order_the_tail(cfg):
+    model, reqs = _query_fixture(cfg)
+    rows = admission_frontier(model, reqs, [10.0, 10000.0], n_requests=8,
+                              slo_us=1e12)
+    assert [r["rate_per_s"] for r in rows] == [10.0, 10000.0]
+    # open-loop arrivals: a saturating rate queues, a slow one doesn't
+    assert rows[0]["p95_ttft_us"] <= rows[1]["p95_ttft_us"]
+    assert all(r["slo_met"] is True for r in rows)   # absurdly loose SLO
+
+
+def test_pool_headroom_bounds(cfg):
+    model, reqs = _query_fixture(cfg)
+    rep = pool_headroom(model, reqs, tolerance=0.5)
+    assert rep["min_blocks"] <= rep["pool_blocks"]
+    assert rep["headroom_blocks"] == rep["pool_blocks"] - rep["min_blocks"]
+    assert rep["peak_blocks"] <= rep["pool_blocks"]
+    assert rep["baseline_p95_ttft_us"] > 0
+
+
+# ---------------------------------------------------------------------------
+# model-driven scheduling policies (pure host-side, test_policy.py idiom)
+# ---------------------------------------------------------------------------
+
+def _probe(need, free, evictable=0, shared=0):
+    return ProbeReport(total=need + shared, shared=shared, need_new=need,
+                       free=free, evictable=evictable)
+
+
+def _pending(index, *, rid=None, plen=8, new=4, waited=0.0, slo=None,
+             prio=0, resumed=False, probe=None):
+    return PendingView(index=index, rid=rid if rid is not None else index,
+                       prompt_len=plen, new_tokens=new, priority=prio,
+                       ttft_slo=slo, waited_s=waited, resumed=resumed,
+                       preemptions=0, probe=probe)
+
+
+def _slot(index, *, phase="decode", produced=4, reclaimable=2, prio=0,
+          preemptions=0, has_slo=False, remaining=8):
+    return SlotView(index=index, rid=100 + index, phase=phase,
+                    priority=prio, produced=produced, remaining=remaining,
+                    reclaimable_blocks=reclaimable, preemptions=preemptions,
+                    has_slo=has_slo)
+
+
+def test_model_policy_registry_and_validation():
+    assert make_policy("model_fit").name == "model_fit"
+    pol = make_policy("model_preempt", max_bypass=3)
+    assert isinstance(pol, ModelPreemptPolicy) and pol.max_bypass == 3
+    assert pol.preempts and pol.requires_pool
+    with pytest.raises(ValueError):
+        ModelFitPolicy(max_bypass=-1)
+    with pytest.raises(ValueError):
+        ModelFitPolicy(risk_frac=0.0)
+
+
+def test_model_fit_single_at_risk_target():
+    pol = ModelFitPolicy(risk_frac=0.5)
+    # two at-risk requests, same urgency: the cheaper modeled first
+    # token (shorter prompt) ships first
+    views = [_pending(0, slo=1.0, waited=0.6, plen=64,
+                      probe=_probe(need=2, free=5)),
+             _pending(1, slo=1.0, waited=0.6, plen=8,
+                      probe=_probe(need=1, free=5))]
+    assert pol.select_admission(views, 0.0) == 1
+    # the MOST urgent target does not fit: hold the pool — admitting a
+    # smaller at-risk request would consume the blocks it waits for
+    views = [_pending(0, slo=1.0, waited=0.9,
+                      probe=_probe(need=9, free=5)),
+             _pending(1, slo=1.0, waited=0.6,
+                      probe=_probe(need=1, free=5))]
+    assert pol.select_admission(views, 0.0) is None
+
+
+def test_model_fit_bypass_ledger_bounds_hole_filling():
+    pol = ModelFitPolicy(max_bypass=1)
+    views = [_pending(0, probe=_probe(need=9, free=5)),   # unfittable head
+             _pending(1, probe=_probe(need=2, free=5))]
+    assert pol.select_admission(views, 0.0) == 1          # one bypass
+    assert pol.select_admission(views, 0.0) is None       # then hold
+    # a fittable head admits in arrival order and resets the ledger
+    views = [_pending(0, rid=9, probe=_probe(need=2, free=5))]
+    assert pol.select_admission(views, 0.0) == 0
+    assert pol._bypassed == 0 and pol._head_rid is None
+
+
+def test_model_fit_hole_fill_prefers_cheaper_service():
+    pol = ModelFitPolicy()
+    # equal reservations: the modeled-cheaper request (fewer decode
+    # steps) frees its slot sooner and wins the hole
+    views = [_pending(0, probe=_probe(need=9, free=5)),
+             _pending(1, new=12, probe=_probe(need=3, free=5)),
+             _pending(2, new=2, probe=_probe(need=3, free=5))]
+    assert pol.select_admission(views, 0.0) == 2
+
+
+def test_model_preempt_victim_prices_eviction_loss():
+    pol = ModelPreemptPolicy(risk_frac=0.5)
+    pending = [_pending(0, slo=0.1, waited=1.0,
+                        probe=_probe(need=3, free=0))]
+    # equally reclaimable victims: the deadline-carrying decoder keeps
+    # its slot (its modeled loss includes the remaining decode),
+    # the best-effort hog is evicted — slo_preempt cannot see this
+    slots = [_slot(0, reclaimable=5, has_slo=True),
+             _slot(1, reclaimable=5, has_slo=False)]
+    assert pol.select_victim(pending, slots, 0.0) == 1
+    # anti-thrash guards are kept verbatim
+    guarded = [_slot(0, phase="prefill"), _slot(1, produced=0),
+               _slot(2, preemptions=2), _slot(3, prio=5)]
+    assert pol.select_victim(pending, guarded, 0.0) is None
+
+
+def test_model_preempt_best_effort_head_rescue_spares_slo():
+    pol = ModelPreemptPolicy(max_bypass=0)
+    pending = [_pending(0, probe=_probe(need=9, free=0))]  # no deadline
+    pol.select_admission(pending, 0.0)          # ledger: head is starving
+    # rescue eviction fires for the best-effort head, but never against
+    # a deadline-carrying victim
+    slots = [_slot(0, reclaimable=5, has_slo=True),
+             _slot(1, reclaimable=3, has_slo=False)]
+    assert pol.select_victim(pending, slots, 0.0) == 1
+    assert pol.select_victim(pending, [slots[0]], 0.0) is None
+    # a fittable head never triggers a rescue
+    ok = [_pending(0, probe=_probe(need=2, free=5))]
+    assert pol.select_victim(ok, slots, 0.0) is None
